@@ -1,0 +1,46 @@
+"""Shared benchmark helpers: table formatting + artifact IO."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any, Dict, Iterable, List, Sequence
+
+ARTIFACT_ROOT = os.path.join(os.path.dirname(__file__), "artifacts")
+DRYRUN_ROOT = os.path.join(ARTIFACT_ROOT, "dryrun")
+
+
+def fmt_table(headers: Sequence[str], rows: Iterable[Sequence[Any]],
+              title: str = "") -> str:
+    rows = [[str(c) for c in r] for r in rows]
+    widths = [max(len(h), *(len(r[i]) for r in rows)) if rows else len(h)
+              for i, h in enumerate(headers)]
+    out = []
+    if title:
+        out.append(f"== {title} ==")
+    out.append(" | ".join(h.ljust(w) for h, w in zip(headers, widths)))
+    out.append("-+-".join("-" * w for w in widths))
+    for r in rows:
+        out.append(" | ".join(c.ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(out)
+
+
+def pct(x: float) -> str:
+    return f"{100.0 * x:+.1f}%"
+
+
+def load_dryrun_artifacts(mesh: str = "16x16") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_ROOT, mesh, "*", "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def save_artifact(name: str, obj: Any) -> str:
+    os.makedirs(ARTIFACT_ROOT, exist_ok=True)
+    path = os.path.join(ARTIFACT_ROOT, name)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)
+    return path

@@ -1,0 +1,77 @@
+"""§Perf hillclimb driver: run one (arch x shape) cell with experimental
+overrides and record the roofline delta vs the baseline artifact.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch qwen2.5-3b \
+        --shape train_4k --tag dp_layout --set layout=dp --set n_microbatches=1
+
+Results land in benchmarks/artifacts/perf/<arch>__<shape>__<tag>.json with
+the baseline terms embedded for the before/after table in EXPERIMENTS.md.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="override key=value (value parsed as json if possible)")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch import dryrun
+
+    ov = dict(dryrun.TRAIN_OVERRIDES.get(args.arch, {}))
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        ov[k] = v
+    dryrun.TRAIN_OVERRIDES[args.arch] = ov
+    rec = dryrun.dryrun_cell(args.arch, args.shape, multi_pod=args.multi_pod)
+
+    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+    base_path = dryrun.artifact_path(mesh_tag, args.arch, args.shape)
+    baseline = None
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            baseline = json.load(f)
+
+    out = {"tag": args.tag, "overrides": {k: v for k, v in ov.items()},
+           "result": rec,
+           "baseline_roofline": (baseline or {}).get("roofline"),
+           "baseline_memory": (baseline or {}).get("memory")}
+    d = os.path.join(os.path.dirname(__file__), "artifacts", "perf")
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(
+        d, f"{args.arch}__{args.shape}__{args.tag}.json".replace("/", "_"))
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+
+    if baseline and rec.get("status") == "ok":
+        b, n = baseline["roofline"], rec["roofline"]
+        print("\n--- before/after ---")
+        for k in ("compute_s", "memory_s", "collective_s",
+                  "roofline_fraction"):
+            print(f"{k:20s} {b[k]:10.4f} -> {n[k]:10.4f} "
+                  f"({(n[k]/b[k]-1)*100 if b[k] else 0:+.1f}%)")
+        print(f"bound: {b['bound']} -> {n['bound']}")
+        bt = (baseline["memory"]["temp_size_in_bytes"] or 0) / 2**30
+        nt = (rec["memory"]["temp_size_in_bytes"] or 0) / 2**30
+        print(f"temp GiB: {bt:.2f} -> {nt:.2f}")
+    print(f"saved {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,71 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-(arch x shape)
+three-term roofline table (single-pod, per the assignment)."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import fmt_table, load_dryrun_artifacts, save_artifact
+
+
+def _fmt_b(x: float) -> str:
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def rows_for(mesh: str) -> List[Dict]:
+    out = []
+    for rec in load_dryrun_artifacts(mesh):
+        if rec.get("status") != "ok":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "status": rec.get("status", "?"),
+                        "reason": rec.get("reason", rec.get("error", ""))})
+            continue
+        r = rec["roofline"]
+        out.append({
+            "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "bound": r["bound"],
+            "useful": r["useful_flops_ratio"],
+            "roofline_fraction": r["roofline_fraction"],
+            "temp_gib": (rec["memory"]["temp_size_in_bytes"] or 0) / 2**30,
+            "args_gib": (rec["memory"]["argument_size_in_bytes"] or 0) / 2**30,
+        })
+    return out
+
+
+def run(mesh: str = "16x16") -> str:
+    data = rows_for(mesh)
+    rows = []
+    for d in sorted(data, key=lambda d: (d["arch"], d["shape"])):
+        if d["status"] != "ok":
+            rows.append([d["arch"], d["shape"], d["status"],
+                         "-", "-", "-", "-", "-", "-", d["reason"][:44]])
+            continue
+        rows.append([
+            d["arch"], d["shape"], "ok",
+            f"{d['compute_s']*1e3:.1f}", f"{d['memory_s']*1e3:.1f}",
+            f"{d['collective_s']*1e3:.1f}", d["bound"],
+            f"{d['useful']:.2f}", f"{d['roofline_fraction']:.3f}",
+            f"temp {d['temp_gib']:.1f} GiB",
+        ])
+    save_artifact(f"roofline_{mesh}.json", data)
+    return fmt_table(
+        ["arch", "shape", "status", "compute ms", "memory ms",
+         "collective ms", "bound", "useful", "roofline", "mem/device"],
+        rows, title=f"Roofline — {mesh} mesh (per step, per-chip terms)")
+
+
+def main() -> None:
+    print(run("16x16"))
+    print()
+    try:
+        print(run("2x16x16"))
+    except Exception:
+        print("(multi-pod artifacts not yet complete)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Benchmark entry point: one section per paper table/figure + the roofline
+aggregation. ``PYTHONPATH=src python -m benchmarks.run``"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> int:
+    from benchmarks import (fig6_bandwidth, fig789_energy, kernel_bench,
+                            roofline, table1_tile, table2_group)
+    sections = [
+        ("Table I (tile partitioning)", table1_tile.run),
+        ("Table II (group PPA)", table2_group.run),
+        ("Fig. 6 (bandwidth sweep)", fig6_bandwidth.run),
+        ("Figs. 7-9 (perf/efficiency/EDP)", fig789_energy.run),
+        ("Kernel bench", kernel_bench.run),
+        ("Roofline (single-pod)", lambda: roofline.run("16x16")),
+        ("Roofline (multi-pod)", lambda: roofline.run("2x16x16")),
+    ]
+    failures = 0
+    for name, fn in sections:
+        t0 = time.time()
+        print(f"\n{'=' * 72}\n{name}\n{'=' * 72}")
+        try:
+            print(fn())
+        except Exception as e:  # keep reporting the rest
+            failures += 1
+            print(f"SECTION FAILED: {type(e).__name__}: {e}")
+        print(f"[{time.time() - t0:.1f}s]")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

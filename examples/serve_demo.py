@@ -1,0 +1,56 @@
+"""Serving demo: prefill + batched greedy decode on three architecture
+families (dense GQA, MLA+MoE, pure SSM) through the same Engine API —
+including the O(1)-state long-context property of the SSM family.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.models import build_model
+from repro.serve.engine import Engine, EngineConfig
+
+
+def demo(arch: str, prompt_len: int = 16, gen: int = 8) -> None:
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, params,
+                    EngineConfig(max_len=prompt_len + gen + cfg.frontend_len))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, prompt_len),
+                                          2, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["src_embeds"] = (jax.random.normal(
+            jax.random.PRNGKey(2), (2, prompt_len, cfg.d_model)) * 0.02
+        ).astype(jnp.bfloat16)
+    t0 = time.time()
+    out, state = engine.generate(batch, n_steps=gen)
+    dt = time.time() - t0
+
+    # cache footprint: the pooled-memory story per family
+    n_cache = sum(int(x.size) * x.dtype.itemsize
+                  for x in jax.tree.leaves(state)) / 2**20
+    print(f"{arch:24s} [{cfg.family:6s}] generated {out.shape[1]} tok/row "
+          f"in {dt*1e3:6.0f} ms | decode state {n_cache:7.2f} MiB | "
+          f"tokens[0]={out[0].tolist()}")
+
+
+def main() -> int:
+    print("family-spanning serving demo (reduced configs, CPU):")
+    for arch in ("yi-6b", "deepseek-v2-236b", "falcon-mamba-7b",
+                 "seamless-m4t-medium"):
+        demo(arch)
+    print("\nnote the SSM row: its decode state is O(1) in sequence length —"
+          "\nwhy falcon-mamba/jamba run the long_500k cell (DESIGN.md §4).")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

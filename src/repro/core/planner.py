@@ -1,0 +1,115 @@
+"""Mem3DPlanner — the paper's co-exploration loop as a framework service.
+
+MemPool-3D's thesis is that scratchpad capacity, tiling and the interconnect
+hierarchy must be chosen *together*. On TPU this becomes: given a workload
+(an architecture x input shape), a mesh, and a hardware profile, jointly pick
+
+  * Pallas block plans for every hot op (matmul / attention / scan chunk) so
+    each working set fills VMEM (:mod:`repro.core.tiling`),
+  * where each traffic class lives in the interconnect hierarchy (HBM-local /
+    intra-pod ICI / inter-pod DCI — MemPool's tile / group / cluster levels),
+
+and report the resulting three-term roofline. The dry-run feeds *measured*
+HLO FLOPs/bytes/collective-bytes back into :class:`RooflineReport`, closing
+the same loop the paper closes with RTL cycle counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core import tiling
+from repro.core.hw_profiles import TpuProfile, TPU_V5E
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineReport:
+    """Three-term roofline for one (arch x shape x mesh) cell."""
+
+    name: str
+    n_chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float        # summed operand bytes of ICI collectives
+    model_flops: float             # 6*N*D (dense) or 6*N_active*D (MoE)
+    profile: TpuProfile = TPU_V5E
+    pod_collective_bytes: float = 0.0   # traffic crossing the pod boundary
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.n_chips * self.profile.peak_flops_bf16)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.n_chips * self.profile.hbm_bw)
+
+    @property
+    def collective_s(self) -> float:
+        ici = self.collective_bytes / (self.n_chips * self.profile.ici_link_bw)
+        dci = self.pod_collective_bytes / (self.n_chips * self.profile.dci_bw)
+        return ici + dci
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound: the roofline step time is max(terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat / redundancy waste."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of peak the *useful* model FLOPs achieve at bound speed."""
+        peak = self.n_chips * self.profile.peak_flops_bf16
+        return (self.model_flops / self.step_time_s) / peak if self.step_time_s else 0.0
+
+    def to_dict(self) -> Dict:
+        return dict(name=self.name, n_chips=self.n_chips,
+                    hlo_flops=self.hlo_flops, hlo_bytes=self.hlo_bytes,
+                    collective_bytes=self.collective_bytes,
+                    pod_collective_bytes=self.pod_collective_bytes,
+                    model_flops=self.model_flops,
+                    compute_s=self.compute_s, memory_s=self.memory_s,
+                    collective_s=self.collective_s, bound=self.bound,
+                    useful_flops_ratio=self.useful_flops_ratio,
+                    roofline_fraction=self.roofline_fraction)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlans:
+    """Capacity-aware block plans for a model's hot ops."""
+
+    matmul: tiling.MatmulPlan
+    attention: Optional[tiling.AttentionPlan]
+    scan_chunk: Optional[tiling.ScanChunkPlan]
+
+
+class Mem3DPlanner:
+    """Joint capacity/tiling/hierarchy planner."""
+
+    def __init__(self, profile: TpuProfile = TPU_V5E):
+        self.profile = profile
+
+    def plan_for(self, *, d_model: int, d_ff: int, seq_q: int, seq_kv: int,
+                 head_dim: int, tokens_per_device: int,
+                 ssm_d_inner: int = 0, ssm_d_state: int = 0) -> KernelPlans:
+        mm = tiling.plan_matmul(tokens_per_device, d_model, d_ff,
+                                profile=self.profile)
+        attn = None
+        if head_dim:
+            attn = tiling.plan_attention(seq_q, seq_kv, head_dim,
+                                         profile=self.profile)
+        scan = None
+        if ssm_d_inner:
+            scan = tiling.plan_scan_chunk(seq_q, ssm_d_inner, ssm_d_state,
+                                          profile=self.profile)
+        return KernelPlans(matmul=mm, attention=attn, scan_chunk=scan)

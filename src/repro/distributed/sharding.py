@@ -1,0 +1,199 @@
+"""Sharding rules: FSDP x TP x EP over the hierarchical mesh.
+
+MemPool's locality principle, at pod scale: the `model` axis (intra-pod ICI,
+the "group" level) carries the high-traffic tensor-parallel and
+expert-parallel collectives; the `data` axis carries FSDP parameter gathers
+and gradient reduce-scatters; the `pod` axis (the "cluster" level,
+lowest-bandwidth point-to-point links) carries only data-parallel gradient
+reductions, optionally int8-compressed.
+
+Rules are divisibility-aware: a dim that does not divide its mesh axis falls
+back to replication (e.g. 4 KV heads on a 16-way model axis).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+POD_AXIS = "pod"
+
+#: batch-dimension sharding: span the pod axis too (multi-pod data
+#: parallelism). shard()/_fix_spec drop axes absent from the ambient mesh,
+#: so single-pod meshes see plain ("data",).
+BATCH = (POD_AXIS, DATA_AXIS)
+
+#: DP-dominant layout: the batch dim additionally spans `model`, hidden dims
+#: replicate. Chosen by the planner for models whose TP activation
+#: all-reduces would dominate the step (small dense models — the paper's
+#: "co-explore capacity and interconnect placement" applied to parallelism).
+BATCH_ALL = (POD_AXIS, DATA_AXIS, MODEL_AXIS)
+
+
+def layout() -> str:
+    """Activation layout: "tp" (model axis partitions hidden dims) or "dp"
+    (model axis joins data parallelism; weights FSDP-gathered at use).
+    Process-level, read at trace time — set by the launcher/dry-run."""
+    import os
+    return os.environ.get("REPRO_LAYOUT", "tp")
+
+
+def _apply_layout(spec: Tuple) -> Tuple:
+    if layout() != "dp":
+        return spec
+    out = []
+    for names in spec:
+        if names == BATCH:
+            out.append(BATCH_ALL)
+        elif names == MODEL_AXIS:
+            out.append(None)                  # hidden dims replicate
+        elif isinstance(names, tuple):
+            kept = tuple(n for n in names if n != MODEL_AXIS)
+            out.append(kept or None)
+        else:
+            out.append(names)
+    return tuple(out)
+
+
+def axis_size(mesh, name: str) -> int:
+    try:
+        return mesh.shape[name]
+    except (KeyError, TypeError):
+        return 1
+
+
+def shard(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint that no-ops without an ambient mesh.
+
+    Axis names absent from the mesh are dropped from the spec; dims that do
+    not divide the axis size are replicated.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    fixed = _fix_spec(_apply_layout(tuple(spec)), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+def _fix_spec(spec: Tuple, shape: Tuple[int, ...], mesh) -> Tuple:
+    fixed = []
+    for i, names in enumerate(spec):
+        if names is None:
+            fixed.append(None)
+            continue
+        names_t = names if isinstance(names, tuple) else (names,)
+        names_t = tuple(n for n in names_t if n in mesh.axis_names)
+        # greedy prefix: keep the longest leading run of axes whose product
+        # divides the dim (e.g. batch=256 over (pod,data,model)=512 shards
+        # over (pod,data)=32 instead of replicating entirely)
+        kept = []
+        prod = 1
+        for n in names_t:
+            size = axis_size(mesh, n)
+            if shape[i] % (prod * size) == 0:
+                kept.append(n)
+                prod *= size
+            else:
+                break
+        if not kept:
+            fixed.append(None)
+        else:
+            fixed.append(tuple(kept) if len(kept) > 1 else kept[0])
+    # pad/trim to rank
+    fixed += [None] * (len(shape) - len(fixed))
+    return tuple(fixed[:len(shape)])
+
+
+def fix_spec_for(mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    """Public divisibility fixer for out-of-trace use (e.g. input shardings)."""
+    return P(*_fix_spec(tuple(spec), shape, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partitioning rules (by pytree path name patterns).
+# ---------------------------------------------------------------------------
+
+#: (substring pattern, spec builder). First match wins. Specs may be longer
+#: than the param rank: stacked (scan) params get the leading axes skipped.
+_RULES: Tuple[Tuple[str, P], ...] = (
+    # embeddings: vocab on model (TP vocab-parallel logits), d on data (FSDP)
+    ("embed", P(MODEL_AXIS, DATA_AXIS)),
+    ("unembed", P(MODEL_AXIS, DATA_AXIS)),
+    # attention
+    ("wq_a", P(DATA_AXIS, MODEL_AXIS)),
+    ("wq_b", P(DATA_AXIS, MODEL_AXIS)),
+    ("wkv_a", P(DATA_AXIS, None)),
+    ("wkv_b", P(DATA_AXIS, MODEL_AXIS)),
+    ("wq", P(DATA_AXIS, MODEL_AXIS)),
+    ("wk", P(DATA_AXIS, MODEL_AXIS)),
+    ("wv", P(DATA_AXIS, MODEL_AXIS)),
+    ("wo", P(MODEL_AXIS, DATA_AXIS)),
+    ("bq", P(MODEL_AXIS)),
+    ("bk", P(MODEL_AXIS)),
+    ("bv", P(MODEL_AXIS)),
+    # dense mlp
+    ("w_gate", P(DATA_AXIS, MODEL_AXIS)),
+    ("w_up", P(DATA_AXIS, MODEL_AXIS)),
+    ("w_down", P(MODEL_AXIS, DATA_AXIS)),
+    # moe: experts on model (EP), shared experts like dense mlp
+    ("router", P(None, None)),
+    ("we_gate", P(MODEL_AXIS, DATA_AXIS, None)),
+    ("we_up", P(MODEL_AXIS, DATA_AXIS, None)),
+    ("we_down", P(MODEL_AXIS, None, DATA_AXIS)),
+    # mamba
+    ("in_proj", P(DATA_AXIS, MODEL_AXIS)),
+    ("conv_w", P(None, MODEL_AXIS)),
+    ("conv_b", P(MODEL_AXIS)),
+    ("x_proj", P(MODEL_AXIS, None)),
+    ("dt_proj", P(None, MODEL_AXIS)),
+    ("dt_bias", P(MODEL_AXIS)),
+    ("a_log", P(MODEL_AXIS, None)),
+    ("ssm_d", P(MODEL_AXIS)),
+    ("out_proj", P(MODEL_AXIS, DATA_AXIS)),
+)
+
+
+def spec_for_param(path: str, shape: Tuple[int, ...], mesh) -> P:
+    """PartitionSpec for one parameter, by name pattern + divisibility.
+
+    Under the "infer" layout (decode serving), non-expert weights drop their
+    `data`-axis (FSDP) factor and live TP-sharded but data-replicated: a
+    decode step touches every dense weight for a handful of tokens, so
+    gather-at-use traffic would dwarf the activations. Expert weights stay
+    2D-sharded — too big to replicate — and the MoE layer gathers the
+    *tokens* to the weights instead (repro.models.moe partial-K path)."""
+    for pat, spec in _RULES:
+        if pat in path:
+            base = tuple(spec)
+            if layout() == "infer" and not pat.startswith("we_"):
+                base = tuple(None if n == DATA_AXIS else n for n in base)
+            # stacked scan params: leading (n_repeat,) axes -> replicate them
+            extra = len(shape) - len(base)
+            if extra > 0:
+                base = (None,) * extra + base
+            elif extra < 0:
+                base = base[-len(shape):] if shape else ()
+            return P(*_fix_spec(base, shape, mesh))
+    return P(*_fix_spec((None,) * len(shape), shape, mesh))
+
+
+def param_specs(params: Any, mesh) -> Any:
+    """Spec pytree matching ``params`` (works on arrays or ShapeDtypeStructs)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        specs.append(spec_for_param(name.lower(), leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named_shardings(params: Any, mesh) -> Any:
+    specs = param_specs(params, mesh)
+    return jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles."""
+
+from repro.kernels.ops import attention, matmul, selective_scan

@@ -1,0 +1,83 @@
+"""Chunked selective-scan (Mamba-1) kernel.
+
+The paper's capacity-aware tiling applied to a state-space model: the chunk of
+inputs/gates plus the running (d_inner x d_state) state must fit VMEM
+(:func:`repro.core.tiling.plan_scan_chunk`); the state is carried in VMEM
+scratch across sequential chunk grid steps — exactly MemPool's pattern of a
+resident output tile (the state) updated across memory/compute phases (the
+chunks). Longer chunks amortize the per-phase static overhead, the paper's
+second reuse mechanism.
+
+Layout: d_inner is blocked on the 128-lane axis; d_state (16) rides the
+sublane axis of the state scratch. The time loop is a `fori_loop` over the
+chunk (VPU-bound; the matmul-form intra-chunk scan is a recorded follow-up
+optimization in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.tiling import ScanChunkPlan
+
+
+def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, h_ref, *,
+                 chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...].astype(jnp.float32)          # (bd, ds)
+    dvec = d_ref[0].astype(jnp.float32)         # (bd,)
+
+    def body(t, h):
+        xt = x_ref[0, pl.ds(t, 1), :][0].astype(jnp.float32)    # (bd,)
+        dtt = dt_ref[0, pl.ds(t, 1), :][0].astype(jnp.float32)  # (bd,)
+        bt = b_ref[0, pl.ds(t, 1), :][0].astype(jnp.float32)    # (ds,)
+        ct = c_ref[0, pl.ds(t, 1), :][0].astype(jnp.float32)    # (ds,)
+        decay = jnp.exp(dtt[:, None] * a)                       # (bd, ds)
+        h = decay * h + (dtt * xt)[:, None] * bt[None, :]
+        y = (h * ct[None, :]).sum(axis=-1) + dvec * xt
+        y_ref[0, pl.ds(t, 1), :] = y[None].astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, body, h_ref[...])
+    h_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "block_d", "interpret"))
+def mamba_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+               c: jax.Array, d: jax.Array, *, plan: ScanChunkPlan,
+               block_d: int = 128, interpret: bool = False) -> jax.Array:
+    """x, dt: (B, L, Di); a: (Di, Ds); b, c: (B, L, Ds); d: (Di,) -> (B, L, Di)."""
+    bsz, length, di = x.shape
+    ds = a.shape[1]
+    bd = min(block_d, di)
+    chunk = min(plan.chunk, length)
+    assert di % bd == 0 and length % chunk == 0, (di, bd, length, chunk)
+    grid = (bsz, di // bd, length // chunk)
+    d2 = d.reshape(1, di)
+
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda ib, id_, ic: (ib, ic, id_)),
+            pl.BlockSpec((1, chunk, bd), lambda ib, id_, ic: (ib, ic, id_)),
+            pl.BlockSpec((1, chunk, ds), lambda ib, id_, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda ib, id_, ic: (ib, ic, 0)),
+            pl.BlockSpec((bd, ds), lambda ib, id_, ic: (id_, 0)),
+            pl.BlockSpec((1, bd), lambda ib, id_, ic: (0, id_)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, bd), lambda ib, id_, ic: (ib, ic, id_)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, ds), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, b, c, a, d2)

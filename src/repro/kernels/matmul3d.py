@@ -1,0 +1,73 @@
+"""The paper's kernel: capacity-aware, double-buffered tiled matmul.
+
+MemPool-3D §VI keeps three tiles (A, B, C) resident in the shared-L1 SPM and
+alternates DMA *memory phases* with *compute phases*; the tile edge is the
+largest one that fills the SPM (:func:`repro.core.tiling.mempool_tile_size`).
+
+On TPU the same structure is expressed with a Pallas grid: the (bm, bk, bn)
+blocks are the resident tiles (f32 accumulator lives in VMEM scratch across
+the K loop), the HBM->VMEM pipeline that `pallas_call` generates from the
+BlockSpecs *is* the memory phase (Pallas multi-buffers it automatically, the
+analogue of the paper's 0.25-tile double-buffer margin), and block sizes come
+from :func:`repro.core.tiling.plan_matmul` so the working set fills the VMEM
+budget — the paper's t-rule verbatim.
+
+Alignment: MXU wants every matmul dim a multiple of 128; the wrapper in
+``ops.py`` pads. Grid iteration (i, j, k) with k minor is sequential on TPU,
+so the accumulator carries across k steps ("arbitrary" dimension semantics).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.tiling import MatmulPlan
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "out_dtype", "interpret"))
+def matmul3d(a: jax.Array, b: jax.Array, *, plan: MatmulPlan,
+             out_dtype: jnp.dtype | None = None,
+             interpret: bool = False) -> jax.Array:
+    """(M, K) @ (K, N) with planner-chosen VMEM tiling. Dims must divide."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk, bn = min(plan.bm, m), min(plan.bk, k), min(plan.bn, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        f"pad first: {(m, k, n)} vs blocks {(bm, bk, bn)}")
+    out_dtype = out_dtype or a.dtype
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,131 @@
+"""Public, planner-driven entry points for the kernel package.
+
+Models call these; they dispatch to the Pallas kernel (interpret mode on CPU,
+compiled on TPU) or to the pure-jnp oracle. The dispatch default — oracle on
+CPU, Pallas on TPU — keeps tests fast while exercising identical math; kernel
+sweeps in tests/test_kernels.py pin ``impl="pallas"`` to validate the kernels
+themselves.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tiling
+from repro.core.hw_profiles import TPU_V5E
+from repro.kernels import ref
+from repro import runtime_flags
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.matmul3d import matmul3d as _matmul
+from repro.kernels.mamba_scan import mamba_scan as _scan
+
+Impl = Literal["auto", "pallas", "ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_pallas(impl: Impl) -> bool:
+    if impl == "auto":
+        return _on_tpu()
+    return impl == "pallas"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def matmul(a: jax.Array, b: jax.Array, *,
+           plan: tiling.MatmulPlan | None = None,
+           out_dtype: jnp.dtype | None = None,
+           impl: Impl = "auto") -> jax.Array:
+    """Capacity-aware tiled matmul; pads to block multiples then crops."""
+    if not _use_pallas(impl):
+        return ref.matmul_ref(a, b, out_dtype)
+    m, k = a.shape
+    _, n = b.shape
+    plan = plan or tiling.plan_matmul(m, k, n, profile=TPU_V5E,
+                                      in_bytes=a.dtype.itemsize)
+    bm, bk, bn = min(plan.bm, m), min(plan.bk, k), min(plan.bn, n)
+    ap = _pad_to(_pad_to(a, 0, bm), 1, bk)
+    bp = _pad_to(_pad_to(b, 0, bk), 1, bn)
+    eff = tiling.MatmulPlan(bm, bk, bn, plan.n_buffers)
+    out = _matmul(ap, bp, plan=eff, out_dtype=out_dtype or a.dtype,
+                  interpret=not _on_tpu())
+    return out[:m, :n]
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True,
+              window: int | None = None,
+              scale: float | None = None,
+              q_offset: int = 0,
+              plan: tiling.AttentionPlan | None = None,
+              impl: Impl = "auto") -> jax.Array:
+    """Blockwise attention; q (B,Hq,Sq,D), k/v (B,Hkv,Skv,D)."""
+    if not _use_pallas(impl):
+        # long sequences take the blockwise XLA path (bounded transients);
+        # short ones take the direct softmax (cheaper compile, exact grads).
+        # Cost-mode lowering (dry-run) unrolls the block scans with capped
+        # trip counts so HloCostAnalysis sees every block body.
+        if runtime_flags.cost_mode():
+            blk = runtime_flags.cost_attn_block()
+            if q.shape[2] * k.shape[2] > blk * blk:
+                return ref.attention_ref_blockwise(
+                    q, k, v, causal=causal, window=window, scale=scale,
+                    q_offset=q_offset, block_q=blk, block_kv=blk, unroll=True)
+            return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                     scale=scale, q_offset=q_offset)
+        if q.shape[2] * k.shape[2] > 4096 * 4096:
+            return ref.attention_ref_blockwise(
+                q, k, v, causal=causal, window=window, scale=scale,
+                q_offset=q_offset)
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 scale=scale, q_offset=q_offset)
+    _, _, sq, d = q.shape
+    skv = k.shape[2]
+    plan = plan or tiling.plan_attention(sq, skv, d, profile=TPU_V5E)
+    bq = min(plan.block_q, max(sq, 1))
+    bkv = min(plan.block_kv, skv)
+    while sq % bq:
+        bq //= 2
+    while skv % bkv:
+        bkv //= 2
+    eff = tiling.AttentionPlan(max(bq, 1), max(bkv, 1))
+    return _flash(q, k, v, plan=eff, causal=causal, window=window,
+                  scale=scale, q_offset=q_offset, interpret=not _on_tpu())
+
+
+def selective_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                   c: jax.Array, d: jax.Array, *,
+                   plan: tiling.ScanChunkPlan | None = None,
+                   h0: jax.Array | None = None,
+                   return_state: bool = False,
+                   impl: Impl = "auto"):
+    """Mamba-1 selective scan (see ref.selective_scan_ref for shapes)."""
+    if not _use_pallas(impl) or return_state or h0 is not None:
+        # decode path (carried state) stays on the jnp oracle
+        return ref.selective_scan_ref(x, dt, a, b, c, d, h0=h0,
+                                      return_state=return_state)
+    bsz, length, di = x.shape
+    ds = a.shape[1]
+    plan = plan or tiling.plan_scan_chunk(length, di, ds, profile=TPU_V5E)
+    chunk = min(plan.chunk, length)
+    while length % chunk:
+        chunk //= 2
+    bd = 128
+    while di % bd:
+        bd //= 2
+    return _scan(x, dt, a, b, c, d, plan=tiling.ScanChunkPlan(max(chunk, 1)),
+                 block_d=max(bd, 1), interpret=not _on_tpu())

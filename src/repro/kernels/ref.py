@@ -1,0 +1,165 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (sweeps in
+``tests/test_kernels.py``) and the implementations the model stack uses on
+CPU, where Pallas only runs in interpret mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array,
+               out_dtype: jnp.dtype | None = None) -> jax.Array:
+    """A @ B with f32 accumulation (MXU semantics)."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  window: int | None = None,
+                  scale: float | None = None,
+                  q_offset: int = 0) -> jax.Array:
+    """Multi-head attention oracle.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0 (GQA).
+    ``window`` masks keys further than ``window`` positions behind the query
+    (sliding-window / local attention). ``q_offset`` is the absolute position
+    of q[0] (for decode: q_offset = cache_len).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    dv = v.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    group = hq // hkv
+    # MHA/MLA (group==1): never jnp.repeat — it lowers to a head-merging
+    # reshape that breaks GSPMD head-sharding and all-gathers the full K/V.
+    # GQA (group>1) with q HEAD-sharded: the repeat is what KEEPS hq
+    # mesh-divisible (hkv alone may not divide the model axis), so keep it.
+    # (Decode uses the grouped einsum with replicated q — _decode_attention.)
+    kk = k if group == 1 else jnp.repeat(k, group, axis=1)
+    vv = v if group == 1 else jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    skv = k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (can happen with window=0 edge cases) -> zeros
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_ref_blockwise(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                            causal: bool = True,
+                            window: int | None = None,
+                            scale: float | None = None,
+                            q_offset: int = 0,
+                            block_q: int = 1024,
+                            block_kv: int = 1024,
+                            unroll: bool = False) -> jax.Array:
+    """Online-softmax blockwise attention in pure jnp (lax.scan over blocks).
+
+    Numerically identical to :func:`attention_ref` but with O(block^2)
+    transient memory — this is the XLA path used for long sequences, and the
+    direct jnp mirror of the Pallas flash kernel (same phase structure).
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                 # may differ from d (MLA: 192 qk / 128 v)
+    scale = scale if scale is not None else d ** -0.5
+    group = hq // hkv
+    bq = min(block_q, sq)
+    bkv = min(block_kv, skv)
+    while sq % bq:
+        bq //= 2
+    while skv % bkv:
+        bkv //= 2
+    nq, nkv = sq // bq, skv // bkv
+
+    # group==1: no repeat (sharding-preserving); group>1: repeat keeps the
+    # hq dim mesh-divisible — see attention_ref for the rationale.
+    qf = q.astype(jnp.float32).reshape(b, hq, nq, bq, d)
+    kf = k.astype(jnp.float32).reshape(b, hkv, nkv, bkv, d)
+    vf = v.astype(jnp.float32).reshape(b, hkv, nkv, bkv, dv)
+    neg = jnp.float32(-jnp.inf)
+
+    def q_step(_, iq):
+        qb = qf[:, :, iq]                                   # (B,Hq,bq,D)
+
+        def kv_step(carry, ik):
+            m_p, l_p, acc = carry
+            kb = kf[:, :, ik] if group == 1 else \
+                jnp.repeat(kf[:, :, ik], group, axis=1)     # (B,Hq,bkv,D)
+            vb = vf[:, :, ik] if group == 1 else \
+                jnp.repeat(vf[:, :, ik], group, axis=1)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qb, kb) * scale
+            qpos = iq * bq + jnp.arange(bq)[:, None] + q_offset
+            kpos = ik * bkv + jnp.arange(bkv)[None, :]
+            mask = jnp.ones((bq, bkv), bool)
+            if causal:
+                mask &= kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask[None, None], s, neg)
+            m_n = jnp.maximum(m_p, s.max(-1, keepdims=True))
+            alpha = jnp.where(m_p > neg, jnp.exp(m_p - m_n), 0.0)
+            p = jnp.where(s > neg, jnp.exp(s - m_n), 0.0)
+            l_n = alpha * l_p + p.sum(-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p, vb)
+            return (m_n, l_n, acc), None
+
+        init = (jnp.full((b, hq, bq, 1), neg),
+                jnp.zeros((b, hq, bq, 1)),
+                jnp.zeros((b, hq, bq, dv)))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nkv),
+                                      unroll=nkv if unroll else 1)
+        return None, acc / jnp.maximum(l, 1e-30)
+
+    _, blocks = jax.lax.scan(q_step, None, jnp.arange(nq),
+                             unroll=nq if unroll else 1)   # (nq,B,Hq,bq,Dv)
+    out = blocks.transpose(1, 2, 0, 3, 4).reshape(b, hq, sq, dv)
+    return out.astype(q.dtype)
+
+
+def selective_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array,
+                       b: jax.Array, c: jax.Array, d: jax.Array,
+                       h0: jax.Array | None = None,
+                       return_state: bool = False):
+    """Mamba-1 selective scan oracle (discretized zero-order hold).
+
+    x, dt: (B, L, Di);  a: (Di, Ds);  b, c: (B, L, Ds);  d: (Di,)
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) outer B_t ;  y_t = h_t . C_t + D*x_t
+    """
+    bsz, length, di = x.shape
+    ds = a.shape[1]
+    xf, dtf, bf, cf = (t.astype(jnp.float32) for t in (x, dt, b, c))
+    af = a.astype(jnp.float32)
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs
+        # (B, Di, Ds) decay and input injection
+        decay = jnp.exp(dtt[..., None] * af[None])
+        h = decay * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bis,bs->bi", h, ct)
+        return h, y
+
+    h_init = jnp.zeros((bsz, di, ds), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    hT, ys = jax.lax.scan(step, h_init,
+                          (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+                           bf.swapaxes(0, 1), cf.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + xf * d.astype(jnp.float32)[None, None, :]
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, hT
+    return y

@@ -1,0 +1,40 @@
+"""Production mesh definitions.
+
+Hierarchy mapping (DESIGN.md): `model` = intra-pod ICI (MemPool's group
+interconnect), `data` = FSDP/DP within a pod, `pod` = the cluster level
+(lowest bandwidth, gradient-reduce only). A function, not a module constant:
+importing this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         devices: Optional[Sequence] = None) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    if devices is None:
+        devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} "
+            "(dry-run must set --xla_force_host_platform_device_count)")
+    return jax.make_mesh(
+        shape, axes, devices=devices[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = data * model
+    devices = jax.devices()[:n]
+    return jax.make_mesh(
+        (data, model), ("data", "model"), devices=devices,
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,4 @@
+"""Model substrate: layers, attention variants, MoE, SSM, assemblies."""
+
+from repro.models.api import Model, ShapeCfg, SHAPES, build_model
+from repro.models.config import LayerKind, ModelConfig

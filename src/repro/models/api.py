@@ -1,0 +1,146 @@
+"""Unified model facade: init / loss / prefill / decode_step / input_specs.
+
+Every assigned architecture is driven through this one API by the trainer,
+the serving engine, the dry-run, and the benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, frontends, transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+
+class Model:
+    """Family-dispatching facade over the substrate."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- init
+    def init(self, key) -> Any:
+        if self.cfg.family == "encdec":
+            return encdec.init_encdec(self.cfg, key)
+        return transformer.init_lm(self.cfg, key)
+
+    # ------------------------------------------------------------- loss
+    def loss(self, params, batch: Dict[str, jax.Array], *,
+             remat: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec.encdec_loss(cfg, params, batch["src_embeds"],
+                                      batch["tokens"], batch["labels"],
+                                      remat=remat)
+        return transformer.lm_loss(cfg, params, batch["tokens"],
+                                   batch["labels"],
+                                   frontend_embeds=batch.get("frontend_embeds"),
+                                   remat=remat)
+
+    # ---------------------------------------------------------- serving
+    def prefill(self, params, batch: Dict[str, jax.Array], max_len: int):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc_out = encdec.encode(cfg, params, batch["src_embeds"],
+                                    remat=False)
+            caches = encdec.init_dec_caches(cfg, batch["tokens"].shape[0],
+                                            max_len)
+            x, caches = encdec.decode(cfg, params, batch["tokens"], enc_out,
+                                      caches=caches, cache_len=0, remat=False)
+            from repro.models import layers
+            logits = layers.unembed_logits(params["tok"], x[:, -1:])
+            return logits, {"caches": caches, "enc_out": enc_out}
+        x, caches = transformer.prefill(cfg, params, batch["tokens"], max_len,
+                                        frontend_embeds=batch.get("frontend_embeds"))
+        from repro.models import layers
+        logits = layers.unembed_logits(params["tok"], x[:, -1:])
+        return logits, {"caches": caches}
+
+    def decode_step(self, params, tokens: jax.Array, state: Dict[str, Any],
+                    cache_len: jax.Array):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            x, caches = encdec.decode(cfg, params, tokens, state["enc_out"],
+                                      caches=state["caches"],
+                                      cache_len=cache_len, remat=False)
+            from repro.models import layers
+            logits = layers.unembed_logits(params["tok"], x)
+            return logits, {**state, "caches": caches}
+        logits, caches = transformer.decode_step(cfg, params, tokens,
+                                                 state["caches"], cache_len)
+        return logits, {**state, "caches": caches}
+
+    # ------------------------------------------------------ input specs
+    def input_specs(self, shape: ShapeCfg,
+                    token_dtype=jnp.int32) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg = self.cfg
+        b = shape.global_batch
+        if shape.kind in ("train", "prefill"):
+            s = shape.seq_len
+            batch: Dict[str, Any] = {}
+            if cfg.family == "encdec":
+                # source frames take the seq budget; decoder gets same length
+                batch["src_embeds"] = jax.ShapeDtypeStruct(
+                    (b, s, cfg.d_model), jnp.bfloat16)
+                batch["tokens"] = jax.ShapeDtypeStruct((b, s), token_dtype)
+                batch["labels"] = jax.ShapeDtypeStruct((b, s), token_dtype)
+                return batch
+            s_text = s - cfg.frontend_len
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s_text), token_dtype)
+            batch["labels"] = jax.ShapeDtypeStruct((b, s_text), token_dtype)
+            if cfg.frontend_len:
+                batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+            return batch
+        # decode: one new token against a seq_len cache
+        max_len = shape.seq_len
+        if cfg.family == "encdec":
+            state = jax.eval_shape(
+                lambda: {"caches": encdec.init_dec_caches(cfg, b, max_len),
+                         "enc_out": jnp.zeros((b, max_len, cfg.d_model),
+                                              jnp.bfloat16)})
+        else:
+            state = jax.eval_shape(
+                lambda: {"caches": transformer.init_caches(cfg, b, max_len)})
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, 1), token_dtype),
+            "state": state,
+            "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def runnable_shapes(self) -> Tuple[str, ...]:
+        """Which assigned shapes this arch runs (skip rules from DESIGN.md)."""
+        cfg = self.cfg
+        shapes = ["train_4k", "prefill_32k", "decode_32k"]
+        subquadratic = (cfg.family in ("ssm", "hybrid")
+                        or cfg.local_global_ratio > 0)
+        if subquadratic:
+            shapes.append("long_500k")
+        return tuple(shapes)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

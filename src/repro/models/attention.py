@@ -1,0 +1,273 @@
+"""Attention variants: GQA (+ sliding window, RoPE/M-RoPE), MLA (DeepSeek-V2),
+with functional KV caches for decode.
+
+Pooled-memory decode (the MemPool idea at pod scale): KV caches are sharded on
+the *sequence* dimension across the `model` axis (and `data` too when batch
+cannot shard, e.g. long_500k's batch=1). The attention math below is written
+so GSPMD turns the softmax reductions into partial max/sum + psum over the
+cache shards — flash-decoding across chips, i.e. remote "banks" at the group
+level of the hierarchy.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import BATCH, shard
+from repro.kernels import ops
+from repro.models import layers
+from repro.models.config import LayerKind, ModelConfig
+from repro.models.layers import cast, linear
+
+
+def _cache_write(cache_arr: jax.Array, new: jax.Array, cache_len,
+                 axis: int) -> jax.Array:
+    """Append ``new`` into the cache at position ``cache_len``.
+
+    Single-token traced writes use a masked select instead of
+    dynamic_update_slice: a DUS with a traced start on the SEQ-SHARDED cache
+    dim forces GSPMD to replicate (all-gather) the whole cache per layer —
+    the dominant decode collective before this fix (§Perf, decode/h2). The
+    elementwise select keeps the pooled (seq-sharded) layout intact.
+    """
+    new = new.astype(cache_arr.dtype)
+    if isinstance(cache_len, jax.Array) and new.shape[axis] == 1:
+        iota = jax.lax.broadcasted_iota(jnp.int32, cache_arr.shape, axis)
+        return jnp.where(iota == cache_len, new, cache_arr)
+    return jax.lax.dynamic_update_slice_in_dim(cache_arr, new,
+                                               cache_len, axis)
+
+
+# ---------------------------------------------------------------------- GQA
+
+def init_gqa(cfg: ModelConfig, key) -> Dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, hq * hd), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d, hkv * hd), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d, hkv * hd), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (hq * hd, d), jnp.float32)
+        * (1.0 / math.sqrt(hq * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * hd,), jnp.float32)
+    return p
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> Dict:
+    shape = (batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
+                  kind: LayerKind,
+                  positions: jax.Array,
+                  cache: Optional[Dict] = None,
+                  cache_len: Optional[jax.Array] = None,
+                  positions3: Optional[jax.Array] = None,
+                  cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  causal: bool = True) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, S, d). Returns (out, updated_cache).
+
+    Modes: training/prefill (cache=None, full seq); decode (cache given,
+    S is the new-token count, cache_len the filled prefix length);
+    cross-attention (cross_kv given: precomputed encoder K/V, no cache write).
+    """
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = linear(x, p["wq"], p.get("bq"))
+    q = q.reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
+    if cross_kv is None:
+        k = linear(x, p["wk"], p.get("bk")).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+        v = linear(x, p["wv"], p.get("bv")).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+        if positions3 is not None and cfg.mrope:
+            q = layers.apply_mrope(q, positions3, cfg.rope_theta, cfg.mrope_sections)
+            k = layers.apply_mrope(k, positions3, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = layers.apply_rope(q, positions, cfg.rope_theta)
+            k = layers.apply_rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = cross_kv
+
+    new_cache = None
+    q_offset = 0
+    if cache is not None:
+        # functional cache append at cache_len
+        k_all = _cache_write(cache["k"], k, cache_len, axis=2)
+        v_all = _cache_write(cache["v"], v, cache_len, axis=2)
+        new_cache = {"k": k_all, "v": v_all}
+        k, v = k_all, v_all
+        q_offset = cache_len
+
+    if cache is not None:
+        # pooled KV: sequence dim spread over the model axis (flash-decoding).
+        # q heads REPLICATE here — a head-sharded q against seq-sharded KV
+        # forces GSPMD into replicate-and-reslice copies of the whole cache
+        # per layer (§Perf, deepseek/h1); with q replicated, the softmax and
+        # PV contractions reduce over the seq shards with small stat psums.
+        q = shard(q, BATCH, None, None, None)
+        k = shard(k, BATCH, None, "model", None)
+        v = shard(v, BATCH, None, "model", None)
+    else:
+        q = shard(q, BATCH, "model", None, None)
+        k = shard(k, BATCH, "model", None, None)
+        v = shard(v, BATCH, "model", None, None)
+
+    if cache is not None and isinstance(q_offset, jax.Array):
+        # decode with traced offset: direct masked attention over the cache
+        out = _decode_attention(q, k, v, q_offset, window=kind.window,
+                                causal=causal)
+    else:
+        out = ops.attention(q, k, v, causal=causal and cross_kv is None,
+                            window=kind.window, q_offset=int(q_offset))
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    out = linear(out, p["wo"])
+    return shard(out, BATCH, None, None), new_cache
+
+
+def _decode_attention(q, k, v, cache_len, *, window=None, causal=True):
+    """Masked attention with a traced valid-prefix length (decode path).
+
+    GQA WITHOUT materializing repeated K/V: q is viewed as
+    (B, Hkv, group, S, D) and contracted against the (B, Hkv, T, D) cache —
+    a jnp.repeat here lowers to broadcast+reshape that merges the head dims,
+    which breaks GSPMD's seq-sharding propagation and all-gathers the whole
+    pooled cache per layer (§Perf, decode/h3)."""
+    b, hq, s, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, hkv, group, s, d)
+    logits = jnp.einsum("bhgsd,bhtd->bhgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    qpos = cache_len + jnp.arange(s)[:, None]
+    tpos = jnp.arange(skv)[None, :]
+    mask = tpos < cache_len + s            # written region only
+    if causal:
+        mask &= tpos <= qpos
+    if window is not None:
+        mask &= tpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bhtd->bhgsd",
+                     probs.astype(jnp.float32), v.astype(jnp.float32))
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------- MLA
+
+def init_mla(cfg: ModelConfig, key) -> Dict:
+    d, h = cfg.d_model, cfg.n_heads
+    nope, rope_d, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    qd = nope + rope_d
+    ks = jax.random.split(key, 6)
+    p = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = jax.random.normal(ks[0], (d, cfg.q_lora_rank), jnp.float32) / math.sqrt(d)
+        p["q_norm"] = layers.init_rmsnorm(cfg.q_lora_rank)
+        p["wq_b"] = jax.random.normal(ks[1], (cfg.q_lora_rank, h * qd), jnp.float32) / math.sqrt(cfg.q_lora_rank)
+    else:
+        p["wq_b"] = jax.random.normal(ks[1], (d, h * qd), jnp.float32) / math.sqrt(d)
+    p["wkv_a"] = jax.random.normal(ks[2], (d, cfg.kv_lora_rank + rope_d), jnp.float32) / math.sqrt(d)
+    p["kv_norm"] = layers.init_rmsnorm(cfg.kv_lora_rank)
+    p["wkv_b"] = jax.random.normal(ks[3], (cfg.kv_lora_rank, h * (nope + vdim)), jnp.float32) / math.sqrt(cfg.kv_lora_rank)
+    p["wo"] = jax.random.normal(ks[4], (h * vdim, d), jnp.float32) / math.sqrt(h * vdim)
+    return p
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> Dict:
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
+                  kind: LayerKind,
+                  positions: jax.Array,
+                  cache: Optional[Dict] = None,
+                  cache_len: Optional[jax.Array] = None,
+                  **_unused) -> Tuple[jax.Array, Optional[Dict]]:
+    """Multi-head latent attention. Cache stores only the 576-dim latent —
+    the paper's 'more capacity in the same footprint', algorithmically."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    nope, rope_d, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    if cfg.q_lora_rank:
+        q = linear(layers.rmsnorm(p["q_norm"], linear(x, p["wq_a"])), p["wq_b"])
+    else:
+        q = linear(x, p["wq_b"])
+    q = q.reshape(b, s, h, nope + rope_d).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = linear(x, p["wkv_a"])                        # (B,S,kv_lora+rope)
+    ckv = layers.rmsnorm(p["kv_norm"], kv_a[..., :cfg.kv_lora_rank])
+    k_rope = kv_a[..., cfg.kv_lora_rank:]               # single shared head
+    k_rope = layers.apply_rope(k_rope[:, None], positions, cfg.rope_theta)[:, 0]
+
+    new_cache = None
+    q_offset = 0
+    if cache is not None:
+        ckv = _cache_write(cache["ckv"], ckv, cache_len, axis=1)
+        k_rope = _cache_write(cache["krope"], k_rope, cache_len, axis=1)
+        new_cache = {"ckv": ckv, "krope": k_rope}
+        q_offset = cache_len
+
+    scale = (nope + rope_d) ** -0.5
+
+    if cache is not None and isinstance(q_offset, jax.Array):
+        # ---- ABSORBED (latent-space) decode: never materialize per-head
+        # K/V. q_nope is folded through wkv_b's K half so scores/values are
+        # computed directly against the 576-dim latent cache — O(T*(l+r))
+        # per query instead of O(T*h*(d_k+d_v)) decompression, and the
+        # seq-sharded latent never reshards (§Perf, deepseek/h1).
+        ckv = shard(ckv, BATCH, "model", None)          # pooled latent
+        k_rope = shard(k_rope, BATCH, "model", None)
+        w = cast(p["wkv_b"]).reshape(cfg.kv_lora_rank, h, nope + vdim)
+        wk, wv = w[..., :nope], w[..., nope:]           # (l, h, n) / (l, h, v)
+        qf = q_nope.astype(jnp.float32)                 # (B, H, S, n)
+        q_lat = jnp.einsum("bhsn,lhn->bhsl", qf, wk.astype(jnp.float32))
+        ckv_f = ckv.astype(jnp.float32)                 # (B, T, l)
+        kr_f = k_rope.astype(jnp.float32)               # (B, T, r)
+        scores = (jnp.einsum("bhsl,btl->bhst", q_lat, ckv_f)
+                  + jnp.einsum("bhsr,btr->bhst",
+                               q_rope.astype(jnp.float32), kr_f)) * scale
+        t_pos = jnp.arange(ckv.shape[1])[None, :]
+        q_pos = q_offset + jnp.arange(s)[:, None]
+        mask = t_pos <= q_pos                           # causal + written
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhst,btl->bhsl", probs, ckv_f)
+        out = jnp.einsum("bhsl,lhv->bhsv", o_lat, wv.astype(jnp.float32))
+        out = out.astype(x.dtype)
+    else:
+        # prefill/train: decompress + flash attention (compute-optimal for
+        # long query blocks; the latent trick only wins at small s)
+        ckv = shard(ckv, BATCH, None, None)
+        kv = linear(ckv, p["wkv_b"]).reshape(*ckv.shape[:2], h, nope + vdim)
+        k_nope = kv[..., :nope].transpose(0, 2, 1, 3)   # (B,H,Skv,nope)
+        v = kv[..., nope:].transpose(0, 2, 1, 3)        # (B,H,Skv,v)
+        k_rope_b = jnp.broadcast_to(k_rope[:, None], (b, h, *k_rope.shape[1:]))
+        k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = ops.attention(q_full, k, v, causal=True, window=kind.window,
+                            scale=scale, q_offset=int(q_offset))
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * vdim)
+    return linear(out, p["wo"]), new_cache
+
+
+INIT = {"gqa": init_gqa, "mla": init_mla}
+APPLY = {"gqa": gqa_attention, "mla": mla_attention}

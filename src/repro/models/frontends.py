@@ -1,0 +1,23 @@
+"""Modality frontend STUBS (per the assignment: [audio]/[vlm] entries specify
+the transformer backbone only; `input_specs()` provides precomputed
+frame/patch embeddings)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def frontend_spec(cfg: ModelConfig, batch: int,
+                  dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
+    """ShapeDtypeStruct stand-in for precomputed frame/patch embeddings."""
+    return jax.ShapeDtypeStruct((batch, cfg.frontend_len, cfg.d_model), dtype)
+
+
+def fake_frontend(cfg: ModelConfig, batch: int, key,
+                  dtype=jnp.bfloat16) -> jax.Array:
+    """Synthetic embeddings for smoke tests / examples."""
+    return (jax.random.normal(key, (batch, cfg.frontend_len, cfg.d_model))
+            * 0.02).astype(dtype)

@@ -1,0 +1,131 @@
+"""Shared building blocks: norms, MLPs, embeddings, rotary embeddings."""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import BATCH, shard
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast(x: jax.Array, dtype=COMPUTE_DTYPE) -> jax.Array:
+    return x.astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+
+def init_rmsnorm(d: int) -> Dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- linear
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                scale: Optional[float] = None, name: str = "w") -> Dict:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {name: jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["b" + name[1:]] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    out = jnp.dot(x, cast(w), preferred_element_type=jnp.float32)
+    if b is not None:
+        out = out + b
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- SwiGLU
+
+def init_mlp(key, d_model: int, d_ff: int) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    return {
+        "w_gate": jax.random.normal(k1, (d_model, d_ff), jnp.float32) * s_in,
+        "w_up": jax.random.normal(k2, (d_model, d_ff), jnp.float32) * s_in,
+        "w_down": jax.random.normal(k3, (d_ff, d_model), jnp.float32) * s_out,
+    }
+
+
+def mlp(p: Dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(linear(x, p["w_gate"])) * linear(x, p["w_up"])
+    h = shard(h, BATCH, None, "model")
+    return linear(h, p["w_down"])
+
+
+# ------------------------------------------------------------- embeddings
+
+def init_embed(key, vocab: int, d_model: int, *, tie: bool) -> Dict:
+    k1, k2 = jax.random.split(key)
+    p = {"embed": jax.random.normal(k1, (vocab, d_model), jnp.float32) * 0.02}
+    if not tie:
+        p["unembed"] = jax.random.normal(k2, (vocab, d_model), jnp.float32) * 0.02
+    return p
+
+
+def embed(p: Dict, tokens: jax.Array) -> jax.Array:
+    return cast(p["embed"])[tokens]
+
+
+def unembed_logits(p: Dict, x: jax.Array) -> jax.Array:
+    from jax.ad_checkpoint import checkpoint_name
+    table = p.get("unembed", p["embed"])
+    # named so the chunked-loss remat policy can SAVE the (bf16, gathered)
+    # table instead of re-gathering it per chunk in the backward pass
+    table_b = checkpoint_name(cast(table), "unembed_table")
+    logits = jnp.dot(x, table_b.T, preferred_element_type=jnp.float32)
+    return shard(logits, BATCH, None, "model")
+
+
+# ------------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, S, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                              # (D/2,)
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl): head_dim/2 split into (t, h, w) sections.
+
+    positions3: (3, B, S) int32 — temporal / height / width position ids.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(d, theta)                              # (half,)
+    # pick, per frequency index, which of the 3 position streams drives it
+    sect_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                         total_repeat_length=half)            # (half,)
+    pos = positions3[sect_id, :, :]                            # (half, B, S)
+    angles = pos.transpose(1, 2, 0).astype(jnp.float32) * freqs  # (B,S,half)
+    cos = jnp.cos(angles)[:, None]                             # (B,1,S,half)
+    sin = jnp.sin(angles)[:, None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

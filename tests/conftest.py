@@ -1,0 +1,33 @@
+"""Shared fixtures. Tests run on the default 1-CPU-device backend —
+the 512-device forcing is confined to launch/dryrun.py (see system design)."""
+
+from __future__ import annotations
+
+import os
+
+# Make sure a stray environment doesn't leak the dry-run's device forcing or
+# cost-mode lowering into the test process.
+os.environ.pop("REPRO_COST_MODE", None)
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
+    "tests must see the real device count (dry-run flags leaked into env)"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tree_allfinite(tree) -> bool:
+    return all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(tree)
+               if jnp.issubdtype(x.dtype, jnp.floating))
+
+
+def assert_close(a, b, *, rtol=2e-4, atol=2e-4, err_msg=""):
+    np.testing.assert_allclose(np.asarray(a, dtype=np.float64),
+                               np.asarray(b, dtype=np.float64),
+                               rtol=rtol, atol=atol, err_msg=err_msg)

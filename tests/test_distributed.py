@@ -1,0 +1,31 @@
+"""Multi-device behaviour (8 forced host devices) via subprocess — the test
+process itself keeps the default single-device backend (see conftest)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.abspath(os.path.join(HERE, "..", "src"))
+
+
+@pytest.mark.slow
+def test_distributed_checks():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "dist_checks.py")],
+        capture_output=True, text=True, env=env, timeout=1200)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "distributed checks failed"
+    out = proc.stdout
+    for name in ("mesh_device_count", "moe_ep_matches_dense",
+                 "moe_ep_capacity_drops", "moe_partial_k_matches_dense",
+                 "compressed_psum", "sharded_train_step", "pooled_decode",
+                 "elastic_reshard_roundtrip"):
+        assert f"PASS {name}" in out, f"missing: {name}"
+    assert "ALL_DIST_CHECKS_PASSED" in out

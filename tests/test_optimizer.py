@@ -1,0 +1,131 @@
+"""AdamW correctness vs a NumPy reference + int8-moment quantization."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import optimizer as opt
+
+
+def _numpy_adamw(params, grads, m, v, step, cfg: opt.OptConfig):
+    lr = float(opt.lr_schedule(cfg, jnp.asarray(step)))
+    gn = np.sqrt(sum((g.astype(np.float64) ** 2).sum() for g in grads.values()))
+    scale = min(1.0, cfg.clip_norm / max(gn, 1e-9))
+    out_p, out_m, out_v = {}, {}, {}
+    bc1 = 1 - cfg.b1 ** step
+    bc2 = 1 - cfg.b2 ** step
+    for k in params:
+        g = grads[k] * scale
+        out_m[k] = cfg.b1 * m[k] + (1 - cfg.b1) * g
+        out_v[k] = cfg.b2 * v[k] + (1 - cfg.b2) * g * g
+        upd = (out_m[k] / bc1) / (np.sqrt(out_v[k] / bc2) + cfg.eps)
+        wd = cfg.weight_decay * params[k] if params[k].ndim >= 2 else 0.0
+        out_p[k] = params[k] - lr * (upd + wd)
+    return out_p, out_m, out_v
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = opt.OptConfig(warmup_steps=0, decay_steps=100)
+    rng = np.random.default_rng(0)
+    params = {"w": rng.standard_normal((8, 8)).astype(np.float32),
+              "b": rng.standard_normal((8,)).astype(np.float32)}
+    grads = {k: rng.standard_normal(p.shape).astype(np.float32)
+             for k, p in params.items()}
+    jp = jax.tree.map(jnp.asarray, params)
+    jg = jax.tree.map(jnp.asarray, grads)
+    state = opt.init_opt_state(jp, cfg)
+    m0 = {k: np.zeros_like(p) for k, p in params.items()}
+    v0 = {k: np.zeros_like(p) for k, p in params.items()}
+
+    p_np, m_np, v_np = params, m0, v0
+    p_jx = jp
+    for step in range(1, 4):
+        p_jx, state, _ = opt.adamw_update(p_jx, jg, state, cfg)
+        p_np, m_np, v_np = _numpy_adamw(p_np, jg, m_np, v_np, step, cfg)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(p_jx[k]), p_np[k],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_lr_schedule_shape():
+    cfg = opt.OptConfig(peak_lr=1e-3, warmup_steps=10, decay_steps=100,
+                        min_lr_ratio=0.1)
+    lrs = [float(opt.lr_schedule(cfg, jnp.asarray(s))) for s in range(0, 120, 5)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(1e-3, rel=1e-3)
+    assert lrs[-1] == pytest.approx(1e-4, rel=1e-2)      # min ratio floor
+    # warmup monotone up, decay monotone down
+    assert all(a <= b + 1e-12 for a, b in zip(lrs[:2], lrs[1:3]))
+
+
+def test_grad_clipping_caps_update():
+    cfg = opt.OptConfig(warmup_steps=0, clip_norm=1.0)
+    params = {"w": jnp.zeros((4, 4))}
+    huge = {"w": jnp.full((4, 4), 1e6)}
+    state = opt.init_opt_state(params, cfg)
+    _, _, metrics = opt.adamw_update(params, huge, state, cfg)
+    assert float(metrics["grad_norm"]) > 1e6  # reported pre-clip
+
+
+# ------------------------------------------------------------- quantization
+
+def test_quantize_roundtrip_error_bound():
+    """Blockwise int8: |x - deq(q(x))| <= blockwise absmax / 127 / 2 + eps."""
+    rng = np.random.default_rng(1)
+    for shape in [(7,), (3, 300), (2, 2, 513)]:
+        x = jnp.asarray(rng.standard_normal(shape).astype(np.float32) * 10)
+        q, s = opt._quantize(x)
+        deq = opt._dequantize(q, s, x.shape)
+        err = np.abs(np.asarray(deq - x))
+        bound = np.asarray(jnp.repeat(s, opt.QBLOCK, axis=-1)
+                           [..., :shape[-1]]) * 0.5 + 1e-7
+        assert (err <= bound + 1e-6).all()
+        assert q.dtype == jnp.int8
+
+
+def test_quantized_moments_track_fp32():
+    """Training with int8 moments stays close to fp32 moments (loss-neutral
+    memory trick — DESIGN.md distributed-optimization section)."""
+    def loss_fn(p, x, y):
+        pred = x @ p["w"]
+        return jnp.mean((pred - y) ** 2)
+
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((64, 16)).astype(np.float32))
+    w_true = jnp.asarray(rng.standard_normal((16, 4)).astype(np.float32))
+    y = x @ w_true
+
+    results = {}
+    for quant in (False, True):
+        cfg = opt.OptConfig(peak_lr=3e-2, warmup_steps=0, decay_steps=300,
+                            weight_decay=0.0, quantized_moments=quant)
+        params = {"w": jnp.zeros((16, 4))}
+        state = opt.init_opt_state(params, cfg)
+        g_fn = jax.jit(jax.grad(loss_fn))
+        upd = jax.jit(lambda p, g, s, c=cfg: opt.adamw_update(p, g, s, c))
+        for _ in range(150):
+            g = g_fn(params, x, y)
+            params, state, _ = upd(params, g, state)
+        results[quant] = float(loss_fn(params, x, y))
+    assert results[True] < 0.01 * float(jnp.mean(y ** 2))  # actually converged
+    assert results[True] == pytest.approx(results[False], rel=1.0, abs=0.02)
+
+
+def test_quantized_state_memory_is_quarter():
+    params = {"w": jnp.zeros((1024, 1024))}
+    s_fp = opt.init_opt_state(params, opt.OptConfig(quantized_moments=False))
+    s_q = opt.init_opt_state(params, opt.OptConfig(quantized_moments=True))
+
+    def nbytes(tree):
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+    assert nbytes(s_q) < 0.27 * nbytes(s_fp)
+
+
+def test_quantized_moments_preserve_param_shape():
+    """The int8 payload keeps the parameter's own shape (sharding contract)."""
+    params = {"w": jnp.zeros((64, 640))}
+    state = opt.init_opt_state(params, opt.OptConfig(quantized_moments=True))
+    assert state["m"]["w"].q.shape == (64, 640)
+    assert state["m"]["w"].scale.shape == (64, -(-640 // opt.QBLOCK))

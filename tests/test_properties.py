@@ -1,0 +1,110 @@
+"""Hypothesis property tests on system invariants beyond the planner."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import perf_model, tiling
+from repro.core.hw_profiles import MiB
+from repro.kernels import ref
+from repro.train import optimizer as opt
+
+
+@hypothesis.given(
+    st.integers(1, 8).map(lambda i: 32 * i),     # seq
+    st.sampled_from([1, 2, 4]),                  # heads
+    st.sampled_from([16, 32]),                   # head dim
+    st.booleans(),                               # causal
+    st.sampled_from([None, 16, 48]),             # window
+)
+@hypothesis.settings(max_examples=12, deadline=None)
+def test_attention_blockwise_equals_direct(seq, h, d, causal, window):
+    """The blockwise online-softmax path == direct softmax for any config."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seq * h + d), 3)
+    q = jax.random.normal(k1, (1, h, seq, d))
+    k = jax.random.normal(k2, (1, h, seq, d))
+    v = jax.random.normal(k3, (1, h, seq, d))
+    a = ref.attention_ref(q, k, v, causal=causal, window=window)
+    b = ref.attention_ref_blockwise(q, k, v, causal=causal, window=window,
+                                    block_q=32, block_kv=32)
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+@hypothesis.given(st.lists(st.floats(-1e4, 1e4), min_size=1, max_size=600))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_quantize_dequantize_bounded(vals):
+    x = jnp.asarray(np.array(vals, np.float32))
+    q, s = opt._quantize(x)
+    deq = opt._dequantize(q, s, x.shape)
+    step = np.asarray(jnp.repeat(s, opt.QBLOCK, axis=-1)[..., :x.shape[-1]])
+    assert (np.abs(np.asarray(deq) - np.asarray(x)) <= step * 0.5 + 1e-6).all()
+
+
+@hypothesis.given(st.integers(0, 10_000), st.integers(0, 3))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_pipeline_pure_function_of_step(step, host):
+    from repro.data.pipeline import DataConfig, SyntheticPipeline
+    cfg = DataConfig(vocab_size=64, seq_len=8, global_batch=4, seed=1)
+    p1 = SyntheticPipeline(cfg, host_index=host, n_hosts=4)
+    p2 = SyntheticPipeline(cfg, host_index=host, n_hosts=4)
+    np.testing.assert_array_equal(p1.batch_at(step)["tokens"],
+                                  p2.batch_at(step)["tokens"])
+
+
+@hypothesis.given(st.integers(1, 64).map(lambda i: i * MiB // 4),
+                  st.floats(1.0, 128.0))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_perf_model_cycles_positive_and_bw_monotone(spm, bw):
+    c1 = perf_model.matmul_cycles(spm_bytes=spm, bw_bytes_per_cycle=bw).total
+    c2 = perf_model.matmul_cycles(spm_bytes=spm, bw_bytes_per_cycle=bw * 2).total
+    assert c1 > 0 and c2 <= c1
+
+
+@hypothesis.given(st.integers(1, 100), st.integers(1, 100), st.integers(1, 100))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_matmul_plan_traffic_at_least_compulsory(m, k, n):
+    """HBM traffic >= compulsory (read A,B once, write C once)."""
+    m, k, n = m * 64, k * 64, n * 64
+    plan = tiling.plan_matmul(m, k, n)
+    tr = plan.hbm_traffic_bytes(m, k, n)
+    compulsory = (m * k + k * n) * 2 + m * n * 2
+    assert tr >= compulsory * 0.99
+
+
+@hypothesis.given(st.data())
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_selective_scan_associative_split(data):
+    """For any split point, scan(prefix)+carry == scan(full) — the property
+    the chunked kernel and the decode path both rely on."""
+    length = data.draw(st.sampled_from([8, 16, 32]))
+    split = data.draw(st.integers(1, length - 1))
+    di, ds, b = 8, 4, 1
+    key = jax.random.PRNGKey(split)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, length, di)) * 0.1
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, length, di))) * 0.1
+    a = -jnp.exp(jax.random.normal(ks[2], (di, ds)) * 0.1)
+    bb = jax.random.normal(ks[3], (b, length, ds)) * 0.1
+    c = jax.random.normal(ks[4], (b, length, ds)) * 0.1
+    d = jnp.ones((di,))
+    full = ref.selective_scan_ref(x, dt, a, bb, c, d)
+    y1, h = ref.selective_scan_ref(x[:, :split], dt[:, :split], a,
+                                   bb[:, :split], c[:, :split], d,
+                                   return_state=True)
+    y2 = ref.selective_scan_ref(x[:, split:], dt[:, split:], a, bb[:, split:],
+                                c[:, split:], d, h0=h)
+    np.testing.assert_allclose(np.concatenate([y1, y2], 1), full,
+                               rtol=2e-4, atol=2e-4)
+
+
+@hypothesis.given(st.integers(2, 512), st.integers(2, 512))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_reuse_law_traffic_consistency(m_blocks, t):
+    """offchip_traffic == (2*loads_per_element*M^2 + M^2) * word — the two
+    published formulations of §VI-A agree."""
+    m = m_blocks * t                      # t | M, as in the paper
+    lpe = tiling.loads_per_element(m, t)
+    traffic = tiling.offchip_traffic_bytes(m, t)
+    assert traffic == (2 * lpe * m * m + m * m) * 4

@@ -1,0 +1,98 @@
+"""Analytic HBM traffic model (roofline memory term) sanity checks."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import traffic
+from repro.core.traffic import MeshDims
+
+MESH = MeshDims(pod=1, data=16, model=16)
+
+
+def test_train_components_positive():
+    cfg = get_config("yi-6b")
+    t = traffic.step_traffic(cfg, kind="train", seq_len=4096,
+                             global_batch=256, mesh=MESH, n_micro=8)
+    for k in ("params", "optimizer", "acts", "attn", "loss"):
+        assert t[k] > 0, k
+    assert t["cache"] == 0.0
+    assert t["total"] == pytest.approx(sum(v for k, v in t.items()
+                                           if k != "total"))
+
+
+def test_decode_reads_cache_not_logits_heavy():
+    cfg = get_config("yi-6b")
+    t = traffic.step_traffic(cfg, kind="decode", seq_len=32768,
+                             global_batch=128, mesh=MESH)
+    assert t["cache"] > 0
+    assert t["optimizer"] == 0
+
+
+def test_decode_cache_scales_with_seq():
+    cfg = get_config("yi-6b")
+    t1 = traffic.step_traffic(cfg, kind="decode", seq_len=8192,
+                              global_batch=128, mesh=MESH)
+    t2 = traffic.step_traffic(cfg, kind="decode", seq_len=32768,
+                              global_batch=128, mesh=MESH)
+    assert t2["cache"] == pytest.approx(4 * t1["cache"], rel=0.01)
+
+
+def test_mla_cache_smaller_than_gqa():
+    """MLA's latent cache (576/token) vs GQA at same scale — the pooled-
+    capacity play. deepseek kv=128 heads x 128 dim would be 32768 B/token
+    uncompressed; latent is 1152 B/token."""
+    ds = get_config("deepseek-v2-236b")
+    mla_bytes = traffic._cache_bytes_per_device(ds, 128, 32768, MESH)
+    import dataclasses
+    fake = dataclasses.replace(ds, use_mla=False)
+    gqa_bytes = traffic._cache_bytes_per_device(fake, 128, 32768, MESH)
+    assert mla_bytes < gqa_bytes / 20
+
+
+def test_window_caps_decode_attn_traffic():
+    gm = get_config("gemma3-27b")
+    t_local = traffic._decode_attn_traffic(gm, gm.kind_for_layer(0), 8,
+                                           524288, MESH)
+    t_global = traffic._decode_attn_traffic(gm, gm.kind_for_layer(5), 8,
+                                            524288, MESH)
+    assert gm.kind_for_layer(0).window == 1024
+    assert gm.kind_for_layer(5).window is None
+    assert t_local < t_global / 100
+
+
+def test_residency_train_fits_v5e():
+    """Static residency per device must fit a 16 GiB chip for every arch's
+    train_4k cell (quantized moments where the dry-run uses them).
+    jamba-1.5 (398B) is the one borderline case on a single 256-chip pod —
+    its optimizer state alone is ~2.8 TB; it must fit on the 512-chip
+    multi-pod mesh (which is how a 398B model would actually be trained)."""
+    from repro.launch.dryrun import TRAIN_OVERRIDES
+    from repro.configs import ARCH_IDS
+    multi = MeshDims(pod=2, data=16, model=16)
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        ov = TRAIN_OVERRIDES.get(arch, {})
+        mesh = multi if arch == "jamba-1.5-large-398b" else MESH
+        r = traffic.hbm_residency(cfg, kind="train", seq_len=4096,
+                                  global_batch=256, mesh=mesh,
+                                  quantized_moments=ov.get("quantized", False))
+        assert r["total"] < 16 * 2**30 * 0.9, (arch, r["total"] / 2**30)
+
+
+def test_residency_decode_fits_v5e():
+    from repro.configs import ARCH_IDS
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        r = traffic.hbm_residency(cfg, kind="decode", seq_len=32768,
+                                  global_batch=128, mesh=MESH)
+        assert r["total"] < 16 * 2**30 * 0.9, (arch, r["total"] / 2**30)
+
+
+def test_microbatching_multiplies_param_traffic():
+    cfg = get_config("qwen2.5-3b")
+    t1 = traffic.step_traffic(cfg, kind="train", seq_len=4096,
+                              global_batch=256, mesh=MESH, n_micro=1)
+    t8 = traffic.step_traffic(cfg, kind="train", seq_len=4096,
+                              global_batch=256, mesh=MESH, n_micro=8)
+    assert t8["params"] == pytest.approx(8 * t1["params"])
+    assert t8["acts"] == pytest.approx(t1["acts"], rel=0.01)
