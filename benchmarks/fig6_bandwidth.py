@@ -5,7 +5,8 @@ published points (43 % / 16 % / 8 % for 8 MiB vs 1 MiB)."""
 from __future__ import annotations
 
 from repro.core import perf_model
-from repro.core.hw_profiles import MiB
+from repro.core.hw_profiles import MiB, SPM_CAPACITIES_MIB
+from repro.core.target import get_target
 
 from benchmarks.common import fmt_table, save_artifact
 
@@ -14,7 +15,10 @@ PAPER_POINTS = {4: 1.43, 16: 1.16, 64: 1.08}
 
 
 def run() -> str:
-    table = perf_model.fig6_table()
+    # capacities come from the registered MemPool targets' scratchpad level
+    caps = [get_target(f"mempool-2d-{mib}mib").scratchpad_bytes // MiB
+            for mib in SPM_CAPACITIES_MIB]
+    table = perf_model.fig6_table(capacities_mib=caps)
     rows = []
     for bw, caps in table.items():
         marks = []

@@ -1,6 +1,7 @@
 """Kernel micro-benchmarks: wall time of the XLA reference path on CPU plus
-the planner's *predicted* TPU-v5e analytics (HBM traffic, arithmetic
-intensity, roofline time) per capacity-planned block configuration.
+the planner's *predicted* TPU analytics (HBM traffic, arithmetic intensity,
+roofline time) per capacity-planned block configuration, for a hardware
+target selected by name through the registry (default: the current target).
 
 Wall times on CPU are NOT the perf claim (this container has no TPU); they
 verify the code runs end-to-end and give a relative sanity signal. The
@@ -10,13 +11,13 @@ planner analytics columns are the quantities §Perf iterates on.
 from __future__ import annotations
 
 import time
-from typing import Callable, List
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import tiling
-from repro.core.hw_profiles import TPU_V5E
+from repro.core import planner
+from repro.core.target import get_target
 from repro.kernels import ops, ref
 
 from benchmarks.common import fmt_table, save_artifact
@@ -31,7 +32,11 @@ def _time(fn: Callable, *args, reps: int = 3) -> float:
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run() -> str:
+def run(target_name: Optional[str] = None) -> str:
+    target = get_target(target_name)
+    assert target.kind == "tpu", \
+        f"kernel bench needs a TPU target, got {target.name}"
+    prof = target.profile
     key = jax.random.PRNGKey(0)
     rows: List[List] = []
     arts = []
@@ -40,12 +45,12 @@ def run() -> str:
     for m, k, n in [(512, 512, 512), (1024, 2048, 1024), (2048, 2048, 2048)]:
         a = jax.random.normal(key, (m, k), jnp.float32)
         b = jax.random.normal(key, (k, n), jnp.float32)
-        plan = tiling.plan_matmul(m, k, n)
+        plan = planner.matmul_kernel_plan(m, k, n, target=target)
         us = _time(jax.jit(lambda a, b: ops.matmul(a, b, impl="ref")), a, b)
         traffic = plan.hbm_traffic_bytes(m, k, n)
         ai = plan.arithmetic_intensity(m, k, n)
-        roof_s = max(2 * m * k * n / TPU_V5E.peak_flops_bf16,
-                     traffic / TPU_V5E.hbm_bw)
+        roof_s = max(2 * m * k * n / prof.peak_flops_bf16,
+                     traffic / prof.hbm_bw)
         rows.append(["matmul", f"{m}x{k}x{n}",
                      f"({plan.bm},{plan.bk},{plan.bn})",
                      f"{us:.0f}", f"{traffic/2**20:.1f}", f"{ai:.0f}",
@@ -60,13 +65,13 @@ def run() -> str:
         q = jax.random.normal(key, (b_, h, s, d), jnp.bfloat16)
         kk = jax.random.normal(key, (b_, h, s, d), jnp.bfloat16)
         v = jax.random.normal(key, (b_, h, s, d), jnp.bfloat16)
-        plan = tiling.plan_attention(s, s, d)
+        plan = planner.attention_plan(s, s, d, target=target)
         us = _time(jax.jit(lambda q, k, v: ops.attention(q, k, v, impl="ref")),
                    q, kk, v)
         flops = 4.0 * b_ * h * s * s * d * 0.5          # causal half
         kv_bytes = b_ * h * s * d * 2 * 2 * (s // (2 * plan.block_q) + 1)
-        roof_s = max(flops / TPU_V5E.peak_flops_bf16,
-                     kv_bytes / TPU_V5E.hbm_bw)
+        roof_s = max(flops / prof.peak_flops_bf16,
+                     kv_bytes / prof.hbm_bw)
         rows.append(["attention", f"b{b_} h{h} s{s} d{d}",
                      f"(q{plan.block_q},kv{plan.block_kv})",
                      f"{us:.0f}", f"{kv_bytes/2**20:.1f}",
@@ -83,11 +88,11 @@ def run() -> str:
         bb = jax.random.normal(key, (b_, L, ds)) * 0.1
         c = jax.random.normal(key, (b_, L, ds)) * 0.1
         dd = jnp.ones((di,))
-        plan = tiling.plan_scan_chunk(L, di, ds)
+        plan = planner.scan_kernel_plan(L, di, ds, target=target)
         us = _time(jax.jit(lambda *t: ops.selective_scan(*t, impl="ref")),
                    x, dt, a_, bb, c, dd)
         stream = b_ * L * (4 * di + 2 * ds) * 2
-        roof_s = stream / TPU_V5E.hbm_bw
+        roof_s = stream / prof.hbm_bw
         rows.append(["mamba_scan", f"b{b_} L{L} di{di}", f"chunk={plan.chunk}",
                      f"{us:.0f}", f"{stream/2**20:.1f}", "-",
                      f"{roof_s*1e6:.1f}"])
@@ -97,12 +102,17 @@ def run() -> str:
     save_artifact("kernel_bench.json", arts)
     return fmt_table(
         ["kernel", "shape", "planned blocks", "cpu µs (ref)",
-         "HBM MiB (plan)", "arith.int.", "v5e roofline µs"],
-        rows, title="Kernel bench — capacity-planned blocks + v5e analytics")
+         "HBM MiB (plan)", "arith.int.", f"{target.name} roofline µs"],
+        rows,
+        title=f"Kernel bench — capacity-planned blocks + {target.name} "
+              "analytics")
 
 
 def main() -> None:
-    print(run())
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--target", default=None)
+    print(run(ap.parse_args().target))
 
 
 if __name__ == "__main__":

@@ -4,8 +4,8 @@
 from __future__ import annotations
 
 from repro.core import energy
-from repro.core.hw_profiles import MEMPOOL_PROFILES, SPM_CAPACITIES_MIB, \
-    mempool_profile
+from repro.core.hw_profiles import SPM_CAPACITIES_MIB
+from repro.core.target import get_target
 
 from benchmarks.common import fmt_table, pct, save_artifact
 
@@ -19,7 +19,9 @@ def run() -> str:
     rows = []
     arts = []
     for mib in SPM_CAPACITIES_MIB:
-        p2, p3 = mempool_profile("2D", mib), mempool_profile("3D", mib)
+        # select the flow targets by name through the registry
+        p2 = get_target(f"mempool-2d-{mib}mib").profile
+        p3 = get_target(f"mempool-3d-{mib}mib").profile
         fp_delta = p3.footprint_norm / p2.footprint_norm - 1
         freq_delta = p3.freq_norm / p2.freq_norm - 1
         pdp_delta = pdp[p3.name] / pdp[p2.name] - 1

@@ -20,7 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import energy, perf_model, tiling
-from repro.core.hw_profiles import MiB, TPU_V5E, mempool_profile
+from repro.core.hw_profiles import MiB
+from repro.core.target import get_target
 from repro.kernels import ops, ref
 
 
@@ -34,7 +35,9 @@ def main() -> int:
           f"{'cycles @16B/c':>14} {'perf 2D':>8} {'perf 3D':>8} "
           f"{'eff 3D':>7} {'EDP 3D':>7}")
     for mib in (1, 2, 4, 8):
-        t = tiling.mempool_tile_size(mib * MiB)
+        # the registered 3D target's cluster-SPM capacity drives the t-rule
+        target = get_target(f"mempool-3d-{mib}mib")
+        t = tiling.mempool_tile_size(target.scratchpad_bytes)
         cyc = perf_model.matmul_cycles(spm_bytes=mib * MiB,
                                        bw_bytes_per_cycle=16).total
         d2, d3 = energy.derive("2D", mib), energy.derive("3D", mib)
@@ -72,11 +75,10 @@ def main() -> int:
     print(f"{'VMEM budget':>12} {'blocks (bm,bk,bn)':>20} "
           f"{'HBM traffic':>12} {'arith.int.':>10}")
     m3 = 8192
-    import dataclasses
+    tpu = get_target("tpu-v5e")
     for frac in (0.125, 0.25, 0.5, 0.75):
-        prof = dataclasses.replace(TPU_V5E, vmem_bytes=int(128 * MiB))
-        plan = tiling.plan_matmul(m3, m3, m3, profile=prof,
-                                  vmem_fraction=frac)
+        plan = tiling.plan_matmul(m3, m3, m3,
+                                  partition=tpu.partition(fraction=frac))
         tr = plan.hbm_traffic_bytes(m3, m3, m3)
         ai = plan.arithmetic_intensity(m3, m3, m3)
         print(f"{frac * 128:>9.0f}Mi {str((plan.bm, plan.bk, plan.bn)):>20} "

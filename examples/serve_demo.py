@@ -48,7 +48,7 @@ def main() -> int:
                  "seamless-m4t-medium"):
         demo(arch)
     print("\nnote the SSM row: its decode state is O(1) in sequence length —"
-          "\nwhy falcon-mamba/jamba run the long_500k cell (DESIGN.md §4).")
+          "\nwhy falcon-mamba/jamba run the long_500k cell (DESIGN.md §Shape-cell skip rules).")
     return 0
 
 

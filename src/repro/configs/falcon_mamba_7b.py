@@ -2,7 +2,7 @@
 
 64L d_model=4096 (attn-free) vocab=65024, ssm_state=16. Attention-free:
 the planner's attention tiling is inapplicable; the same capacity rule sizes
-the scan chunk instead (DESIGN.md §Arch-applicability). Runs long_500k.
+the scan chunk instead (DESIGN.md §Shape-cell skip rules). Runs long_500k.
 """
 
 from repro.models.config import ModelConfig

@@ -1,7 +1,7 @@
 """seamless-m4t-medium [audio] — enc-dec, multimodal [arXiv:2308.11596; hf].
 
 12L d_model=1024 16H (GQA kv=16) d_ff=4096 vocab=256206. Realized as 12
-encoder + 12 decoder layers (DESIGN.md §7.5); the speech frontend is a stub
+encoder + 12 decoder layers (DESIGN.md §Shape-cell skip rules); the speech frontend is a stub
 providing precomputed frame embeddings.
 """
 

@@ -1,12 +1,18 @@
 """MemPool-3D core: hardware profiles, capacity-aware tiling, perf/energy models."""
 
-from repro.core.hw_profiles import (MEMPOOL_PROFILES, TPU_V5E, TPU_V5P,
+from repro.core.hw_profiles import (MEMPOOL_PROFILES, TPU_PROFILES,
                                     MemPoolProfile, TpuProfile,
                                     get_tpu_profile, mempool_profile)
+from repro.core.target import (CapacityPartition, HardwareTarget,
+                               MemoryHierarchy, MemoryLevel,
+                               available_targets, get_target, set_target,
+                               use_target)
 from repro.core.tiling import (AttentionPlan, MatmulPlan, ScanChunkPlan,
                                mempool_tile_size, plan_attention, plan_matmul,
                                plan_scan_chunk)
 from repro.core.perf_model import matmul_cycles, fig6_table, speedup_vs_baseline
 from repro.core.energy import derive, derive_all, pdp_table
 from repro.core.area_model import partition_tile, table1
-from repro.core.planner import KernelPlans, Mem3DPlanner, RooflineReport
+from repro.core.planner import (KernelPlans, Mem3DPlanner, RooflineReport,
+                                attention_kernel_plan, attention_plan,
+                                matmul_kernel_plan, scan_kernel_plan)

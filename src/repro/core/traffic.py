@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional
 
-from repro.core import tiling
+from repro.core import planner
 from repro.models.config import LayerKind, ModelConfig
 
 BF16 = 2
@@ -81,7 +81,7 @@ def _attn_traffic_layer(cfg: ModelConfig, kind: LayerKind, t_dev: int,
     else:
         hq, hkv, d_kv = cfg.n_heads, max(cfg.n_kv_heads, 1), cfg.head_dim
         d_k = d_v = cfg.head_dim
-    plan = tiling.plan_attention(max(sq, 1), skv, int(d_kv))
+    plan = planner.attention_plan(max(sq, 1), skv, int(d_kv))
     r = _visible_kv(sq, skv, plan.block_q, plan.block_kv, True, kind.window)
     batch_dev = max(t_dev // max(sq, 1), 1)
     hq_dev = max(hq / mesh.model, 1.0)

@@ -13,7 +13,7 @@ back to replication (e.g. 4 KV heads on a 16-way model axis).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -22,6 +22,67 @@ from jax.sharding import PartitionSpec as P
 DATA_AXIS = "data"
 MODEL_AXIS = "model"
 POD_AXIS = "pod"
+
+
+# ---------------------------------------------------------------------------
+# jax version compatibility. jax.sharding.AxisType, jax.set_mesh and
+# jax.sharding.get_abstract_mesh only exist on newer jax; these shims keep a
+# single code path across versions (the seed's 42-failure AttributeError
+# storm on jax 0.4.x came from calling them unconditionally).
+# ---------------------------------------------------------------------------
+
+
+def axis_types_kwargs(n_axes: int, explicit: bool = False) -> Dict[str, Any]:
+    """``axis_types=`` kwargs for jax.make_mesh, or {} where unsupported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    kind = axis_type.Explicit if explicit else axis_type.Auto
+    return {"axis_types": (kind,) * n_axes}
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str], *,
+              devices: Optional[Sequence] = None,
+              explicit: bool = False) -> jax.sharding.Mesh:
+    """jax.make_mesh with axis_types only where the running jax supports it."""
+    return jax.make_mesh(tuple(shape), tuple(axes), devices=devices,
+                         **axis_types_kwargs(len(axes), explicit))
+
+
+def use_mesh(mesh: jax.sharding.Mesh):
+    """Context manager activating ``mesh`` as the ambient mesh."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh   # older jax: Mesh itself is the context manager
+
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # older jax: experimental namespace, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    def shard_map(f, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        axis_names = kwargs.pop("axis_names", None)
+        if axis_names is not None:  # old spelling: auto = the complement
+            mesh_axes = frozenset(kwargs["mesh"].axis_names)
+            kwargs["auto"] = mesh_axes - frozenset(axis_names)
+        return _experimental_shard_map(f, **kwargs)
+
+
+def ambient_mesh():
+    """The ambient (context/thread-local) mesh, or None outside any."""
+    get_abs = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abs is not None:
+        return get_abs()
+    try:  # older jax: the pjit-era thread-local physical mesh
+        from jax._src import mesh as _mesh_lib
+        env_mesh = _mesh_lib.thread_resources.env.physical_mesh
+    except Exception:
+        return None
+    return None if env_mesh.empty else env_mesh
 
 #: batch-dimension sharding: span the pod axis too (multi-pod data
 #: parallelism). shard()/_fix_spec drop axes absent from the ambient mesh,
@@ -73,7 +134,7 @@ def shard(x: jax.Array, *spec) -> jax.Array:
     Axis names absent from the mesh are dropped from the spec; dims that do
     not divide the axis size are replicated.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = ambient_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     fixed = _fix_spec(_apply_layout(tuple(spec)), x.shape, mesh)

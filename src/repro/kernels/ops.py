@@ -5,18 +5,23 @@ compiled on TPU) or to the pure-jnp oracle. The dispatch default — oracle on
 CPU, Pallas on TPU — keeps tests fast while exercising identical math; kernel
 sweeps in tests/test_kernels.py pin ``impl="pallas"`` to validate the kernels
 themselves.
+
+Block plans come from the LRU plan cache in :mod:`repro.core.planner`, keyed
+on (current hardware target, shapes, dtypes): repeated calls with the same
+problem reuse the same plan object instead of re-planning, and callers that
+hold a :class:`~repro.core.planner.KernelPlans` (models/serving thread them
+from build time) pass it via ``plan=``; it is clamped to the concrete shapes
+by the planner's shared pad/clamp helpers.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import tiling
-from repro.core.hw_profiles import TPU_V5E
+from repro.core import planner, tiling
 from repro.kernels import ref
 from repro import runtime_flags
 from repro.kernels.flash_attention import flash_attention as _flash
@@ -55,12 +60,12 @@ def matmul(a: jax.Array, b: jax.Array, *,
         return ref.matmul_ref(a, b, out_dtype)
     m, k = a.shape
     _, n = b.shape
-    plan = plan or tiling.plan_matmul(m, k, n, profile=TPU_V5E,
-                                      in_bytes=a.dtype.itemsize)
-    bm, bk, bn = min(plan.bm, m), min(plan.bk, k), min(plan.bn, n)
-    ap = _pad_to(_pad_to(a, 0, bm), 1, bk)
-    bp = _pad_to(_pad_to(b, 0, bk), 1, bn)
-    eff = tiling.MatmulPlan(bm, bk, bn, plan.n_buffers)
+    if plan is None:
+        eff = planner.matmul_kernel_plan(m, k, n, in_bytes=a.dtype.itemsize)
+    else:
+        eff = planner.clamp_matmul_plan(plan, m, k, n)
+    ap = _pad_to(_pad_to(a, 0, eff.bm), 1, eff.bk)
+    bp = _pad_to(_pad_to(b, 0, eff.bk), 1, eff.bn)
     out = _matmul(ap, bp, plan=eff, out_dtype=out_dtype or a.dtype,
                   interpret=not _on_tpu())
     return out[:m, :n]
@@ -95,14 +100,11 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                                  scale=scale, q_offset=q_offset)
     _, _, sq, d = q.shape
     skv = k.shape[2]
-    plan = plan or tiling.plan_attention(sq, skv, d, profile=TPU_V5E)
-    bq = min(plan.block_q, max(sq, 1))
-    bkv = min(plan.block_kv, skv)
-    while sq % bq:
-        bq //= 2
-    while skv % bkv:
-        bkv //= 2
-    eff = tiling.AttentionPlan(max(bq, 1), max(bkv, 1))
+    if plan is None:
+        eff = planner.attention_kernel_plan(sq, skv, d,
+                                            in_bytes=q.dtype.itemsize)
+    else:
+        eff = planner.clamp_attention_plan(plan, sq, skv)
     return _flash(q, k, v, plan=eff, causal=causal, window=window,
                   scale=scale, q_offset=q_offset, interpret=not _on_tpu())
 
@@ -120,12 +122,12 @@ def selective_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
                                       return_state=return_state)
     bsz, length, di = x.shape
     ds = a.shape[1]
-    plan = plan or tiling.plan_scan_chunk(length, di, ds, profile=TPU_V5E)
-    chunk = min(plan.chunk, length)
-    while length % chunk:
-        chunk //= 2
+    if plan is None:
+        eff = planner.scan_kernel_plan(length, di, ds)
+    else:
+        eff = planner.clamp_scan_plan(plan, length)
     bd = 128
     while di % bd:
         bd //= 2
-    return _scan(x, dt, a, b, c, d, plan=tiling.ScanChunkPlan(max(chunk, 1)),
-                 block_d=max(bd, 1), interpret=not _on_tpu())
+    return _scan(x, dt, a, b, c, d, plan=eff, block_d=max(bd, 1),
+                 interpret=not _on_tpu())

@@ -35,8 +35,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core import traffic
-from repro.core.hw_profiles import TPU_V5E
-from repro.core.planner import RooflineReport
+from repro.core.planner import RooflineReport, attention_plan
+from repro.core.target import get_target, set_target
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
@@ -91,13 +91,12 @@ def attn_traffic_correction(cfg, shape, cost_block: int) -> float:
     """Bytes to ADD to the measured cost-mode HBM traffic: the real Pallas
     plan uses smaller KV blocks (scores must fit VMEM), so KV re-reads exceed
     what the capped-trip cost lowering streamed. Exact block-count delta."""
-    from repro.core import tiling as T
     if shape.kind != "prefill" or cfg.n_heads == 0:
         return 0.0  # train_4k/decode lower the exact direct path
     sq = skv = shape.seq_len
     d = cfg.head_dim if not cfg.use_mla else (
         cfg.qk_nope_head_dim + cfg.qk_rope_head_dim + cfg.v_head_dim) // 2
-    plan = T.plan_attention(sq, skv, d)
+    plan = attention_plan(sq, skv, d)
     delta = 0.0
     for i in range(cfg.n_layers):
         kind = cfg.kind_for_layer(i)
@@ -411,7 +410,7 @@ def _dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     # --- A: memory lowering (full depth) ------------------------------------
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with shd.use_mesh(mesh):
         compiled_mem = _lower_cell(model, shape, mesh, ov).compile()
     t_mem = time.time() - t0
     mem = compiled_mem.memory_analysis()
@@ -428,7 +427,7 @@ def _dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
         for k in (1, 2):
             cfg_k, full_reps = _scaled_cfg(cfg, k)
             model_k = build_model(cfg_k)
-            with jax.set_mesh(mesh):
+            with shd.use_mesh(mesh):
                 compiled_k = _lower_cell(model_k, shape, mesh, ov,
                                          n_micro_override=1).compile()
             cost_k = compiled_k.cost_analysis()
@@ -470,17 +469,20 @@ def _dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
     else:
         model_flops = 2.0 * active_params * tokens
 
+    target = get_target()
+    assert target.kind == "tpu", f"dry-run needs a TPU target, got {target.name}"
     report = RooflineReport(
         name=f"{arch}/{shape_name}", n_chips=n_chips,
         hlo_flops=flops * n_chips,          # cost_analysis is per-device
         hlo_bytes=hbm["total"] * n_chips,   # analytic TPU traffic model
         collective_bytes=(intra + regather) * n_chips,
         pod_collective_bytes=cross * n_chips,
-        model_flops=model_flops, profile=TPU_V5E)
+        model_flops=model_flops, profile=target.profile)
 
     rec = {
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
+        "target": target.name,
         "status": "ok",
         "compile_mem_s": round(t_mem, 1), "compile_cost_s": round(t_cost, 1),
         "n_microbatches": n_micro,
@@ -517,8 +519,13 @@ def main() -> int:
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="single")
+    ap.add_argument("--target", default=None,
+                    help="hardware target name from the registry "
+                         "(default: current target, e.g. tpu-v5e)")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
+    if args.target:
+        set_target(args.target)
 
     archs = [args.arch] if args.arch else list(ARCH_IDS)
     shapes = [args.shape] if args.shape else list(SHAPES)

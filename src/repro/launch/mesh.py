@@ -12,6 +12,8 @@ from typing import Optional, Sequence
 
 import jax
 
+from repro.distributed.sharding import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False,
                          devices: Optional[Sequence] = None) -> jax.sharding.Mesh:
@@ -26,15 +28,11 @@ def make_production_mesh(*, multi_pod: bool = False,
         raise RuntimeError(
             f"need {n} devices for mesh {shape}, have {len(devices)} "
             "(dry-run must set --xla_force_host_platform_device_count)")
-    return jax.make_mesh(
-        shape, axes, devices=devices[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, devices=devices[:n])
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over whatever devices exist (tests / examples)."""
     n = data * model
     devices = jax.devices()[:n]
-    return jax.make_mesh(
-        (data, model), ("data", "model"), devices=devices,
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"), devices=devices)

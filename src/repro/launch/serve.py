@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.distributed import sharding as shd
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.serve.engine import Engine, EngineConfig
@@ -34,7 +35,7 @@ def main(argv=None) -> int:
     d_mesh, m_mesh = (int(x) for x in args.mesh.split("x"))
     mesh = make_host_mesh(d_mesh, m_mesh)
 
-    with jax.set_mesh(mesh):
+    with shd.use_mesh(mesh):
         params = model.init(jax.random.PRNGKey(0))
         max_len = args.prompt_len + args.gen_len + cfg.frontend_len
         engine = Engine(model, params, EngineConfig(max_len=max_len))

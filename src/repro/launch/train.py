@@ -73,7 +73,7 @@ def main(argv=None) -> int:
                                if args.fail_at is not None else ())
     detector = StragglerDetector()
 
-    with jax.set_mesh(mesh):
+    with shd.use_mesh(mesh):
         params = model.init(jax.random.PRNGKey(0))
         params = jax.device_put(params, shd.named_shardings(params, mesh))
         state = opt_mod.init_opt_state(params, tcfg.opt)

@@ -12,6 +12,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.planner import KernelPlans, Mem3DPlanner
+from repro.core.target import HardwareTarget
 from repro.models import encdec, frontends, transformer
 from repro.models.config import ModelConfig
 
@@ -35,10 +37,37 @@ SHAPES: Dict[str, ShapeCfg] = {
 
 
 class Model:
-    """Family-dispatching facade over the substrate."""
+    """Family-dispatching facade over the substrate.
 
-    def __init__(self, cfg: ModelConfig):
+    The model owns a :class:`Mem3DPlanner` for the given hardware target
+    (default: the process-wide current target). Kernel block plans are
+    obtained ONCE per distinct (seq_q, seq_kv) through the planner's LRU
+    cache and threaded into every kernel call, instead of each op
+    re-planning per invocation.
+    """
+
+    def __init__(self, cfg: ModelConfig,
+                 target: Optional[HardwareTarget] = None):
         self.cfg = cfg
+        self.planner = Mem3DPlanner(target)
+
+    # ------------------------------------------------------------ plans
+    def kernel_plans(self, seq_q: int, seq_kv: Optional[int] = None, *,
+                     tokens: Optional[int] = None) -> KernelPlans:
+        """Capacity-partitioned block plans for this arch at one shape cell."""
+        cfg = self.cfg
+        seq_kv = seq_q if seq_kv is None else seq_kv
+        if cfg.use_mla:
+            head_dim = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+                        + cfg.v_head_dim) // 2
+        else:
+            head_dim = cfg.head_dim if cfg.n_heads else 0
+        return self.planner.plan_for(
+            d_model=cfg.d_model, d_ff=max(cfg.d_ff, cfg.moe_d_ff),
+            seq_q=max(seq_q, 1), seq_kv=max(seq_kv, 1), head_dim=head_dim,
+            tokens_per_device=max(tokens or seq_q, 1),
+            ssm_d_inner=cfg.ssm_d_inner if cfg.ssm_d_state else 0,
+            ssm_d_state=cfg.ssm_d_state)
 
     # ------------------------------------------------------------- init
     def init(self, key) -> Any:
@@ -48,48 +77,64 @@ class Model:
 
     # ------------------------------------------------------------- loss
     def loss(self, params, batch: Dict[str, jax.Array], *,
-             remat: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+             remat: bool = True,
+             plans: Optional[KernelPlans] = None
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
         cfg = self.cfg
         if cfg.family == "encdec":
+            s = batch["src_embeds"].shape[1]
+            plans = plans or self.kernel_plans(s)
             return encdec.encdec_loss(cfg, params, batch["src_embeds"],
                                       batch["tokens"], batch["labels"],
-                                      remat=remat)
+                                      remat=remat, plans=plans)
+        s = batch["tokens"].shape[1] + cfg.frontend_len
+        plans = plans or self.kernel_plans(s)
         return transformer.lm_loss(cfg, params, batch["tokens"],
                                    batch["labels"],
                                    frontend_embeds=batch.get("frontend_embeds"),
-                                   remat=remat)
+                                   remat=remat, plans=plans)
 
     # ---------------------------------------------------------- serving
-    def prefill(self, params, batch: Dict[str, jax.Array], max_len: int):
+    def prefill(self, params, batch: Dict[str, jax.Array], max_len: int, *,
+                plans: Optional[KernelPlans] = None):
         cfg = self.cfg
         if cfg.family == "encdec":
+            s = batch["src_embeds"].shape[1]
+            plans = plans or self.kernel_plans(s, max_len)
             enc_out = encdec.encode(cfg, params, batch["src_embeds"],
-                                    remat=False)
+                                    remat=False, plans=plans)
             caches = encdec.init_dec_caches(cfg, batch["tokens"].shape[0],
                                             max_len)
             x, caches = encdec.decode(cfg, params, batch["tokens"], enc_out,
-                                      caches=caches, cache_len=0, remat=False)
+                                      caches=caches, cache_len=0, remat=False,
+                                      plans=plans)
             from repro.models import layers
             logits = layers.unembed_logits(params["tok"], x[:, -1:])
             return logits, {"caches": caches, "enc_out": enc_out}
+        s = batch["tokens"].shape[1] + cfg.frontend_len
+        plans = plans or self.kernel_plans(s, max_len)
         x, caches = transformer.prefill(cfg, params, batch["tokens"], max_len,
-                                        frontend_embeds=batch.get("frontend_embeds"))
+                                        frontend_embeds=batch.get("frontend_embeds"),
+                                        plans=plans)
         from repro.models import layers
         logits = layers.unembed_logits(params["tok"], x[:, -1:])
         return logits, {"caches": caches}
 
     def decode_step(self, params, tokens: jax.Array, state: Dict[str, Any],
-                    cache_len: jax.Array):
+                    cache_len: jax.Array, *,
+                    plans: Optional[KernelPlans] = None):
         cfg = self.cfg
         if cfg.family == "encdec":
             x, caches = encdec.decode(cfg, params, tokens, state["enc_out"],
                                       caches=state["caches"],
-                                      cache_len=cache_len, remat=False)
+                                      cache_len=cache_len, remat=False,
+                                      plans=plans)
             from repro.models import layers
             logits = layers.unembed_logits(params["tok"], x)
             return logits, {**state, "caches": caches}
         logits, caches = transformer.decode_step(cfg, params, tokens,
-                                                 state["caches"], cache_len)
+                                                 state["caches"], cache_len,
+                                                 plans=plans)
         return logits, {**state, "caches": caches}
 
     # ------------------------------------------------------ input specs
@@ -142,5 +187,6 @@ class Model:
         return tuple(shapes)
 
 
-def build_model(cfg: ModelConfig) -> Model:
-    return Model(cfg)
+def build_model(cfg: ModelConfig,
+                target: Optional[HardwareTarget] = None) -> Model:
+    return Model(cfg, target)

@@ -17,6 +17,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import tiling
 from repro.distributed.sharding import BATCH, shard
 from repro.kernels import ops
 from repro.models import layers
@@ -75,7 +76,9 @@ def gqa_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
                   cache_len: Optional[jax.Array] = None,
                   positions3: Optional[jax.Array] = None,
                   cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
-                  causal: bool = True) -> Tuple[jax.Array, Optional[Dict]]:
+                  causal: bool = True,
+                  plan: Optional[tiling.AttentionPlan] = None,
+                  ) -> Tuple[jax.Array, Optional[Dict]]:
     """x: (B, S, d). Returns (out, updated_cache).
 
     Modes: training/prefill (cache=None, full seq); decode (cache given,
@@ -129,7 +132,8 @@ def gqa_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
                                 causal=causal)
     else:
         out = ops.attention(q, k, v, causal=causal and cross_kv is None,
-                            window=kind.window, q_offset=int(q_offset))
+                            window=kind.window, q_offset=int(q_offset),
+                            plan=plan)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
     out = linear(out, p["wo"])
     return shard(out, BATCH, None, None), new_cache
@@ -198,6 +202,7 @@ def mla_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
                   positions: jax.Array,
                   cache: Optional[Dict] = None,
                   cache_len: Optional[jax.Array] = None,
+                  plan: Optional[tiling.AttentionPlan] = None,
                   **_unused) -> Tuple[jax.Array, Optional[Dict]]:
     """Multi-head latent attention. Cache stores only the 576-dim latent —
     the paper's 'more capacity in the same footprint', algorithmically."""
@@ -264,7 +269,7 @@ def mla_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
         k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
         q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
         out = ops.attention(q_full, k, v, causal=True, window=kind.window,
-                            scale=scale, q_offset=int(q_offset))
+                            scale=scale, q_offset=int(q_offset), plan=plan)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, h * vdim)
     return linear(out, p["wo"]), new_cache
 

@@ -15,6 +15,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.planner import KernelPlans
 from repro.distributed.sharding import BATCH, shard
 from repro.models import attention as attn_mod
 from repro import runtime_flags
@@ -63,16 +64,19 @@ def init_encdec(cfg: ModelConfig, key) -> Params:
 
 
 def encode(cfg: ModelConfig, params: Params, src_embeds: jax.Array,
-           *, remat: bool = True) -> jax.Array:
+           *, remat: bool = True,
+           plans: Optional[KernelPlans] = None) -> jax.Array:
     """src_embeds: (B, Ss, d) frame embeddings from the (stub) frontend."""
     b, s, _ = src_embeds.shape
+    attn_plan = plans.attention if plans else None
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
     x = shard(src_embeds.astype(layers.COMPUTE_DTYPE), BATCH, None, None)
 
     def body(x, p):
         h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
         y, _ = attn_mod.gqa_attention(p["attn"], h, cfg=cfg, kind=_KIND,
-                                      positions=positions, causal=False)
+                                      positions=positions, causal=False,
+                                      plan=attn_plan)
         x = x + y
         x = x + layers.mlp(p["mlp"], layers.rmsnorm(p["ln2"], x, cfg.norm_eps))
         return x, None
@@ -96,10 +100,11 @@ def _cross_kv(cfg: ModelConfig, p: Params, enc_out: jax.Array):
 
 def decode(cfg: ModelConfig, params: Params, tokens: jax.Array,
            enc_out: jax.Array, *, caches=None, cache_len=None,
-           remat: bool = True):
+           remat: bool = True, plans: Optional[KernelPlans] = None):
     """Decoder stack. Returns (x, new_caches)."""
     x = layers.embed(params["tok"], tokens)
     b, s, _ = x.shape
+    attn_plan = plans.attention if plans else None
     start = cache_len if cache_len is not None else 0
     positions = start + jnp.arange(s, dtype=jnp.int32)[None, :]
     positions = jnp.broadcast_to(positions, (b, s))
@@ -110,13 +115,13 @@ def decode(cfg: ModelConfig, params: Params, tokens: jax.Array,
         h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
         y, nc = attn_mod.gqa_attention(p["attn"], h, cfg=cfg, kind=_KIND,
                                        positions=positions, cache=cache,
-                                       cache_len=cache_len)
+                                       cache_len=cache_len, plan=attn_plan)
         x = x + y
         h = layers.rmsnorm(p["lnx"], x, cfg.norm_eps)
         kv = _cross_kv(cfg, p["xattn"], enc_out)
         y, _ = attn_mod.gqa_attention(p["xattn"], h, cfg=cfg, kind=_KIND,
                                       positions=positions, cross_kv=kv,
-                                      causal=False)
+                                      causal=False, plan=attn_plan)
         x = x + y
         x = x + layers.mlp(p["mlp"], layers.rmsnorm(p["ln2"], x, cfg.norm_eps))
         return x, nc
@@ -131,9 +136,9 @@ def decode(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
 def encdec_loss(cfg: ModelConfig, params: Params, src_embeds: jax.Array,
                 tokens: jax.Array, labels: jax.Array, *, remat: bool = True,
-                loss_chunk: int = 2048):
-    enc_out = encode(cfg, params, src_embeds, remat=remat)
-    x, _ = decode(cfg, params, tokens, enc_out, remat=remat)
+                loss_chunk: int = 2048, plans: Optional[KernelPlans] = None):
+    enc_out = encode(cfg, params, src_embeds, remat=remat, plans=plans)
+    x, _ = decode(cfg, params, tokens, enc_out, remat=remat, plans=plans)
     from repro.models.transformer import lm_loss as _  # noqa: F401 (layout)
     # chunked xent (same as decoder-only path)
     b, s, d = x.shape

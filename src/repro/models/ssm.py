@@ -14,6 +14,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import tiling
 from repro.distributed.sharding import BATCH, shard
 from repro.kernels import ops
 from repro.models.config import ModelConfig
@@ -63,6 +64,7 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
 
 def mamba_block(p: Dict, x: jax.Array, *, cfg: ModelConfig,
                 cache: Optional[Dict] = None,
+                plan: Optional[tiling.ScanChunkPlan] = None,
                 **_unused) -> Tuple[jax.Array, Optional[Dict]]:
     """x: (B, S, d) -> (out, new_cache)."""
     b, s, _ = x.shape
@@ -94,7 +96,7 @@ def mamba_block(p: Dict, x: jax.Array, *, cfg: ModelConfig,
         new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
                      "ssm": h_t}
     else:
-        y = ops.selective_scan(xs, dt, a, bmat, cmat, p["ssm_d"])
+        y = ops.selective_scan(xs, dt, a, bmat, cmat, p["ssm_d"], plan=plan)
         new_cache = None
 
     y = y * jax.nn.silu(z)

@@ -20,6 +20,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.planner import KernelPlans
 from repro.distributed.sharding import BATCH, shard
 from repro.models import attention as attn_mod
 from repro import runtime_flags
@@ -74,16 +75,20 @@ def init_lm(cfg: ModelConfig, key) -> Params:
 # ----------------------------------------------------------- layer apply
 
 def _apply_layer(cfg: ModelConfig, kind: LayerKind, p: Params, x: jax.Array,
-                 *, positions, positions3, cache, cache_len):
+                 *, positions, positions3, cache, cache_len,
+                 plans: Optional[KernelPlans] = None):
     """Returns (x, aux, new_cache)."""
     aux = jnp.zeros((), jnp.float32)
     h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
     if kind.attn == "mamba":
-        y, new_attn_cache = ssm.mamba_block(p["mamba"], h, cfg=cfg, cache=cache)
+        y, new_attn_cache = ssm.mamba_block(
+            p["mamba"], h, cfg=cfg, cache=cache,
+            plan=plans.scan_chunk if plans else None)
     else:
         y, new_attn_cache = attn_mod.APPLY[kind.attn](
             p["attn"], h, cfg=cfg, kind=kind, positions=positions,
-            positions3=positions3, cache=cache, cache_len=cache_len)
+            positions3=positions3, cache=cache, cache_len=cache_len,
+            plan=plans.attention if plans else None)
     x = x + y
     if kind.mlp == "mlp":
         x = x + layers.mlp(p["mlp"], layers.rmsnorm(p["ln2"], x, cfg.norm_eps))
@@ -97,7 +102,7 @@ def _apply_layer(cfg: ModelConfig, kind: LayerKind, p: Params, x: jax.Array,
 
 def _superblock(cfg: ModelConfig, group: LayerGroup, stacked: Params,
                 x: jax.Array, caches, cache_len, positions, positions3,
-                aux: jax.Array):
+                aux: jax.Array, plans: Optional[KernelPlans] = None):
     """Apply one repetition of ``group.pattern``. stacked/caches are the
     per-repetition slices (no leading axis here)."""
     new_caches = {}
@@ -105,7 +110,8 @@ def _superblock(cfg: ModelConfig, group: LayerGroup, stacked: Params,
         cache_i = caches.get(f"pos{pos}") if caches else None
         x, aux_i, nc = _apply_layer(cfg, kind, stacked[f"pos{pos}"], x,
                                     positions=positions, positions3=positions3,
-                                    cache=cache_i, cache_len=cache_len)
+                                    cache=cache_i, cache_len=cache_len,
+                                    plans=plans)
         aux = aux + aux_i
         if nc is not None:
             new_caches[f"pos{pos}"] = nc
@@ -114,7 +120,7 @@ def _superblock(cfg: ModelConfig, group: LayerGroup, stacked: Params,
 
 def _run_groups(cfg: ModelConfig, params: Params, x: jax.Array, *,
                 positions, positions3=None, caches=None, cache_len=None,
-                remat: bool = True):
+                remat: bool = True, plans: Optional[KernelPlans] = None):
     aux = jnp.zeros((), jnp.float32)
     new_caches: Dict[str, Any] = {}
     for group in cfg.layer_groups():
@@ -125,7 +131,8 @@ def _run_groups(cfg: ModelConfig, params: Params, x: jax.Array, *,
             xc, auxc = carry
             p_slice, c_slice = xs
             xo, auxo, nc = _superblock(cfg, _group, p_slice, xc, c_slice,
-                                       cache_len, positions, positions3, auxc)
+                                       cache_len, positions, positions3, auxc,
+                                       plans)
             return (xo, auxo), nc
 
         if remat:
@@ -144,7 +151,8 @@ def _run_groups(cfg: ModelConfig, params: Params, x: jax.Array, *,
 def forward(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
             frontend_embeds: Optional[jax.Array] = None,
             caches=None, cache_len=None, remat: bool = True,
-            positions: Optional[jax.Array] = None):
+            positions: Optional[jax.Array] = None,
+            plans: Optional[KernelPlans] = None):
     """tokens: (B, S) int32. Optional frontend prefix embeds (B, Sf, d) are
     concatenated before the token embeddings (vlm/audio stubs).
 
@@ -164,19 +172,22 @@ def forward(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
         positions3 = jnp.broadcast_to(positions[None], (3, b, s))
     x, aux, new_caches = _run_groups(cfg, params, x, positions=positions,
                                      positions3=positions3, caches=caches,
-                                     cache_len=cache_len, remat=remat)
+                                     cache_len=cache_len, remat=remat,
+                                     plans=plans)
     x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     return x, aux, new_caches
 
 
 def lm_loss(cfg: ModelConfig, params: Params, tokens: jax.Array,
             labels: jax.Array, *, frontend_embeds=None, remat: bool = True,
-            loss_chunk: int = 2048) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+            loss_chunk: int = 2048,
+            plans: Optional[KernelPlans] = None
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Causal LM loss. labels: (B, S) int32, -1 = ignore. The vocab
     projection + softmax runs in sequence chunks so the (tokens x vocab)
     logits tensor never materializes whole (capacity-aware, VMEM-sized)."""
     x, aux, _ = forward(cfg, params, tokens, frontend_embeds=frontend_embeds,
-                        remat=remat)
+                        remat=remat, plans=plans)
     if frontend_embeds is not None:
         pad = jnp.full(frontend_embeds.shape[:2], -1, labels.dtype)
         labels = jnp.concatenate([pad, labels], axis=1)
@@ -243,21 +254,24 @@ def _round_up(x: int, m: int) -> int:
 
 
 def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
-            max_len: int, *, frontend_embeds=None):
+            max_len: int, *, frontend_embeds=None,
+            plans: Optional[KernelPlans] = None):
     """Run the full prompt, building caches. Returns (x_last, caches)."""
     caches = init_caches(cfg, tokens.shape[0], max_len)
     # cache_len=0 is a *python* int here: prefill takes the static-offset
     # (blockwise-flash) attention path, not the traced decode path.
     x, aux, caches = forward(cfg, params, tokens,
                              frontend_embeds=frontend_embeds,
-                             caches=caches, cache_len=0, remat=False)
+                             caches=caches, cache_len=0, remat=False,
+                             plans=plans)
     return x, caches
 
 
 def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
-                caches, cache_len: jax.Array):
+                caches, cache_len: jax.Array,
+                plans: Optional[KernelPlans] = None):
     """One decode step. tokens: (B, 1). Returns (logits (B,1,Vpad), caches)."""
     x, _, new_caches = forward(cfg, params, tokens, caches=caches,
-                               cache_len=cache_len, remat=False)
+                               cache_len=cache_len, remat=False, plans=plans)
     logits = layers.unembed_logits(params["tok"], x)
     return logits, new_caches

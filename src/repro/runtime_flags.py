@@ -23,3 +23,8 @@ def scan_unroll(length: int) -> int:
 
 def cost_attn_block() -> int:
     return int(os.environ.get("REPRO_COST_ATTN_BLOCK", "8192"))
+
+
+def target_name() -> str | None:
+    """Hardware-target override for repro.core.target.get_target()."""
+    return os.environ.get("REPRO_TARGET") or None

@@ -1,15 +1,20 @@
 """Batched serving engine: prefill + greedy decode over the pooled KV cache.
 
-The cache layout is the pooled-memory design (DESIGN.md): sequence dim
-sharded across the `model` axis (and `data` for batch-1 long contexts), so
-aggregate pod HBM is one big KV pool — MemPool's shared L1, at cluster scale.
-Continuous batching (slot reuse) is kept minimal but real: finished rows are
-immediately refillable via their slot mask.
+The cache layout is the pooled-memory design (DESIGN.md §Pooled KV cache):
+sequence dim sharded across the `model` axis (and `data` for batch-1 long
+contexts), so aggregate pod HBM is one big KV pool — MemPool's shared L1, at
+cluster scale. Continuous batching (slot reuse) is kept minimal but real:
+finished rows are immediately refillable via their slot mask.
+
+Kernel block plans are obtained ONCE at engine construction from the model's
+planner (sized for ``max_len`` on the current hardware target) and threaded
+into every prefill/decode call — serving never re-plans per step.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -30,11 +35,15 @@ class Engine:
         self.model = model
         self.params = params
         self.ecfg = ecfg
-        self._decode = jax.jit(model.decode_step)
+        # one capacity-partitioned plan set for the whole engine lifetime
+        self.plans = model.kernel_plans(ecfg.max_len, ecfg.max_len)
+        self._decode = jax.jit(
+            functools.partial(model.decode_step, plans=self.plans))
 
     def prefill(self, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
         logits, state = self.model.prefill(self.params, batch,
-                                           self.ecfg.max_len)
+                                           self.ecfg.max_len,
+                                           plans=self.plans)
         return logits, state
 
     def generate(self, batch: Dict[str, jax.Array], n_steps: int,

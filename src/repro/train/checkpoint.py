@@ -1,4 +1,4 @@
-"""Sharded, atomic, async, mesh-agnostic checkpoints (msgpack + zstd).
+"""Sharded, atomic, async, mesh-agnostic checkpoints (msgpack + zstd/zlib).
 
 Fault-tolerance contract:
   * **atomic**: a step directory appears only via os.rename of a finished tmp
@@ -20,14 +20,41 @@ import concurrent.futures as cf
 import json
 import os
 import shutil
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # preferred codec; stdlib zlib keeps checkpoints working without it
+    import zstandard
+except ImportError:
+    zstandard = None
 
 _EXEC = cf.ThreadPoolExecutor(max_workers=1, thread_name_prefix="ckpt")
+
+
+def _make_compressor():
+    """(codec name, compress fn) — one compressor reused across all leaves."""
+    if zstandard is not None:
+        comp = zstandard.ZstdCompressor(level=3)
+        return "zstd", comp.compress
+    return "zlib", lambda data: zlib.compress(data, 3)
+
+
+def _decompress(codec: str, blob: bytes) -> bytes:
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but the zstandard package "
+                "is not installed (pip install zstandard)")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    if codec == "zlib":
+        return zlib.decompress(blob)
+    if codec == "raw":
+        return blob
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _path_str(path) -> str:
@@ -46,14 +73,16 @@ def _path_str(path) -> str:
 
 def _serialize_tree(tree: Any) -> bytes:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
-    comp = zstandard.ZstdCompressor(level=3)
+    codec, compress = _make_compressor()
     payload = {}
     for path, leaf in flat:
         arr = np.asarray(jax.device_get(leaf))
+        data = compress(arr.tobytes())
         payload[_path_str(path)] = {
             "shape": list(arr.shape),
             "dtype": str(arr.dtype),
-            "data": comp.compress(arr.tobytes()),
+            "codec": codec,
+            "data": data,
         }
     return msgpack.packb(payload, use_bin_type=True)
 
@@ -61,11 +90,11 @@ def _serialize_tree(tree: Any) -> bytes:
 def _deserialize_leaves(blob: bytes) -> Dict[str, np.ndarray]:
     import ml_dtypes  # noqa: F401  (registers bfloat16 with numpy)
     payload = msgpack.unpackb(blob, raw=False)
-    dec = zstandard.ZstdDecompressor()
     out = {}
     for path, rec in payload.items():
         dtype = np.dtype(rec["dtype"])
-        buf = dec.decompress(rec["data"])
+        # records from before the codec field were always zstd
+        buf = _decompress(rec.get("codec", "zstd"), rec["data"])
         out[path] = np.frombuffer(buf, dtype=dtype).reshape(rec["shape"])
     return out
 

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.distributed import sharding as shd
+
 
 def check_mesh_device_count():
     assert len(jax.devices()) == 8, jax.devices()
@@ -35,9 +37,8 @@ def check_moe_ep_matches_dense():
 
     y_dense, aux_dense = moe_mod.moe_block(p, x, cfg=cfg, impl="dense")
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh):
+    mesh = shd.make_mesh((2, 4), ("data", "model"))
+    with shd.use_mesh(mesh):
         y_ep, aux_ep = jax.jit(
             lambda p, x: moe_mod.moe_block(p, x, cfg=cfg, impl="ep"))(p, x)
     np.testing.assert_allclose(np.asarray(y_ep, np.float32),
@@ -59,9 +60,8 @@ def check_moe_ep_capacity_drops():
     key = jax.random.PRNGKey(0)
     p = moe_mod.init_moe(cfg, key)
     x = jax.random.normal(jax.random.fold_in(key, 1), (4, 16, cfg.d_model)) * 0.1
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh):
+    mesh = shd.make_mesh((2, 4), ("data", "model"))
+    with shd.use_mesh(mesh):
         y, _ = jax.jit(lambda p, x: moe_mod.moe_block(p, x, cfg=cfg,
                                                       impl="ep"))(p, x)
     assert bool(jnp.isfinite(y).all())
@@ -80,9 +80,8 @@ def check_moe_partial_k_matches_dense():
     x = jax.random.normal(jax.random.fold_in(key, 1), (2, 1, cfg.d_model),
                           jnp.float32) * 0.1
     y_dense, aux_dense = moe_mod.moe_block(p, x, cfg=cfg, impl="dense")
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh):
+    mesh = shd.make_mesh((2, 4), ("data", "model"))
+    with shd.use_mesh(mesh):
         y_ep, aux_ep = jax.jit(
             lambda p, x: moe_mod.moe_block(p, x, cfg=cfg, impl="ep"))(p, x)
     np.testing.assert_allclose(np.asarray(y_ep, np.float32),
@@ -97,15 +96,14 @@ def check_compressed_psum():
     feedback replays the residual next round."""
     from repro.distributed import collectives
 
-    mesh = jax.make_mesh((8,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Explicit,))
+    mesh = shd.make_mesh((8,), ("pod",), explicit=True)
     g_local = np.random.default_rng(0).standard_normal((8, 64)).astype(np.float32)
     err0 = np.zeros((8, 64), np.float32)
 
     def body(g, e):
         return collectives.compressed_psum_mean(g, e, "pod", 8)
 
-    out, new_err = jax.jit(jax.shard_map(
+    out, new_err = jax.jit(shd.shard_map(
         body, mesh=mesh, in_specs=(P("pod"), P("pod")),
         out_specs=(P("pod"), P("pod"))))(jnp.asarray(g_local), jnp.asarray(err0))
     true_mean = g_local.mean(axis=0)
@@ -121,7 +119,7 @@ def check_compressed_psum():
     acc = np.zeros_like(true_mean)
     rounds = 16
     for _ in range(rounds):
-        out, e = jax.jit(jax.shard_map(
+        out, e = jax.jit(shd.shard_map(
             body, mesh=mesh, in_specs=(P("pod"), P("pod")),
             out_specs=(P("pod"), P("pod"))))(jnp.asarray(g_local), e)
         acc += np.asarray(out)[0]
@@ -141,9 +139,8 @@ def check_sharded_train_step():
 
     cfg = get_reduced("yi-6b")
     model = build_model(cfg)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh):
+    mesh = shd.make_mesh((2, 4), ("data", "model"))
+    with shd.use_mesh(mesh):
         params = model.init(jax.random.PRNGKey(0))
         params = jax.device_put(params, shd.named_shardings(params, mesh))
         tcfg = TrainConfig(n_microbatches=2)
@@ -176,10 +173,9 @@ def check_pooled_decode():
     cache_len = jnp.asarray(16, jnp.int32)
     ref_logits, _ = model.decode_step(params, nxt, state, cache_len)
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = shd.make_mesh((2, 4), ("data", "model"))
     from repro.launch.dryrun import decode_shard_specs
-    with jax.set_mesh(mesh):
+    with shd.use_mesh(mesh):
         inputs = {"tokens": nxt, "state": state, "cache_len": cache_len}
         specs = decode_shard_specs(jax.eval_shape(lambda: inputs), mesh,
                                    batch=2)

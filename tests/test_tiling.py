@@ -1,8 +1,9 @@
 """Capacity-aware planner invariants (unit + hypothesis property tests)."""
 
-import hypothesis
-import hypothesis.strategies as st
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core import tiling
 from repro.core.hw_profiles import MiB, TPU_V5E, TpuProfile
