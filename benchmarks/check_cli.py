@@ -1,0 +1,64 @@
+"""CI tooling check: every runnable benchmark script accepts ``--target``.
+
+Target selection by name is the registry contract (DESIGN.md
+§HardwareTarget); this check keeps new benchmark scripts honest. Runs each
+script's ``--help`` in-process and greps the usage text.
+
+    PYTHONPATH=src python -m benchmarks.check_cli
+"""
+
+from __future__ import annotations
+
+import contextlib
+import glob
+import io
+import os
+import runpy
+import sys
+
+#: library modules, not CLI entry points
+NON_CLI = {"common.py", "check_cli.py", "__init__.py"}
+
+
+def check(path: str) -> str:
+    """Returns '' if ok, else a failure reason."""
+    argv, sys.argv = sys.argv, [path, "--help"]
+    buf = io.StringIO()
+    try:
+        with contextlib.redirect_stdout(buf), contextlib.redirect_stderr(buf):
+            runpy.run_path(path, run_name="__main__")
+        return "no argparse --help (script ran to completion)"
+    except SystemExit as e:
+        if e.code not in (0, None):
+            return f"--help exited {e.code}: {buf.getvalue()[-200:]}"
+    except Exception as e:   # noqa: BLE001 — report, don't crash the sweep
+        return f"{type(e).__name__}: {e}"
+    finally:
+        sys.argv = argv
+    if "--target" not in buf.getvalue():
+        return "--help does not mention --target"
+    return ""
+
+
+def main() -> int:
+    root = os.path.dirname(os.path.abspath(__file__))
+    failures = []
+    for path in sorted(glob.glob(os.path.join(root, "*.py"))):
+        name = os.path.basename(path)
+        if name in NON_CLI:
+            continue
+        reason = check(path)
+        status = "FAIL" if reason else "ok"
+        print(f"[{status:4s}] {name}" + (f" — {reason}" if reason else ""))
+        if reason:
+            failures.append(name)
+    if failures:
+        print(f"\n{len(failures)} benchmark script(s) missing --target: "
+              f"{', '.join(failures)}")
+        return 1
+    print("\nall benchmark scripts accept --target")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

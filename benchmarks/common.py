@@ -1,7 +1,8 @@
-"""Shared benchmark helpers: table formatting + artifact IO."""
+"""Shared benchmark helpers: table formatting, artifact IO, target CLI."""
 
 from __future__ import annotations
 
+import contextlib
 import glob
 import json
 import os
@@ -9,6 +10,35 @@ from typing import Any, Dict, Iterable, List, Sequence
 
 ARTIFACT_ROOT = os.path.join(os.path.dirname(__file__), "artifacts")
 DRYRUN_ROOT = os.path.join(ARTIFACT_ROOT, "dryrun")
+
+
+def add_target_arg(ap) -> None:
+    """Uniform ``--target <name>`` flag: every benchmark script accepts it
+    (enforced by ``benchmarks/check_cli.py`` in CI) and resolves the name
+    through the process-wide registry."""
+    ap.add_argument("--target", default=None, metavar="NAME",
+                    help="hardware target name (see repro.core.target; "
+                         "default: current/REPRO_TARGET/tpu-v5e)")
+
+
+def target_scope(name):
+    """Context manager applying ``--target`` (no-op when None)."""
+    if name is None:
+        return contextlib.nullcontext()
+    from repro.core.target import use_target
+    return use_target(name)
+
+
+def run_cli(run_fn, doc: str, argv=None) -> None:
+    """Standard benchmark entry point: ``--target``-only CLI around a
+    zero-argument ``run_fn``. New shared flags land here once, not in
+    every script."""
+    import argparse
+    ap = argparse.ArgumentParser(description=doc)
+    add_target_arg(ap)
+    args = ap.parse_args(argv)
+    with target_scope(args.target):
+        print(run_fn())
 
 
 def fmt_table(headers: Sequence[str], rows: Iterable[Sequence[Any]],

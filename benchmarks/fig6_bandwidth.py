@@ -35,8 +35,9 @@ def run() -> str:
         rows, title="Fig. 6 — cycle-count speedup vs (1 MiB, 4 B/cyc)")
 
 
-def main() -> None:
-    print(run())
+def main(argv=None) -> None:
+    from benchmarks.common import run_cli
+    run_cli(run, __doc__, argv)
 
 
 if __name__ == "__main__":

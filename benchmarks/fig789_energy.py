@@ -55,8 +55,9 @@ def run() -> str:
     return "\n".join(lines)
 
 
-def main() -> None:
-    print(run())
+def main(argv=None) -> None:
+    from benchmarks.common import run_cli
+    run_cli(run, __doc__, argv)
 
 
 if __name__ == "__main__":

@@ -25,7 +25,12 @@ def main() -> int:
     ap.add_argument("--set", action="append", default=[],
                     help="override key=value (value parsed as json if possible)")
     ap.add_argument("--multi-pod", action="store_true")
+    from benchmarks.common import add_target_arg
+    add_target_arg(ap)
     args = ap.parse_args()
+    if args.target:        # process-wide: the dry-run below plans against it
+        from repro.core.target import set_target
+        set_target(args.target)
 
     from repro.launch import dryrun
 

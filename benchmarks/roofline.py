@@ -58,13 +58,18 @@ def run(mesh: str = "16x16") -> str:
         rows, title=f"Roofline — {mesh} mesh (per step, per-chip terms)")
 
 
-def main() -> None:
-    print(run("16x16"))
-    print()
+def _run_both() -> str:
+    out = [run("16x16"), ""]
     try:
-        print(run("2x16x16"))
+        out.append(run("2x16x16"))
     except Exception:
-        print("(multi-pod artifacts not yet complete)")
+        out.append("(multi-pod artifacts not yet complete)")
+    return "\n".join(out)
+
+
+def main(argv=None) -> None:
+    from benchmarks.common import run_cli
+    run_cli(_run_both, __doc__, argv)
 
 
 if __name__ == "__main__":

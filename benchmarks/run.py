@@ -7,28 +7,36 @@ import sys
 import time
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    import argparse
+
     from benchmarks import (fig6_bandwidth, fig789_energy, kernel_bench,
-                            roofline, table1_tile, table2_group)
+                            roofline, serve_bench, table1_tile, table2_group)
+    from benchmarks.common import add_target_arg, target_scope
+    ap = argparse.ArgumentParser(description=__doc__)
+    add_target_arg(ap)
+    args = ap.parse_args(argv)
     sections = [
         ("Table I (tile partitioning)", table1_tile.run),
         ("Table II (group PPA)", table2_group.run),
         ("Fig. 6 (bandwidth sweep)", fig6_bandwidth.run),
         ("Figs. 7-9 (perf/efficiency/EDP)", fig789_energy.run),
         ("Kernel bench", kernel_bench.run),
+        ("Serve bench (continuous batching)", serve_bench.run),
         ("Roofline (single-pod)", lambda: roofline.run("16x16")),
         ("Roofline (multi-pod)", lambda: roofline.run("2x16x16")),
     ]
     failures = 0
-    for name, fn in sections:
-        t0 = time.time()
-        print(f"\n{'=' * 72}\n{name}\n{'=' * 72}")
-        try:
-            print(fn())
-        except Exception as e:  # keep reporting the rest
-            failures += 1
-            print(f"SECTION FAILED: {type(e).__name__}: {e}")
-        print(f"[{time.time() - t0:.1f}s]")
+    with target_scope(args.target):
+        for name, fn in sections:
+            t0 = time.time()
+            print(f"\n{'=' * 72}\n{name}\n{'=' * 72}")
+            try:
+                print(fn())
+            except Exception as e:  # keep reporting the rest
+                failures += 1
+                print(f"SECTION FAILED: {type(e).__name__}: {e}")
+            print(f"[{time.time() - t0:.1f}s]")
     return 1 if failures else 0
 
 

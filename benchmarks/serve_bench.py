@@ -1,0 +1,122 @@
+"""Serving benchmark: static batching vs continuous batching tokens/s.
+
+Drives the same synthetic mixed-length request stream through the same
+Engine twice:
+
+  * **static** — requests are grouped into fixed batches of ``n_slots``; a
+    batch admits once and decodes until its SLOWEST request drains (empty
+    slots idle — the classic straggler cost).
+  * **continuous** — one scheduler over the whole stream; drained slots are
+    refilled from the queue at every drain boundary.
+
+Both modes share the jitted prefill/decode functions, so the measured delta
+is scheduling, not compilation. Emits ``benchmarks/artifacts/
+serve_bench.json`` — the serving datapoint of the perf trajectory.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--target NAME] [...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict, List
+
+from benchmarks.common import add_target_arg, fmt_table, save_artifact, \
+    target_scope
+
+
+def _run_mode(engine, stream: List[Dict], n_slots: int, mode: str) -> Dict:
+    from repro.serve.scheduler import Scheduler
+    t0 = time.monotonic()
+    reports = []
+    if mode == "continuous":
+        sch = Scheduler(n_slots=n_slots)
+        for spec in stream:
+            sch.submit(spec["prompt"], spec["max_new_tokens"])
+        reports.append(engine.serve(scheduler=sch))
+    else:                                   # static: one batch at a time
+        for i in range(0, len(stream), n_slots):
+            sch = Scheduler(n_slots=n_slots)
+            for spec in stream[i:i + n_slots]:
+                sch.submit(spec["prompt"], spec["max_new_tokens"])
+            reports.append(engine.serve(scheduler=sch))
+    dt = time.monotonic() - t0
+    n_tokens = sum(len(r.tokens) for rep in reports for r in rep.requests)
+    return {
+        "mode": mode,
+        "wall_s": dt,
+        "n_tokens": n_tokens,
+        "tok_per_s": n_tokens / dt if dt else 0.0,
+        "decode_steps": sum(rep.stats["decode_steps"] for rep in reports),
+        "host_syncs": sum(rep.stats["host_syncs"] for rep in reports),
+        "max_slot_reuse": max(rep.stats["max_slot_reuse"]
+                              for rep in reports),
+        "completed": sum(rep.stats["drained"] for rep in reports),
+    }
+
+
+def run(target_name=None, arch: str = "qwen2.5-3b", n_requests: int = 32,
+        prompt_len: int = 16, gen_len: int = 12, n_slots: int = None,
+        seed: int = 0) -> str:
+    import jax
+    from repro.configs import get_reduced
+    from repro.core.target import get_target
+    from repro.models import build_model
+    from repro.serve.engine import Engine, EngineConfig
+    from repro.serve.scheduler import derive_n_slots, synthetic_stream
+
+    with target_scope(target_name):
+        target = get_target()
+        cfg = get_reduced(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        max_len = prompt_len + gen_len
+        n_slots = n_slots or derive_n_slots(cfg, max_len, max_slots=8)
+        engine = Engine(model, params,
+                        EngineConfig(max_len=max_len, sync_interval=4))
+        stream = synthetic_stream(n_requests, prompt_len, gen_len,
+                                  cfg.vocab_size, seed)
+        # warmup: compile prefill (per distinct prompt length) + decode chunk
+        _run_mode(engine, stream, n_slots, "continuous")
+        recs = [_run_mode(engine, stream, n_slots, m)
+                for m in ("static", "continuous")]
+
+    stat, cont = recs
+    speedup = (cont["tok_per_s"] / stat["tok_per_s"]
+               if stat["tok_per_s"] else 0.0)
+    artifact = {
+        "arch": cfg.name, "target": target.name, "n_requests": n_requests,
+        "prompt_len": prompt_len, "gen_len": gen_len, "n_slots": n_slots,
+        "static": stat, "continuous": cont, "speedup_tok_per_s": speedup,
+    }
+    save_artifact("serve_bench.json", artifact)
+    rows = [[r["mode"], f"{r['tok_per_s']:.1f}", r["n_tokens"],
+             r["decode_steps"], r["host_syncs"], r["max_slot_reuse"],
+             f"{r['wall_s']*1e3:.0f} ms"] for r in recs]
+    table = fmt_table(
+        ["mode", "tok/s", "tokens", "decode steps", "host syncs",
+         "max slot reuse", "wall"],
+        rows, title=f"Serve bench — {cfg.name}, {n_requests} requests, "
+                    f"{n_slots} slots ({target.name})")
+    return table + f"\ncontinuous/static speedup: {speedup:.2f}x"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    add_target_arg(ap)
+    args = ap.parse_args(argv)
+    print(run(args.target, args.arch, args.requests, args.prompt_len,
+              args.gen_len, args.slots, args.seed))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,8 +29,9 @@ def run() -> str:
         rows, title="Table I — tile partitioning (model vs paper)")
 
 
-def main() -> None:
-    print(run())
+def main(argv=None) -> None:
+    from benchmarks.common import run_cli
+    run_cli(run, __doc__, argv)
 
 
 if __name__ == "__main__":

@@ -44,8 +44,9 @@ def run() -> str:
         rows, title="Table II — group PPA (derived rows reproduce the paper)")
 
 
-def main() -> None:
-    print(run())
+def main(argv=None) -> None:
+    from benchmarks.common import run_cli
+    run_cli(run, __doc__, argv)
 
 
 if __name__ == "__main__":

@@ -1,23 +1,72 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Prefill + batched greedy decode through the Engine (pooled KV cache).
-Reports prefill latency and per-step decode latency/throughput.
+Two modes through the same Engine (pooled KV cache):
+
+  * default — one-shot batched greedy decode (prefill + fixed batch),
+    reporting total latency and throughput.
+  * ``--stream N`` — continuous batching: N synthetic requests with mixed
+    prompt/output lengths flow through the scheduler's slot table; reports
+    per-request queueing/decode latency percentiles and aggregate tokens/s.
+
+Hardware target selection: ``--target <name>`` (or ``REPRO_TARGET``) — the
+slot budget is derived from that target's CapacityPartition.
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import sys
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.core.target import available_targets, use_target
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.serve.engine import Engine, EngineConfig
+from repro.serve.scheduler import (DRAINED, Scheduler, derive_n_slots,
+                                   synthetic_stream)
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+def run_stream(engine: Engine, scheduler: Scheduler, n_requests: int,
+               prompt_len: int, gen_len: int, vocab: int, seed: int = 0
+               ) -> dict:
+    """Drive a synthetic mixed-length request stream; return counters."""
+    for spec in synthetic_stream(n_requests, prompt_len, gen_len, vocab,
+                                 seed):
+        scheduler.submit(spec["prompt"], spec["max_new_tokens"])
+    t0 = time.monotonic()
+    report = engine.serve(scheduler=scheduler)
+    dt = time.monotonic() - t0
+    n_tokens = sum(len(r.tokens) for r in report.requests)
+    served = [r for r in report.requests if r.status == DRAINED]
+    queue_steps = [r.admit_step - r.submit_step for r in served]
+    decode_steps = [r.finish_step - r.admit_step for r in served
+                    if r.finish_step >= 0]
+    return {
+        "n_requests": n_requests,
+        "completed": report.stats["drained"],
+        "n_tokens": n_tokens,
+        "wall_s": dt,
+        "tok_per_s": n_tokens / dt if dt else 0.0,
+        "host_syncs": report.stats["host_syncs"],
+        "decode_steps_total": report.stats["decode_steps"],
+        "n_slots": report.stats["n_slots"],
+        "max_slot_reuse": report.stats["max_slot_reuse"],
+        "queue_steps_p50": _percentile(queue_steps, 50),
+        "queue_steps_p95": _percentile(queue_steps, 95),
+        "decode_steps_p50": _percentile(decode_steps, 50),
+        "decode_steps_p95": _percentile(decode_steps, 95),
+    }
 
 
 def main(argv=None) -> int:
@@ -28,17 +77,50 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--target", default=None, metavar="NAME",
+                    help=f"hardware target ({', '.join(available_targets())})")
+    ap.add_argument("--stream", type=int, default=0, metavar="N",
+                    help="continuous batching over N synthetic requests")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="override the CapacityPartition-derived slot count")
+    ap.add_argument("--sync-interval", type=int, default=8)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch) if args.full else get_reduced(args.arch)
-    model = build_model(cfg)
+    if args.stream and (cfg.family == "encdec" or cfg.frontend_len):
+        ap.error(f"--stream serves decoder-only token-prompt models; "
+                 f"{cfg.name} ({cfg.family}) goes through one-shot mode")
     d_mesh, m_mesh = (int(x) for x in args.mesh.split("x"))
     mesh = make_host_mesh(d_mesh, m_mesh)
 
-    with shd.use_mesh(mesh):
+    tgt_ctx = use_target(args.target) if args.target else contextlib.nullcontext()
+    with tgt_ctx, shd.use_mesh(mesh):
+        model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
         max_len = args.prompt_len + args.gen_len + cfg.frontend_len
-        engine = Engine(model, params, EngineConfig(max_len=max_len))
+        engine = Engine(model, params,
+                        EngineConfig(max_len=max_len,
+                                     sync_interval=args.sync_interval))
+
+        if args.stream:
+            n_slots = args.slots or derive_n_slots(
+                cfg, max_len, max_slots=max(2, args.batch))
+            sched = Scheduler(n_slots=n_slots)
+            rec = run_stream(engine, sched, args.stream, args.prompt_len,
+                             args.gen_len, cfg.vocab_size)
+            print(f"arch={cfg.name} stream={args.stream} "
+                  f"slots={rec['n_slots']} (max reuse {rec['max_slot_reuse']})")
+            print(f"completed {rec['completed']}/{rec['n_requests']} "
+                  f"({rec['n_tokens']} tokens) in {rec['wall_s']*1e3:.0f} ms "
+                  f"-> {rec['tok_per_s']:.1f} tok/s")
+            print(f"host syncs {rec['host_syncs']} over "
+                  f"{rec['decode_steps_total']} decode steps")
+            print(f"latency (decode steps): queue p50/p95 "
+                  f"{rec['queue_steps_p50']:.0f}/{rec['queue_steps_p95']:.0f}, "
+                  f"decode p50/p95 {rec['decode_steps_p50']:.0f}/"
+                  f"{rec['decode_steps_p95']:.0f}", flush=True)
+            return 0
+
         key = jax.random.PRNGKey(1)
         batch = {"tokens": jax.random.randint(
             key, (args.batch, args.prompt_len), 2, cfg.vocab_size)}
@@ -59,7 +141,9 @@ def main(argv=None) -> int:
               f"prompt={args.prompt_len} gen={tokens.shape[1]}")
         print(f"tokens (first row): {tokens[0].tolist()}")
         print(f"total {dt*1e3:.0f} ms, {n_generated/dt:.1f} tok/s "
-              f"(prefill amortized)", flush=True)
+              f"(prefill amortized; {engine.last_stats['host_syncs']} host "
+              f"syncs / {engine.last_stats['decode_steps']} steps)",
+              flush=True)
     return 0
 
 

@@ -1,7 +1,11 @@
-"""Unified model facade: init / loss / prefill / decode_step / input_specs.
+"""Unified model facade: init / loss / prefill / decode_step / slot_update.
 
 Every assigned architecture is driven through this one API by the trainer,
-the serving engine, the dry-run, and the benchmarks.
+the serving engine, the dry-run, and the benchmarks. Serving entry points
+are slot-aware: ``prefill`` can gather logits at per-row prompt ends,
+``decode_step`` takes scalar or per-slot ``cache_len`` vectors, and
+``slot_update`` scatters a prefilled row into the pooled KV cache — the
+pieces the continuous-batching engine (DESIGN.md §Serving) builds on.
 """
 
 from __future__ import annotations
@@ -96,8 +100,26 @@ class Model:
 
     # ---------------------------------------------------------- serving
     def prefill(self, params, batch: Dict[str, jax.Array], max_len: int, *,
-                plans: Optional[KernelPlans] = None):
+                plans: Optional[KernelPlans] = None,
+                last_pos: Optional[jax.Array] = None):
+        """Run the full prompt, building ``max_len``-sized KV caches.
+
+        Returns ``(logits (B, 1, padded_vocab), state)``. By default logits
+        come from the final sequence position; ``last_pos`` (per-row ``(B,)``
+        int32) instead gathers each row's logits at that position — the
+        continuous-batching path prefills right-padded prompt buckets and
+        reads logits at the true last prompt token (DESIGN.md §Serving).
+        """
         cfg = self.cfg
+        from repro.models import layers
+
+        def _last(x: jax.Array) -> jax.Array:
+            if last_pos is None:
+                return x[:, -1:]
+            idx = jnp.broadcast_to(last_pos.reshape(-1, 1, 1),
+                                   (x.shape[0], 1, x.shape[2]))
+            return jnp.take_along_axis(x, idx, axis=1)
+
         if cfg.family == "encdec":
             s = batch["src_embeds"].shape[1]
             plans = plans or self.kernel_plans(s, max_len)
@@ -108,21 +130,26 @@ class Model:
             x, caches = encdec.decode(cfg, params, batch["tokens"], enc_out,
                                       caches=caches, cache_len=0, remat=False,
                                       plans=plans)
-            from repro.models import layers
-            logits = layers.unembed_logits(params["tok"], x[:, -1:])
+            logits = layers.unembed_logits(params["tok"], _last(x))
             return logits, {"caches": caches, "enc_out": enc_out}
         s = batch["tokens"].shape[1] + cfg.frontend_len
         plans = plans or self.kernel_plans(s, max_len)
         x, caches = transformer.prefill(cfg, params, batch["tokens"], max_len,
                                         frontend_embeds=batch.get("frontend_embeds"),
                                         plans=plans)
-        from repro.models import layers
-        logits = layers.unembed_logits(params["tok"], x[:, -1:])
+        logits = layers.unembed_logits(params["tok"], _last(x))
         return logits, {"caches": caches}
 
     def decode_step(self, params, tokens: jax.Array, state: Dict[str, Any],
                     cache_len: jax.Array, *,
                     plans: Optional[KernelPlans] = None):
+        """One decode step for every row of the batch.
+
+        ``cache_len`` is the filled KV prefix per row: a scalar when all rows
+        share one frontier (one-shot ``Engine.generate``) or a ``(B,)``
+        vector when rows are independent slots of the pooled KV cache
+        (continuous batching). All masking stays on-device.
+        """
         cfg = self.cfg
         if cfg.family == "encdec":
             x, caches = encdec.decode(cfg, params, tokens, state["enc_out"],
@@ -136,6 +163,33 @@ class Model:
                                                  state["caches"], cache_len,
                                                  plans=plans)
         return logits, {**state, "caches": caches}
+
+    def slot_update(self, pool_state: Dict[str, Any],
+                    row_state: Dict[str, Any], slot: jax.Array
+                    ) -> Dict[str, Any]:
+        """Write a freshly prefilled row state into the pooled KV cache.
+
+        ``pool_state`` holds slot-major caches (batch axis = the slot table);
+        ``row_state`` is the state of a single prefilled request (batch 1, or
+        a contiguous run of rows inserted at ``slot``). Cache arrays are
+        stacked per layer group as ``(n_repeat, B, ...)`` — batch lives on
+        axis 1 — while auxiliary per-sequence tensors (``enc_out``) carry
+        batch on axis 0. This is the only place slot indices touch cache
+        memory; everything else addresses slots through ``cache_len`` masks.
+        """
+        def _scatter(axis):
+            def upd(pool: jax.Array, row: jax.Array) -> jax.Array:
+                return jax.lax.dynamic_update_slice_in_dim(
+                    pool, row.astype(pool.dtype), slot, axis=axis)
+            return upd
+
+        new_state = dict(pool_state)
+        new_state["caches"] = jax.tree.map(_scatter(1), pool_state["caches"],
+                                           row_state["caches"])
+        if "enc_out" in pool_state:
+            new_state["enc_out"] = _scatter(0)(pool_state["enc_out"],
+                                               row_state["enc_out"])
+        return new_state
 
     # ------------------------------------------------------ input specs
     def input_specs(self, shape: ShapeCfg,

@@ -34,10 +34,18 @@ def _cache_write(cache_arr: jax.Array, new: jax.Array, cache_len,
     dim forces GSPMD to replicate (all-gather) the whole cache per layer —
     the dominant decode collective before this fix (§Perf, decode/h2). The
     elementwise select keeps the pooled (seq-sharded) layout intact.
+
+    ``cache_len`` may be a scalar (every row at the same offset — one-shot
+    generate) or a per-row vector ``(B,)`` (continuous batching: each KV
+    slot has its own filled length). The vector case broadcasts against the
+    batch axis (axis 0 of every cache array).
     """
     new = new.astype(cache_arr.dtype)
     if isinstance(cache_len, jax.Array) and new.shape[axis] == 1:
         iota = jax.lax.broadcasted_iota(jnp.int32, cache_arr.shape, axis)
+        if cache_len.ndim == 1:      # per-slot lengths: (B,) over batch axis 0
+            cache_len = cache_len.reshape(
+                (-1,) + (1,) * (cache_arr.ndim - 1))
         return jnp.where(iota == cache_len, new, cache_arr)
     return jax.lax.dynamic_update_slice_in_dim(cache_arr, new,
                                                cache_len, axis)
@@ -146,7 +154,13 @@ def _decode_attention(q, k, v, cache_len, *, window=None, causal=True):
     (B, Hkv, group, S, D) and contracted against the (B, Hkv, T, D) cache —
     a jnp.repeat here lowers to broadcast+reshape that merges the head dims,
     which breaks GSPMD's seq-sharding propagation and all-gathers the whole
-    pooled cache per layer (§Perf, decode/h3)."""
+    pooled cache per layer (§Perf, decode/h3).
+
+    ``cache_len`` is a scalar or a per-row ``(B,)`` vector (slot pool: rows
+    at different fill depths decode in one batched step). Positions at or
+    beyond a row's frontier — including stale K/V left over from a padded
+    prefill or a previous occupant of the slot — are masked out, so a slot
+    row never attends across its own reuse boundary."""
     b, hq, s, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
     group = hq // hkv
@@ -154,14 +168,17 @@ def _decode_attention(q, k, v, cache_len, *, window=None, causal=True):
     qg = q.reshape(b, hkv, group, s, d)
     logits = jnp.einsum("bhgsd,bhtd->bhgst", qg, k,
                         preferred_element_type=jnp.float32) * scale
+    if isinstance(cache_len, jax.Array) and cache_len.ndim == 1:
+        # (B,1,1,1,1): broadcasts against logits' (B,Hkv,group,S,T)
+        cache_len = cache_len.reshape(b, 1, 1, 1, 1)
     qpos = cache_len + jnp.arange(s)[:, None]
     tpos = jnp.arange(skv)[None, :]
     mask = tpos < cache_len + s            # written region only
     if causal:
-        mask &= tpos <= qpos
+        mask = mask & (tpos <= qpos)
     if window is not None:
-        mask &= tpos > qpos - window
-    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+        mask = mask & (tpos > qpos - window)
+    logits = jnp.where(mask, logits, -jnp.inf)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgst,bhtd->bhgsd",
                      probs.astype(jnp.float32), v.astype(jnp.float32))
@@ -251,9 +268,11 @@ def mla_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
                   + jnp.einsum("bhsr,btr->bhst",
                                q_rope.astype(jnp.float32), kr_f)) * scale
         t_pos = jnp.arange(ckv.shape[1])[None, :]
+        if q_offset.ndim == 1:                          # per-slot lengths (B,)
+            q_offset = q_offset.reshape(b, 1, 1, 1)
         q_pos = q_offset + jnp.arange(s)[:, None]
         mask = t_pos <= q_pos                           # causal + written
-        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+        scores = jnp.where(mask, scores, -jnp.inf)
         probs = jax.nn.softmax(scores, axis=-1)
         o_lat = jnp.einsum("bhst,btl->bhsl", probs, ckv_f)
         out = jnp.einsum("bhsl,lhv->bhsv", o_lat, wv.astype(jnp.float32))

@@ -165,6 +165,10 @@ def forward(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
     x = shard(x, BATCH, None, None)
     if positions is None:
         start = cache_len if cache_len is not None else 0
+        if isinstance(start, jax.Array) and start.ndim == 1:
+            # per-slot cache lengths (B,): each row continues from its own
+            # frontier (continuous batching — see DESIGN.md §Serving)
+            start = start[:, None]
         positions = start + jnp.arange(s, dtype=jnp.int32)[None, :]
         positions = jnp.broadcast_to(positions, (b, s))
     positions3 = None
@@ -270,7 +274,8 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
 def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                 caches, cache_len: jax.Array,
                 plans: Optional[KernelPlans] = None):
-    """One decode step. tokens: (B, 1). Returns (logits (B,1,Vpad), caches)."""
+    """One decode step. tokens: (B, 1); cache_len: scalar or per-slot (B,)
+    filled-prefix lengths. Returns (logits (B,1,Vpad), caches)."""
     x, _, new_caches = forward(cfg, params, tokens, caches=caches,
                                cache_len=cache_len, remat=False, plans=plans)
     logits = layers.unembed_logits(params["tok"], x)

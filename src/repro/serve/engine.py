@@ -1,10 +1,29 @@
-"""Batched serving engine: prefill + greedy decode over the pooled KV cache.
+"""Serving engine over the pooled KV cache: slot-based continuous batching.
+
+Two serving surfaces share one decode substrate:
+
+  * :meth:`Engine.generate` — one-shot batched greedy decode (every row
+    shares a prompt length). The decode loop runs as jitted
+    ``lax.scan`` chunks of ``sync_interval`` steps; done rows are masked
+    ON-DEVICE with ``jnp.where`` and the host reads the done mask only at
+    chunk boundaries (one explicit ``device_get`` per chunk, counted in
+    ``last_stats["host_syncs"]``) — there is NO per-token device->host
+    round-trip.
+  * :meth:`Engine.serve` — continuous batching. The KV cache is a pool of
+    ``n_slots`` sequence slots (:meth:`init_pool`); a
+    :class:`~repro.serve.scheduler.Scheduler` admits queued requests into
+    free slots at drain boundaries, a jitted admission step prefills the
+    prompt and scatters its cache rows into the pool
+    (:meth:`~repro.models.api.Model.slot_update`) without touching in-flight
+    rows, and every chunk decodes ALL slots in one batched step with
+    per-slot ``cache_len`` vectors. Finished sequences free their slots for
+    immediate reuse.
 
 The cache layout is the pooled-memory design (DESIGN.md §Pooled KV cache):
-sequence dim sharded across the `model` axis (and `data` for batch-1 long
-contexts), so aggregate pod HBM is one big KV pool — MemPool's shared L1, at
-cluster scale. Continuous batching (slot reuse) is kept minimal but real:
-finished rows are immediately refillable via their slot mask.
+sequence dim sharded across the `model` axis, so aggregate pod HBM is one
+big KV pool — MemPool's shared L1, at cluster scale. The slot count is
+derived from the SAME CapacityPartition budget formula as kernel tiles
+(:func:`repro.serve.scheduler.derive_n_slots`).
 
 Kernel block plans are obtained ONCE at engine construction from the model's
 planner (sized for ``max_len`` on the current hardware target) and threaded
@@ -14,20 +33,58 @@ into every prefill/decode call — serving never re-plans per step.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.api import Model
+from repro.serve import scheduler as sched_mod
 
 
 @dataclasses.dataclass
 class EngineConfig:
+    """max_len bounds prompt + generation (the KV slot depth).
+
+    ``sync_interval`` is the decode-chunk length: how many on-device steps
+    run between host syncs (batch-drain boundaries). ``prompt_pad_multiple``
+    right-pads slot prompts up to a multiple to bound prefill recompiles;
+    it must stay ``None`` (exact-length prefill) for models with recurrent
+    SSM layers, whose state would integrate the pad tokens.
+    """
+
     max_len: int
     eos_token: int = 1
     greedy: bool = True
+    sync_interval: int = 8
+    pad_token: int = 0
+    prompt_pad_multiple: Optional[int] = None
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PoolState:
+    """Device-side state of the KV slot pool (batch axis = slot index)."""
+
+    state: Dict[str, Any]       # model caches (+aux), slot-major
+    tok: jax.Array              # (S,) int32 — last emitted token per slot
+    cache_len: jax.Array        # (S,) int32 — filled KV prefix per slot
+    done: jax.Array             # (S,) bool — drained/empty slot mask
+    n_gen: jax.Array            # (S,) int32 — tokens emitted per occupant
+    budget: jax.Array           # (S,) int32 — occupant's max_new_tokens
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Result of one :meth:`Engine.serve` run over a request stream."""
+
+    requests: List[sched_mod.Request]
+    stats: Dict[str, Any]
+
+    @property
+    def outputs(self) -> Dict[int, List[int]]:
+        return {r.rid: r.tokens for r in self.requests}
 
 
 class Engine:
@@ -37,36 +94,255 @@ class Engine:
         self.ecfg = ecfg
         # one capacity-partitioned plan set for the whole engine lifetime
         self.plans = model.kernel_plans(ecfg.max_len, ecfg.max_len)
-        self._decode = jax.jit(
-            functools.partial(model.decode_step, plans=self.plans))
+        self._chunk_fns: Dict[int, Any] = {}        # one-shot decode chunks
+        self._pool_chunk_fns: Dict[int, Any] = {}   # pooled decode chunks
+        self._admit = self._make_admit_fn()
+        self.last_stats: Dict[str, Any] = {}
+        if ecfg.prompt_pad_multiple and self._has_ssm():
+            raise ValueError(
+                "prompt_pad_multiple requires attention-only models: SSM "
+                "recurrences integrate pad tokens (see EngineConfig)")
 
+    def _has_ssm(self) -> bool:
+        return any(kind.attn == "mamba"
+                   for group in self.model.cfg.layer_groups()
+                   for kind in group.pattern)
+
+    # ------------------------------------------------------------ host IO
+    def _fetch(self, tree):
+        """The ONLY device->host read path. One explicit transfer per call,
+        issued at batch-drain boundaries; counted for the regression test."""
+        self.last_stats["host_syncs"] = self.last_stats.get("host_syncs", 0) + 1
+        return jax.device_get(tree)
+
+    # ---------------------------------------------------------- one-shot
     def prefill(self, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
         logits, state = self.model.prefill(self.params, batch,
                                            self.ecfg.max_len,
                                            plans=self.plans)
         return logits, state
 
+    def _decode_chunk(self, n: int):
+        """Jitted: n decode steps with on-device EOS masking (lax.scan)."""
+        if n not in self._chunk_fns:
+            cfg, ecfg, plans = self.model.cfg, self.ecfg, self.plans
+
+            def run(params, tok, state, cache_len, done):
+                def step(carry, _):
+                    tok, state, cache_len, done = carry
+                    logits, state = self.model.decode_step(
+                        params, tok[:, None], state, cache_len, plans=plans)
+                    nxt = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
+                    tok = jnp.where(done, ecfg.eos_token, nxt)
+                    done = done | (tok == ecfg.eos_token)
+                    return (tok, state, cache_len + 1, done), tok
+
+                carry, toks = jax.lax.scan(step, (tok, state, cache_len, done),
+                                           None, length=n)
+                tok, state, cache_len, done = carry
+                return jnp.moveaxis(toks, 0, 1), tok, state, cache_len, done
+
+            self._chunk_fns[n] = jax.jit(run)
+        return self._chunk_fns[n]
+
     def generate(self, batch: Dict[str, jax.Array], n_steps: int,
                  ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
-        """Greedy continuation. Returns (tokens (B, n_steps), final_state)."""
+        """Greedy continuation. Returns (tokens (B, <=n_steps), final_state).
+
+        Rows that hit EOS are frozen on-device (EOS fill); the host checks
+        the done mask once per ``sync_interval`` chunk and stops early at
+        that granularity — never per token.
+        """
+        self.last_stats = {"host_syncs": 0, "decode_steps": 0}
         cfg = self.model.cfg
         logits, state = self.prefill(batch)
         prompt_len = batch["tokens"].shape[1]
         if cfg.family != "encdec" and cfg.frontend_len:
             prompt_len += cfg.frontend_len
         cache_len = jnp.asarray(prompt_len, jnp.int32)
-        b = batch["tokens"].shape[0]
         tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
         done = tok == self.ecfg.eos_token
-        out: List[jnp.ndarray] = [tok]
-        for _ in range(n_steps - 1):
-            logits, state = self._decode(self.params, tok[:, None], state,
-                                         cache_len)
-            cache_len = cache_len + 1
-            nxt = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
-            tok = jnp.where(done, self.ecfg.eos_token, nxt)
-            done = done | (tok == self.ecfg.eos_token)
-            out.append(tok)
-            if bool(done.all()):
+        out: List[jnp.ndarray] = [tok[:, None]]
+        left = n_steps - 1
+        while left > 0:
+            n = min(self.ecfg.sync_interval, left)
+            toks, tok, state, cache_len, done = self._decode_chunk(n)(
+                self.params, tok, state, cache_len, done)
+            out.append(toks)
+            left -= n
+            self.last_stats["decode_steps"] += n
+            # drain boundary: one explicit host read, then maybe early-exit
+            if left > 0 and bool(self._fetch(done).all()):
                 break
-        return jnp.stack(out, axis=1), state
+        return jnp.concatenate(out, axis=1), state
+
+    # ------------------------------------------------------------- pool
+    def init_pool(self, n_slots: int) -> PoolState:
+        """Empty slot pool: all slots done (free), caches zeroed."""
+        cfg = self.model.cfg
+        if cfg.family == "encdec":
+            raise NotImplementedError(
+                "pooled serving targets decoder-only families; encdec "
+                "requests go through one-shot generate()")
+        if cfg.frontend_len:
+            raise NotImplementedError(
+                "pooled serving takes token prompts; frontend-embed "
+                "requests go through one-shot generate()")
+        from repro.models import transformer
+        state = {"caches": transformer.init_caches(cfg, n_slots,
+                                                   self.ecfg.max_len)}
+        zeros = jnp.zeros((n_slots,), jnp.int32)
+        return PoolState(state=state,
+                         tok=jnp.full((n_slots,), self.ecfg.pad_token,
+                                      jnp.int32),
+                         cache_len=zeros,
+                         done=jnp.ones((n_slots,), bool),
+                         n_gen=zeros, budget=zeros)
+
+    def _pad_prompt(self, prompt: np.ndarray) -> Tuple[np.ndarray, int]:
+        true_len = int(prompt.shape[0])
+        if true_len > self.ecfg.max_len:
+            raise ValueError(
+                f"prompt of {true_len} tokens exceeds the KV slot depth "
+                f"(max_len={self.ecfg.max_len})")
+        m = self.ecfg.prompt_pad_multiple
+        if not m:
+            return prompt, true_len
+        # clamp: the padded buffer must still fit the slot's KV depth
+        padded = min(-(-true_len // m) * m, self.ecfg.max_len)
+        if padded == true_len:
+            return prompt, true_len
+        out = np.full((padded,), self.ecfg.pad_token, np.int32)
+        out[:true_len] = prompt
+        return out, true_len
+
+    def _make_admit_fn(self):
+        """Jitted admission: prefill one prompt row and scatter it into the
+        pool at ``slot`` — in-flight slots are untouched (pure row insert).
+        One function; jit's shape-keyed cache retraces per padded prompt
+        length (bounded by ``prompt_pad_multiple`` bucketing)."""
+        cfg, ecfg, plans = self.model.cfg, self.ecfg, self.plans
+
+        def run(params, tokens, true_len, budget, slot, pool: PoolState):
+            last = (true_len - 1)[None]                     # (1,) gather
+            logits, row = self.model.prefill(
+                params, {"tokens": tokens}, ecfg.max_len, plans=plans,
+                last_pos=last)
+            first = jnp.argmax(logits[0, -1, :cfg.vocab_size])
+            first = first.astype(jnp.int32)
+            state = self.model.slot_update(pool.state, row, slot)
+            kv_len = true_len                               # filled prefix
+            done0 = ((first == ecfg.eos_token) | (budget <= 1)
+                     | (kv_len >= ecfg.max_len))
+            return PoolState(
+                state=state,
+                tok=pool.tok.at[slot].set(first),
+                cache_len=pool.cache_len.at[slot].set(kv_len),
+                done=pool.done.at[slot].set(done0),
+                n_gen=pool.n_gen.at[slot].set(1),
+                budget=pool.budget.at[slot].set(budget)), first
+
+        return jax.jit(run)
+
+    def admit_into_slot(self, pool: PoolState, slot: int,
+                        prompt: np.ndarray, max_new_tokens: int
+                        ) -> Tuple[PoolState, jax.Array]:
+        """Prefill ``prompt`` into ``slot``. Returns (pool, first_token) —
+        the token stays on device; callers fetch it at the next drain."""
+        tokens, true_len = self._pad_prompt(np.asarray(prompt, np.int32))
+        return self._admit(self.params, tokens[None],
+                           jnp.asarray(true_len, jnp.int32),
+                           jnp.asarray(max_new_tokens, jnp.int32),
+                           jnp.asarray(slot, jnp.int32), pool)
+
+    def _pool_chunk(self, n: int):
+        """Jitted: n batched decode steps over ALL slots with per-slot
+        cache_len vectors and on-device done masking. Emits per-step
+        (token, was_active) pairs; the host sees them only after the chunk."""
+        if n not in self._pool_chunk_fns:
+            cfg, ecfg, plans = self.model.cfg, self.ecfg, self.plans
+
+            def run(params, pool: PoolState):
+                def step(pool: PoolState, _):
+                    logits, state = self.model.decode_step(
+                        params, pool.tok[:, None], pool.state, pool.cache_len,
+                        plans=plans)
+                    nxt = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
+                    was_done = pool.done
+                    tok = jnp.where(was_done, ecfg.eos_token,
+                                    nxt).astype(jnp.int32)
+                    n_gen = jnp.where(was_done, pool.n_gen, pool.n_gen + 1)
+                    cache_len = jnp.where(was_done, pool.cache_len,
+                                          pool.cache_len + 1)
+                    done = (was_done | (tok == ecfg.eos_token)
+                            | (n_gen >= pool.budget)
+                            | (cache_len >= ecfg.max_len))
+                    new = PoolState(state=state, tok=tok, cache_len=cache_len,
+                                    done=done, n_gen=n_gen,
+                                    budget=pool.budget)
+                    return new, (tok, ~was_done)
+
+                pool, (toks, valid) = jax.lax.scan(step, pool, None, length=n)
+                return pool, toks, valid        # (n, S) each
+
+            self._pool_chunk_fns[n] = jax.jit(run)
+        return self._pool_chunk_fns[n]
+
+    # ------------------------------------------------------------ stream
+    def serve(self, requests: Iterable[sched_mod.Request] = (),
+              scheduler: Optional[sched_mod.Scheduler] = None, *,
+              max_steps: Optional[int] = None) -> ServeReport:
+        """Continuous batching over a request stream.
+
+        Loop invariant: between drain boundaries everything is on-device.
+        Each iteration (1) admits queued requests into free slots, (2) runs
+        one ``sync_interval`` decode chunk over the whole pool, (3) performs
+        ONE host sync to read the chunk's tokens + done mask, then frees
+        drained slots so the next iteration refills them.
+        """
+        sch = scheduler or sched_mod.Scheduler.for_model(
+            self.model.cfg, self.ecfg.max_len)
+        for req in requests:
+            sch.submit_request(req)
+        self.last_stats = {"host_syncs": 0, "decode_steps": 0, "chunks": 0}
+        pool = self.init_pool(sch.n_slots)
+        pending_first: List[Tuple[sched_mod.Request, jax.Array]] = []
+        step_clock = 0
+        while sch.has_work():
+            for slot, req in sch.admit():
+                req.admit_step = step_clock
+                if req.prompt_len > self.ecfg.max_len:
+                    # reject cleanly: one bad request must not abort the
+                    # stream or leak its slot
+                    req.finish_step = step_clock
+                    sch.complete(slot, status=sched_mod.REJECTED)
+                    continue
+                pool, first = self.admit_into_slot(
+                    pool, slot, req.prompt, req.max_new_tokens)
+                req.status = sched_mod.DECODING
+                pending_first.append((req, first))
+            n = self.ecfg.sync_interval
+            pool, toks, valid = self._pool_chunk(n)(self.params, pool)
+            step_clock += n
+            self.last_stats["decode_steps"] += n
+            self.last_stats["chunks"] += 1
+            # ---- drain boundary: the single host sync of this iteration
+            toks_h, valid_h, done_h, firsts = self._fetch(
+                (toks, valid, pool.done, [f for _, f in pending_first]))
+            for (req, _), f in zip(pending_first, firsts):
+                req.tokens.append(int(f))
+            pending_first.clear()
+            for slot in sorted(sch.active):
+                req = sch.active[slot]
+                req.tokens.extend(
+                    int(t) for t, v in zip(toks_h[:, slot], valid_h[:, slot])
+                    if v)
+                if done_h[slot]:
+                    req.finish_step = step_clock
+                    sch.complete(slot)
+            if max_steps is not None and step_clock >= max_steps:
+                break
+        stats = dict(self.last_stats)
+        stats.update(sch.stats())
+        return ServeReport(requests=sch.drained + list(sch.active.values()),
+                           stats=stats)

@@ -1,0 +1,295 @@
+"""Continuous-batching scheduler: request queue, slot table, admission policy.
+
+The serving engine treats the KV cache as a *pool of slots* — one resident
+sequence per slot, all slots decoded in a single batched step. This module
+owns everything about slots that is NOT device math:
+
+  * :class:`Request` — one user request and its lifecycle
+    (``queued -> prefilling -> decoding -> drained``).
+  * :class:`SlotTable` — which request occupies which KV slot, with per-slot
+    allocation counters (slot *reuse* is the whole point: a drained slot is
+    immediately refilled from the queue without touching in-flight rows).
+  * :class:`Scheduler` — admission policy. ``fcfs`` admits in arrival order
+    (the fairness default); ``shortest`` admits the shortest queued prompt
+    first (throughput-greedy, can starve long prompts — benchmarks only).
+
+Slot budget = the paper's capacity partition, applied to serving. The number
+of KV slots is derived from the active :class:`~repro.core.target.
+HardwareTarget` through the SAME :class:`~repro.core.target.
+CapacityPartition` budget formula the tile planner uses for kernel blocks:
+the KV pool level (HBM on TPU, the shared-L1 cluster SPM on MemPool) is
+partitioned, and ``required_bytes(streamed=kv_bytes_per_token * max_len,
+resident=recurrent state)`` prices one slot. MemPool's lesson — one logical
+pool, explicitly partitioned — decides how many sequences may be resident.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.target import CapacityPartition, HardwareTarget, get_target
+from repro.models.config import ModelConfig
+
+#: Request lifecycle states (DESIGN.md §Serving — slot lifecycle).
+QUEUED = "queued"
+PREFILLING = "prefilling"
+DECODING = "decoding"
+DRAINED = "drained"
+REJECTED = "rejected"      # invalid for the pool (e.g. prompt > max_len)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request moving through the slot lifecycle."""
+
+    rid: int
+    prompt: np.ndarray                  # (P,) int32 token ids
+    max_new_tokens: int
+    status: str = QUEUED
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    # lifecycle clocks, in decode steps of the serve loop (latency accounting)
+    submit_step: int = 0
+    admit_step: int = -1
+    finish_step: int = -1
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.prompt).shape[0])
+
+
+# ---------------------------------------------------------------------------
+# Slot budget — CapacityPartition applied to the KV pool
+# ---------------------------------------------------------------------------
+
+
+def kv_bytes_per_token(cfg: ModelConfig, cache_dtype_bytes: int = 2) -> int:
+    """KV-pool bytes one resident sequence streams per cached token.
+
+    Attention layers scale with sequence length (this function); recurrent
+    SSM state does not and is priced separately by
+    :func:`resident_bytes_per_slot`.
+    """
+    total = 0
+    for group in cfg.layer_groups():
+        for kind in group.pattern:
+            if kind.attn == "mamba":
+                continue
+            if kind.attn == "mla":
+                per_tok = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+            else:
+                per_tok = 2 * cfg.n_kv_heads * cfg.head_dim
+            total += group.n_repeat * per_tok * cache_dtype_bytes
+    return total
+
+
+def resident_bytes_per_slot(cfg: ModelConfig, state_dtype_bytes: int = 4) -> int:
+    """Sequence-length-independent per-slot state (conv + SSM recurrences)."""
+    total = 0
+    for group in cfg.layer_groups():
+        for kind in group.pattern:
+            if kind.attn != "mamba":
+                continue
+            conv = (cfg.ssm_conv - 1) * cfg.ssm_d_inner
+            ssm = cfg.ssm_d_inner * cfg.ssm_d_state
+            total += group.n_repeat * (conv + ssm) * state_dtype_bytes
+    return total
+
+
+def pool_partition(target: Optional[HardwareTarget] = None, *,
+                   fraction: float = 0.8) -> CapacityPartition:
+    """A :class:`CapacityPartition` of the target's KV-pool memory level.
+
+    The pool level is the level that *feeds* the scratchpad: HBM on TPU
+    targets, the whole shared-L1 cluster SPM on MemPool (where the paper's
+    pool IS the scratchpad). ``n_buffers=1``: KV rows are resident for a
+    sequence's lifetime, not double-buffered tiles — but the budget formula
+    (``required = ceil(mult * streamed) + resident <= capacity * fraction``)
+    is the same contract the tile planner enforces.
+    """
+    target = target or get_target()
+    names = target.hierarchy.names
+    level = target.hierarchy.level(
+        "hbm" if "hbm" in names else target.scratchpad_level)
+    assert level.capacity_bytes is not None, level.name
+    return CapacityPartition(
+        capacity_bytes=level.capacity_bytes, fraction=fraction, n_buffers=1,
+        db_margin=0.0, align=target.tile_align, word_bytes=target.word_bytes)
+
+
+def derive_n_slots(cfg: ModelConfig, max_len: int, *,
+                   target: Optional[HardwareTarget] = None,
+                   fraction: float = 0.8, max_slots: int = 64,
+                   cache_dtype_bytes: int = 2) -> int:
+    """How many KV slots the pool sustains at ``max_len`` per sequence."""
+    part = pool_partition(target, fraction=fraction)
+    per_slot = part.required_bytes(
+        kv_bytes_per_token(cfg, cache_dtype_bytes) * max_len,
+        resident_bytes_per_slot(cfg))
+    n = part.budget_bytes // max(per_slot, 1)
+    return int(max(1, min(n, max_slots)))
+
+
+def synthetic_stream(n_requests: int, prompt_len: int, gen_len: int,
+                     vocab: int, seed: int = 0) -> List[Dict[str, Any]]:
+    """The canonical mixed-length synthetic workload: prompt lengths in
+    [prompt_len/2, prompt_len], budgets in [gen_len/2, gen_len]. Shared by
+    the stream driver and the serving benchmark so the serve_bench.json
+    datapoint measures exactly what ``--stream`` drives."""
+    rng = np.random.RandomState(seed)
+    out = []
+    for _ in range(n_requests):
+        plen = int(rng.randint(max(1, prompt_len // 2), prompt_len + 1))
+        glen = int(rng.randint(max(1, gen_len // 2), gen_len + 1))
+        out.append({"prompt": rng.randint(2, vocab,
+                                          size=plen).astype(np.int32),
+                    "max_new_tokens": glen})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Slot table
+# ---------------------------------------------------------------------------
+
+
+class SlotTable:
+    """Occupancy of the pooled KV cache: slot index -> resident request id."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"need at least one slot, got {n_slots}")
+        self.n_slots = n_slots
+        self._occupant: List[Optional[int]] = [None] * n_slots
+        #: how many times each slot has been (re)allocated — reuse evidence
+        self.allocations = [0] * n_slots
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self._occupant) if r is None]
+
+    def occupant(self, slot: int) -> Optional[int]:
+        return self._occupant[slot]
+
+    def allocate(self, rid: int) -> int:
+        for i, r in enumerate(self._occupant):
+            if r is None:
+                self._occupant[i] = rid
+                self.allocations[i] += 1
+                return i
+        raise RuntimeError("no free slot (admission must check free_slots)")
+
+    def release(self, slot: int) -> int:
+        rid = self._occupant[slot]
+        if rid is None:
+            raise RuntimeError(f"slot {slot} already free")
+        self._occupant[slot] = None
+        return rid
+
+    @property
+    def n_occupied(self) -> int:
+        return sum(r is not None for r in self._occupant)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+
+class Scheduler:
+    """Admission control between the request queue and the slot table."""
+
+    POLICIES = ("fcfs", "shortest")
+
+    def __init__(self, n_slots: int, policy: str = "fcfs"):
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; have {self.POLICIES}")
+        self.n_slots = n_slots
+        self.policy = policy
+        self.table = SlotTable(n_slots)
+        self.queue: Deque[Request] = collections.deque()
+        self.active: Dict[int, Request] = {}      # slot -> request
+        self.drained: List[Request] = []
+        self._next_rid = 0
+        self.admit_order: List[int] = []          # rids in admission order
+
+    @classmethod
+    def for_model(cls, cfg: ModelConfig, max_len: int, *,
+                  target: Optional[HardwareTarget] = None,
+                  policy: str = "fcfs", fraction: float = 0.8,
+                  max_slots: int = 64) -> "Scheduler":
+        """Size the slot table from the target's CapacityPartition budget."""
+        return cls(derive_n_slots(cfg, max_len, target=target,
+                                  fraction=fraction, max_slots=max_slots),
+                   policy=policy)
+
+    # ------------------------------------------------------------- queue
+    def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
+               submit_step: int = 0) -> Request:
+        return self.submit_request(Request(
+            rid=0, prompt=np.asarray(prompt, np.int32),
+            max_new_tokens=int(max_new_tokens), submit_step=submit_step))
+
+    def submit_request(self, req: Request) -> Request:
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1 (a request always emits its "
+                f"prefill token), got {req.max_new_tokens}")
+        req.rid = self._next_rid
+        self._next_rid += 1
+        req.status = QUEUED
+        self.queue.append(req)
+        return req
+
+    # --------------------------------------------------------- admission
+    def _pop_next(self) -> Request:
+        if self.policy == "shortest":
+            idx = min(range(len(self.queue)),
+                      key=lambda i: self.queue[i].prompt_len)
+            req = self.queue[idx]
+            del self.queue[idx]
+            return req
+        return self.queue.popleft()               # fcfs
+
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Fill free slots from the queue; returns (slot, request) pairs.
+
+        Called at batch-drain boundaries only — admission never interrupts
+        the in-flight decode chunk, it refills slots between chunks.
+        """
+        placed: List[Tuple[int, Request]] = []
+        while self.queue and self.table.n_occupied < self.n_slots:
+            req = self._pop_next()
+            slot = self.table.allocate(req.rid)
+            req.status = PREFILLING
+            self.active[slot] = req
+            self.admit_order.append(req.rid)
+            placed.append((slot, req))
+        return placed
+
+    def complete(self, slot: int, status: str = DRAINED) -> Request:
+        """Mark the slot's request drained (or rejected) and free the slot
+        for reuse."""
+        req = self.active.pop(slot)
+        self.table.release(slot)
+        req.status = status
+        self.drained.append(req)
+        return req
+
+    # ------------------------------------------------------------- state
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.active)
+
+    def stats(self) -> Dict[str, Any]:
+        allocs = self.table.allocations
+        return {
+            "n_slots": self.n_slots,
+            "policy": self.policy,
+            "queued": len(self.queue),
+            "active": len(self.active),
+            "drained": sum(r.status == DRAINED for r in self.drained),
+            "rejected": sum(r.status == REJECTED for r in self.drained),
+            "slot_allocations": list(allocs),
+            "max_slot_reuse": max(allocs) if allocs else 0,
+        }

@@ -1,0 +1,125 @@
+"""Continuous-batching scheduler: slot table, admission, fairness, budget."""
+
+import numpy as np
+import pytest
+
+from repro.core.target import get_target
+from repro.models.config import ModelConfig
+from repro.serve import scheduler as sm
+
+TINY = ModelConfig(
+    name="tiny-sched", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=128,
+)
+
+
+def _prompt(rng, lo=2, hi=10):
+    return rng.randint(2, 128, size=rng.randint(lo, hi)).astype(np.int32)
+
+
+# ------------------------------------------------------------- slot table
+
+def test_slot_table_allocate_release_reuse():
+    t = sm.SlotTable(2)
+    a = t.allocate(10)
+    b = t.allocate(11)
+    assert {a, b} == {0, 1} and not t.free_slots()
+    with pytest.raises(RuntimeError):
+        t.allocate(12)
+    assert t.release(a) == 10
+    c = t.allocate(12)
+    assert c == a                       # freed slot is reused
+    assert t.allocations[a] == 2        # reuse is counted
+    with pytest.raises(RuntimeError):
+        t.release(b) and t.release(b)   # double release of b
+
+def test_slot_table_rejects_empty():
+    with pytest.raises(ValueError):
+        sm.SlotTable(0)
+
+
+# -------------------------------------------------------------- admission
+
+def test_admission_stops_when_pool_full():
+    sch = sm.Scheduler(n_slots=2)
+    rng = np.random.RandomState(0)
+    reqs = [sch.submit(_prompt(rng), 4) for _ in range(5)]
+    placed = sch.admit()
+    assert len(placed) == 2             # pool full: only n_slots admitted
+    assert len(sch.queue) == 3
+    assert sch.admit() == []            # full pool admits nothing more
+    # draining one slot opens exactly one seat, filled by the NEXT in queue
+    slot0 = placed[0][0]
+    sch.complete(slot0)
+    placed2 = sch.admit()
+    assert len(placed2) == 1 and placed2[0][1].rid == reqs[2].rid
+    assert placed2[0][0] == slot0       # the freed slot was reused
+
+
+def test_fcfs_fairness_under_mixed_stream():
+    """FCFS admission must follow arrival order regardless of prompt length
+    — long prompts are never starved by short ones."""
+    sch = sm.Scheduler(n_slots=2)
+    rng = np.random.RandomState(1)
+    rids = [sch.submit(_prompt(rng, 2, 20), 4).rid for _ in range(10)]
+    while sch.queue:
+        for slot, _ in sch.admit():
+            sch.complete(slot)
+    sch.admit()
+    assert sch.admit_order == rids      # arrival order == admission order
+
+
+def test_shortest_policy_reorders():
+    sch = sm.Scheduler(n_slots=1, policy="shortest")
+    long = sch.submit(np.arange(2, 12, dtype=np.int32), 4)
+    short = sch.submit(np.arange(2, 5, dtype=np.int32), 4)
+    (slot, first), = sch.admit()
+    assert first.rid == short.rid       # shortest prompt admitted first
+    sch.complete(slot)
+    (_, second), = sch.admit()
+    assert second.rid == long.rid
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError):
+        sm.Scheduler(n_slots=1, policy="roulette")
+
+
+# ----------------------------------------------------------- slot budget
+
+def test_kv_bytes_per_token_counts_attention_layers():
+    per_tok = sm.kv_bytes_per_token(TINY)
+    # 2 layers x 2 (K+V) x n_kv_heads x head_dim x 2 bytes
+    assert per_tok == 2 * 2 * 2 * 16 * 2
+    assert sm.resident_bytes_per_slot(TINY) == 0   # no SSM layers
+
+
+def test_pool_partition_uses_capacity_partition_formula():
+    target = get_target("tpu-v5e")
+    part = sm.pool_partition(target, fraction=0.5)
+    hbm = target.hierarchy.level("hbm").capacity_bytes
+    assert part.budget_bytes == hbm // 2
+    assert part.n_buffers == 1          # KV rows are resident, not streamed x2
+    # the budget formula is CapacityPartition.required_bytes, same as tiling
+    assert part.required_bytes(100, 7) == 107
+
+
+def test_pool_partition_mempool_uses_cluster_spm():
+    target = get_target("mempool-3d-4mib")
+    part = sm.pool_partition(target, fraction=1.0)
+    assert part.budget_bytes == target.scratchpad_bytes
+
+
+def test_derive_n_slots_scales_with_capacity_and_len():
+    few = sm.derive_n_slots(TINY, 4096, target=get_target("mempool-2d-1mib"),
+                            max_slots=10_000)
+    more = sm.derive_n_slots(TINY, 4096, target=get_target("mempool-2d-8mib"),
+                             max_slots=10_000)
+    assert more > few                   # bigger pool -> more resident slots
+    shorter = sm.derive_n_slots(TINY, 1024,
+                                target=get_target("mempool-2d-1mib"),
+                                max_slots=10_000)
+    assert shorter > few                # shorter slots -> more of them
+    assert sm.derive_n_slots(TINY, 10**9,
+                             target=get_target("mempool-2d-1mib")) == 1
