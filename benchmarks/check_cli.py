@@ -1,7 +1,10 @@
-"""CI tooling check: every runnable benchmark script accepts ``--target``.
+"""CI tooling check: every runnable benchmark script accepts ``--target``,
+and the serving benchmark exposes the paged two-tier pool flags.
 
 Target selection by name is the registry contract (DESIGN.md
-§HardwareTarget); this check keeps new benchmark scripts honest. Runs each
+§HardwareTarget); the serve benchmark's ``--paged`` / tier-budget flags are
+the contract for the dense-vs-paged capacity comparison (DESIGN.md §Paged
+two-tier pool). This check keeps new benchmark scripts honest. Runs each
 script's ``--help`` in-process and greps the usage text.
 
     PYTHONPATH=src python -m benchmarks.check_cli
@@ -19,6 +22,12 @@ import sys
 #: library modules, not CLI entry points
 NON_CLI = {"common.py", "check_cli.py", "__init__.py"}
 
+#: per-script extra required flags, beyond the universal --target
+EXTRA_FLAGS = {
+    "serve_bench.py": ("--paged", "--page-tokens", "--layer0-bytes",
+                       "--layer1-bytes", "--require-spill"),
+}
+
 
 def check(path: str) -> str:
     """Returns '' if ok, else a failure reason."""
@@ -35,8 +44,11 @@ def check(path: str) -> str:
         return f"{type(e).__name__}: {e}"
     finally:
         sys.argv = argv
-    if "--target" not in buf.getvalue():
-        return "--help does not mention --target"
+    missing = [flag for flag in
+               ("--target",) + EXTRA_FLAGS.get(os.path.basename(path), ())
+               if flag not in buf.getvalue()]
+    if missing:
+        return f"--help does not mention {', '.join(missing)}"
     return ""
 
 

@@ -1,19 +1,28 @@
-"""Serving benchmark: static batching vs continuous batching tokens/s.
+"""Serving benchmark: static vs continuous vs paged-two-tier tokens/s AND
+pool footprint.
 
-Drives the same synthetic mixed-length request stream through the same
-Engine twice:
+Drives the same synthetic mixed short/long request stream through the same
+Engine in up to three modes:
 
   * **static** — requests are grouped into fixed batches of ``n_slots``; a
     batch admits once and decodes until its SLOWEST request drains (empty
     slots idle — the classic straggler cost).
   * **continuous** — one scheduler over the whole stream; drained slots are
-    refilled from the queue at every drain boundary.
+    refilled from the queue at every drain boundary. Dense pool: every slot
+    reserves a ``max_len``-deep KV slab.
+  * **paged** (``--paged``) — the paged two-tier pool inside the SAME
+    layer-0 byte budget the dense pool used: admission by pages, spill to
+    the layer-1 tier under pressure. The interesting number is not just
+    tok/s but *concurrent slots per byte* — the capacity win the paper gets
+    from stacking a second memory layer.
 
-Both modes share the jitted prefill/decode functions, so the measured delta
-is scheduling, not compilation. Emits ``benchmarks/artifacts/
-serve_bench.json`` — the serving datapoint of the perf trajectory.
+Every record carries pool bytes and pages-in-use next to throughput, so the
+dense-vs-paged comparison shows capacity, not just speed. Emits
+``benchmarks/artifacts/serve_bench.json``.
 
-    PYTHONPATH=src python -m benchmarks.serve_bench [--target NAME] [...]
+    PYTHONPATH=src python -m benchmarks.serve_bench [--target NAME] [--paged]
+        [--page-tokens N] [--layer0-bytes B] [--layer1-bytes B]
+        [--require-spill] [...]
 """
 
 from __future__ import annotations
@@ -21,30 +30,37 @@ from __future__ import annotations
 import argparse
 import sys
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from benchmarks.common import add_target_arg, fmt_table, save_artifact, \
     target_scope
 
 
-def _run_mode(engine, stream: List[Dict], n_slots: int, mode: str) -> Dict:
+def _run_mode(engine, stream: List[Dict], n_slots: int, mode: str,
+              geom=None) -> Dict:
     from repro.serve.scheduler import Scheduler
+
+    def make_sched():
+        return Scheduler(n_slots=n_slots,
+                         pages=geom if mode == "paged" else None)
+
     t0 = time.monotonic()
     reports = []
-    if mode == "continuous":
-        sch = Scheduler(n_slots=n_slots)
-        for spec in stream:
-            sch.submit(spec["prompt"], spec["max_new_tokens"])
-        reports.append(engine.serve(scheduler=sch))
-    else:                                   # static: one batch at a time
+    if mode == "static":                    # one batch at a time
         for i in range(0, len(stream), n_slots):
-            sch = Scheduler(n_slots=n_slots)
+            sch = make_sched()
             for spec in stream[i:i + n_slots]:
                 sch.submit(spec["prompt"], spec["max_new_tokens"])
             reports.append(engine.serve(scheduler=sch))
+    else:                                   # continuous / paged
+        sch = make_sched()
+        for spec in stream:
+            sch.submit(spec["prompt"], spec["max_new_tokens"])
+        reports.append(engine.serve(scheduler=sch))
     dt = time.monotonic() - t0
     n_tokens = sum(len(r.tokens) for rep in reports for r in rep.requests)
-    return {
+    last = reports[-1].stats
+    rec = {
         "mode": mode,
         "wall_s": dt,
         "n_tokens": n_tokens,
@@ -54,18 +70,38 @@ def _run_mode(engine, stream: List[Dict], n_slots: int, mode: str) -> Dict:
         "max_slot_reuse": max(rep.stats["max_slot_reuse"]
                               for rep in reports),
         "completed": sum(rep.stats["drained"] for rep in reports),
+        "n_slots": n_slots,
+        "preemptions": sum(rep.stats["preemptions"] for rep in reports),
+        "spilled_pages": sum(rep.stats["spilled_pages"] for rep in reports),
+        "restores": sum(rep.stats["restores"] for rep in reports),
     }
+    if mode == "paged":
+        rec.update({
+            "pool_bytes": last["pool_bytes"],
+            "spill_bytes": last["spill_bytes"],
+            "page_tokens": last["page_tokens"],
+            "n_pages": last["n_pages"],
+            "pages_high_water": max(rep.stats["pages_high_water"]
+                                    for rep in reports),
+            "spill_high_water": max(rep.stats["spill_high_water"]
+                                    for rep in reports),
+        })
+    return rec
 
 
 def run(target_name=None, arch: str = "qwen2.5-3b", n_requests: int = 32,
         prompt_len: int = 16, gen_len: int = 12, n_slots: int = None,
-        seed: int = 0) -> str:
+        seed: int = 0, paged: bool = False, page_tokens: int = 8,
+        layer0_bytes: Optional[int] = None,
+        layer1_bytes: Optional[int] = None, max_slots: int = 32,
+        require_spill: bool = False) -> str:
     import jax
     from repro.configs import get_reduced
     from repro.core.target import get_target
     from repro.models import build_model
     from repro.serve.engine import Engine, EngineConfig
-    from repro.serve.scheduler import derive_n_slots, synthetic_stream
+    from repro.serve.scheduler import (derive_n_slots, derive_page_geometry,
+                                       kv_bytes_per_token, synthetic_stream)
 
     with target_scope(target_name):
         target = get_target()
@@ -78,29 +114,69 @@ def run(target_name=None, arch: str = "qwen2.5-3b", n_requests: int = 32,
                         EngineConfig(max_len=max_len, sync_interval=4))
         stream = synthetic_stream(n_requests, prompt_len, gen_len,
                                   cfg.vocab_size, seed)
+        # the dense pool's layer-0 footprint is the shared byte budget:
+        # the paged pool must beat it on concurrency INSIDE the same bytes
+        dense_bytes = n_slots * kv_bytes_per_token(cfg) * max_len
+        modes = [("static", n_slots, None), ("continuous", n_slots, None)]
+        geom = None
+        if paged:
+            geom = derive_page_geometry(
+                cfg, max_len, page_tokens=page_tokens, max_slots=max_slots,
+                layer0_bytes=(layer0_bytes if layer0_bytes is not None
+                              else dense_bytes),
+                layer1_bytes=layer1_bytes)
+            paged_slots = derive_n_slots(cfg, max_len, pages=geom,
+                                         max_slots=max_slots)
+            modes.append(("paged", paged_slots, geom))
         # warmup: compile prefill (per distinct prompt length) + decode chunk
-        _run_mode(engine, stream, n_slots, "continuous")
-        recs = [_run_mode(engine, stream, n_slots, m)
-                for m in ("static", "continuous")]
+        for mode, slots, g in modes[1:]:
+            _run_mode(engine, stream, slots, mode, g)
+        recs = [_run_mode(engine, stream, slots, mode, g)
+                for mode, slots, g in modes]
 
-    stat, cont = recs
+    by_mode = {r["mode"]: r for r in recs}
+    stat, cont = by_mode["static"], by_mode["continuous"]
+    for r in recs:
+        r["pool_bytes"] = r.get("pool_bytes", dense_bytes)
     speedup = (cont["tok_per_s"] / stat["tok_per_s"]
                if stat["tok_per_s"] else 0.0)
     artifact = {
         "arch": cfg.name, "target": target.name, "n_requests": n_requests,
         "prompt_len": prompt_len, "gen_len": gen_len, "n_slots": n_slots,
+        "dense_pool_bytes": dense_bytes,
         "static": stat, "continuous": cont, "speedup_tok_per_s": speedup,
     }
+    lines = []
+    if paged:
+        pg = by_mode["paged"]
+        slots_ratio = pg["n_slots"] / max(cont["n_slots"], 1)
+        artifact.update({
+            "paged": pg,
+            "slots_ratio_paged_vs_dense": slots_ratio,
+            "layer0_bytes": pg["pool_bytes"],
+            "layer1_bytes": pg["spill_bytes"],
+        })
+        lines.append(
+            f"paged vs dense concurrency: {pg['n_slots']} vs "
+            f"{cont['n_slots']} slots in {pg['pool_bytes']} layer-0 bytes "
+            f"({slots_ratio:.2f}x), spill tier: {pg['preemptions']} "
+            f"preemptions / {pg['spilled_pages']} pages")
+        if require_spill and pg["preemptions"] < 1:
+            raise SystemExit(
+                "serve_bench --require-spill: the layer-1 spill tier was "
+                "never exercised — shrink --layer0-bytes")
     save_artifact("serve_bench.json", artifact)
-    rows = [[r["mode"], f"{r['tok_per_s']:.1f}", r["n_tokens"],
-             r["decode_steps"], r["host_syncs"], r["max_slot_reuse"],
+    rows = [[r["mode"], f"{r['tok_per_s']:.1f}", r["n_tokens"], r["n_slots"],
+             r["pool_bytes"], r.get("pages_high_water", "-"),
+             r["preemptions"], r["max_slot_reuse"],
              f"{r['wall_s']*1e3:.0f} ms"] for r in recs]
     table = fmt_table(
-        ["mode", "tok/s", "tokens", "decode steps", "host syncs",
-         "max slot reuse", "wall"],
-        rows, title=f"Serve bench — {cfg.name}, {n_requests} requests, "
-                    f"{n_slots} slots ({target.name})")
-    return table + f"\ncontinuous/static speedup: {speedup:.2f}x"
+        ["mode", "tok/s", "tokens", "slots", "pool bytes", "pages hw",
+         "preempt", "max reuse", "wall"],
+        rows, title=f"Serve bench — {cfg.name}, {n_requests} requests "
+                    f"({target.name})")
+    return "\n".join([table,
+                      f"continuous/static speedup: {speedup:.2f}x"] + lines)
 
 
 def main(argv=None) -> int:
@@ -111,10 +187,28 @@ def main(argv=None) -> int:
     ap.add_argument("--gen-len", type=int, default=12)
     ap.add_argument("--slots", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="also run the paged two-tier pool inside the dense "
+                         "pool's layer-0 byte budget")
+    ap.add_argument("--page-tokens", type=int, default=8,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--layer0-bytes", type=int, default=None,
+                    help="layer-0 (hot tier) budget; default: the dense "
+                         "pool's footprint")
+    ap.add_argument("--layer1-bytes", type=int, default=None,
+                    help="layer-1 (spill tier) budget; default: derived "
+                         "from the target's TieredPartition")
+    ap.add_argument("--max-slots", type=int, default=32,
+                    help="cap on paged-mode concurrent slots")
+    ap.add_argument("--require-spill", action="store_true",
+                    help="fail unless the layer-1 spill tier was exercised")
     add_target_arg(ap)
     args = ap.parse_args(argv)
     print(run(args.target, args.arch, args.requests, args.prompt_len,
-              args.gen_len, args.slots, args.seed))
+              args.gen_len, args.slots, args.seed, paged=args.paged,
+              page_tokens=args.page_tokens, layer0_bytes=args.layer0_bytes,
+              layer1_bytes=args.layer1_bytes, max_slots=args.max_slots,
+              require_spill=args.require_spill))
     return 0
 
 

@@ -14,6 +14,10 @@ is that seam (see DESIGN.md §HardwareTarget):
     (multiplied by ``n_buffers`` for the DMA double-buffer pipeline, with a
     floor margin for partially-buffered flows — MemPool's quarter-tile
     slack) and *resident* state (accumulators, running SSM state).
+  * :class:`TieredPartition` — a CapacityPartition stacked across two memory
+    layers (the paper's logic-die / memory-die split): layer-0 and layer-1
+    byte budgets under the same ``required_bytes`` contract. The serving
+    pool partitions its paged KV cache with it (hot tier / spill tier).
   * a process-wide registry: :func:`get_target` / :func:`set_target` with an
     environment override (``REPRO_TARGET``, read via
     :mod:`repro.runtime_flags`) so launchers and benchmarks select targets
@@ -127,6 +131,58 @@ class CapacityPartition:
 
     def with_buffers(self, n_buffers: int) -> "CapacityPartition":
         return dataclasses.replace(self, n_buffers=n_buffers)
+
+    def stacked(self, layer1_fraction: float) -> "TieredPartition":
+        """Stack a second memory layer on this partition (the paper's 3D
+        move): layer 0 keeps this budget, layer 1 adds
+        ``layer1_fraction x capacity`` of the same level — a second die
+        bonded on top, holding capacity the 2D floorplan could not."""
+        if layer1_fraction < 0.0:
+            raise ValueError(
+                f"layer1_fraction must be >= 0, got {layer1_fraction}")
+        layer1 = dataclasses.replace(
+            self, capacity_bytes=int(self.capacity_bytes * layer1_fraction))
+        return TieredPartition(layer0=self, layer1=layer1)
+
+
+@dataclasses.dataclass(frozen=True)
+class TieredPartition:
+    """A :class:`CapacityPartition` split across two stacked memory layers.
+
+    MemPool-3D's headline move is partitioning one logical memory across two
+    bonded dies: layer 0 (the logic die's fast share) and layer 1 (the
+    stacked memory die). The serving pool reuses the shape: layer 0 is the
+    hot tier resident sequences decode against; layer 1 is the spill tier
+    preempted sequences park in — same budget formula, one more layer.
+    """
+
+    layer0: CapacityPartition
+    layer1: CapacityPartition
+
+    @property
+    def tiers(self) -> Tuple[CapacityPartition, ...]:
+        return (self.layer0, self.layer1)
+
+    @property
+    def budget_bytes(self) -> int:
+        """Combined two-layer budget (the 3D capacity win)."""
+        return self.layer0.budget_bytes + self.layer1.budget_bytes
+
+    def tier_budgets(self) -> Tuple[int, int]:
+        return (self.layer0.budget_bytes, self.layer1.budget_bytes)
+
+    def units_per_tier(self, unit_bytes: int,
+                       resident_bytes: int = 0) -> Tuple[int, int]:
+        """How many ``unit_bytes``-sized blocks each layer sustains, pricing
+        one unit with the SAME ``required_bytes`` contract the tile planner
+        uses. ``resident_bytes`` is charged against layer 0 only (resident
+        state never spills a layer down by itself)."""
+        out = []
+        for i, tier in enumerate(self.tiers):
+            budget = tier.budget_bytes - (resident_bytes if i == 0 else 0)
+            per = tier.required_bytes(unit_bytes)
+            out.append(max(0, budget // max(per, 1)))
+        return (out[0], out[1])
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,229 @@
+"""Paged decode attention: walk a block table over a flat page pool.
+
+The paged two-tier KV pool (DESIGN.md §Paged two-tier pool) stores KV as a
+flat array of fixed-size pages — ``(n_pages, ..., page_tokens, ...)`` — and
+each sequence slot maps logical page indices to physical pages through an
+int32 block table. This module owns the decode-attention math over that
+layout:
+
+  * :func:`decode_attention_masked` — the dense masked decode-attention
+    oracle (GQA without materializing repeated K/V, traced valid-prefix
+    masking). This is THE reference: the dense slot-slab serving path calls
+    it directly, and the paged path reduces to it after a gather, so
+    paged == dense is bit-exact by construction.
+  * :func:`gather_kv_pages` — block-table gather: physical pages back into
+    a per-slot contiguous view.
+  * :func:`paged_decode_attention` — the public entry. On CPU (and under
+    ``impl="ref"``) it gathers and calls the oracle; on TPU it runs the
+    Pallas page-walk kernel: grid over (slot, kv-head, page), the block
+    table scalar-prefetched so the index map DMAs exactly the pages the
+    slot owns — the two-tier pool's analogue of MemPool fetching only the
+    banks a tile maps to. Fully-masked pages (beyond the slot's frontier)
+    are skipped with ``pl.when``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = float("-inf")
+_STATS_LANES = 128   # stats scratch is (group, 128) for TPU lane alignment
+
+
+# ------------------------------------------------------------------ oracle
+
+
+def decode_attention_masked(q, k, v, cache_len, *, window=None, causal=True):
+    """Masked attention with a traced valid-prefix length (decode path).
+
+    GQA WITHOUT materializing repeated K/V: q is viewed as
+    (B, Hkv, group, S, D) and contracted against the (B, Hkv, T, D) cache —
+    a jnp.repeat here lowers to broadcast+reshape that merges the head dims,
+    which breaks GSPMD's seq-sharding propagation and all-gathers the whole
+    pooled cache per layer (§Perf, decode/h3).
+
+    ``cache_len`` is a scalar or a per-row ``(B,)`` vector (slot pool: rows
+    at different fill depths decode in one batched step). Positions at or
+    beyond a row's frontier — including stale K/V left over from a padded
+    prefill or a previous occupant of the slot — are masked out, so a slot
+    row never attends across its own reuse boundary."""
+    b, hq, s, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, hkv, group, s, d)
+    logits = jnp.einsum("bhgsd,bhtd->bhgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if isinstance(cache_len, jax.Array) and cache_len.ndim == 1:
+        # (B,1,1,1,1): broadcasts against logits' (B,Hkv,group,S,T)
+        cache_len = cache_len.reshape(b, 1, 1, 1, 1)
+    qpos = cache_len + jnp.arange(s)[:, None]
+    tpos = jnp.arange(skv)[None, :]
+    mask = tpos < cache_len + s            # written region only
+    if causal:
+        mask = mask & (tpos <= qpos)
+    if window is not None:
+        mask = mask & (tpos > qpos - window)
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bhtd->bhgsd",
+                     probs.astype(jnp.float32), v.astype(jnp.float32))
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ gather
+
+
+def gather_kv_pages(pages: jax.Array, block_tables: jax.Array, *,
+                    seq_axis: int) -> jax.Array:
+    """Walk the block table: physical pages -> per-slot contiguous KV.
+
+    ``pages`` is ``(n_pages, *page_shape)`` with ``page_shape[seq_axis] ==
+    page_tokens``; ``block_tables`` is ``(B, P)`` int32. Returns
+    ``(B, *page_shape)`` with the seq axis widened to ``P * page_tokens``.
+    Unmapped entries (null page 0) gather junk that the caller's frontier
+    mask must hide — exactly like stale rows in the dense slab.
+    """
+    gathered = pages[block_tables]                 # (B, P, *page_shape)
+    gathered = jnp.moveaxis(gathered, 1, seq_axis + 1)
+    shape = list(gathered.shape)
+    merged = shape[:seq_axis + 1] + [shape[seq_axis + 1] * shape[seq_axis + 2]]
+    return gathered.reshape(merged + shape[seq_axis + 3:])
+
+
+# ------------------------------------------------------------ Pallas kernel
+
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *,
+                         page_tokens: int, n_pages_per_slot: int,
+                         scale: float, window: int | None):
+    """One (slot, kv-head, logical page) cell of the page walk."""
+    ib, ip = pl.program_id(0), pl.program_id(2)
+    frontier = len_ref[ib]                    # this slot's filled prefix
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Skip pages wholly beyond the frontier (unmapped tail -> null page).
+    lo = ip * page_tokens
+    visible = lo <= frontier
+    if window is not None:
+        visible &= (lo + page_tokens - 1) > frontier - window
+
+    @pl.when(visible)
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)             # (group, d)
+        k = k_ref[0, 0].astype(jnp.float32)             # (pt, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        pos = lo + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], page_tokens), 1)
+        mask = pos <= frontier                          # causal + written
+        if window is not None:
+            mask &= pos > frontier - window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_ref[:, :1]
+        l_prev = l_ref[:, :1]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.where(m_prev > _NEG_INF, jnp.exp(m_prev - m_new), 0.0)
+        p = jnp.where(s > _NEG_INF, jnp.exp(s - m_new), 0.0)
+        l_new = alpha * l_prev + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ip == n_pages_per_slot - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       block_tables: jax.Array, cache_len: jax.Array, *,
+                       window: int | None = None,
+                       interpret: bool = False) -> jax.Array:
+    """Pallas page-walk decode attention.
+
+    q: (B, Hq, 1, D); k_pages/v_pages: (n_pages, Hkv, page_tokens, D);
+    block_tables: (B, P) int32; cache_len: (B,) int32. The block table and
+    frontier vector are scalar-prefetched so each grid step's index map
+    resolves the PHYSICAL page to DMA — the kernel never touches pages the
+    slot does not own (page 0 junk is masked like any stale row).
+    """
+    b, hq, s, d = q.shape
+    assert s == 1, "paged decode attention is single-token"
+    n_pages, hkv, page_tokens, dv = (k_pages.shape[0], k_pages.shape[1],
+                                     k_pages.shape[2], v_pages.shape[-1])
+    group = hq // hkv
+    p_max = block_tables.shape[1]
+    qg = q.reshape(b, hkv, group, d)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, page_tokens=page_tokens,
+        n_pages_per_slot=p_max, scale=d ** -0.5, window=window)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, p_max),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d),
+                         lambda ib, ih, ip, bt, ln: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, page_tokens, d),
+                         lambda ib, ih, ip, bt, ln: (bt[ib, ip], ih, 0, 0)),
+            pl.BlockSpec((1, 1, page_tokens, dv),
+                         lambda ib, ih, ip, bt, ln: (bt[ib, ip], ih, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, dv),
+                               lambda ib, ih, ip, bt, ln: (ib, ih, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, _STATS_LANES), jnp.float32),
+            pltpu.VMEM((group, _STATS_LANES), jnp.float32),
+            pltpu.VMEM((group, dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, dv), q.dtype),
+        interpret=interpret,
+    )(block_tables, cache_len.astype(jnp.int32), qg, k_pages, v_pages)
+    return out.reshape(b, hq, 1, dv)
+
+
+# ------------------------------------------------------------------ entry
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           cache_len: jax.Array, *,
+                           window: int | None = None,
+                           causal: bool = True,
+                           impl: str = "auto") -> jax.Array:
+    """Decode attention over the paged pool; dense math is the oracle.
+
+    ``impl="auto"`` walks pages with the Pallas kernel on TPU and takes the
+    gather + :func:`decode_attention_masked` path elsewhere — the latter is
+    bit-identical to the dense slot-slab path, which serving relies on for
+    paged == dense equivalence (tolerances only enter with the Pallas
+    kernel's online softmax, validated in tests/test_kernels.py).
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    use_pallas = (impl == "pallas") or (impl == "auto" and on_tpu)
+    if use_pallas and causal:
+        return paged_flash_decode(q, k_pages, v_pages, block_tables,
+                                  cache_len, window=window,
+                                  interpret=not on_tpu)
+    k = gather_kv_pages(k_pages, block_tables, seq_axis=1)
+    v = gather_kv_pages(v_pages, block_tables, seq_axis=1)
+    return decode_attention_masked(q, k, v, cache_len,
+                                   window=window, causal=causal)

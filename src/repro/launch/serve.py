@@ -6,10 +6,16 @@ Two modes through the same Engine (pooled KV cache):
     reporting total latency and throughput.
   * ``--stream N`` — continuous batching: N synthetic requests with mixed
     prompt/output lengths flow through the scheduler's slot table; reports
-    per-request queueing/decode latency percentiles and aggregate tokens/s.
+    per-request TTFT / end-to-end latency percentiles (from the
+    scheduler's per-request clocks) and aggregate tokens/s.
+  * ``--stream N --paged`` — the same stream over the paged two-tier pool:
+    admission by pages, preempt-and-spill to the layer-1 tier when layer 0
+    runs out. ``--page-tokens`` / ``--layer0-bytes`` / ``--layer1-bytes``
+    shape the pool; preemption/spill counters join the report.
 
 Hardware target selection: ``--target <name>`` (or ``REPRO_TARGET``) — the
-slot budget is derived from that target's CapacityPartition.
+slot/page budgets are derived from that target's CapacityPartition
+(two-tier via its stacked TieredPartition in paged mode).
 """
 
 from __future__ import annotations
@@ -30,7 +36,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.serve.engine import Engine, EngineConfig
 from repro.serve.scheduler import (DRAINED, Scheduler, derive_n_slots,
-                                   synthetic_stream)
+                                   derive_page_geometry, synthetic_stream)
 
 
 def _percentile(xs, q):
@@ -47,26 +53,38 @@ def run_stream(engine: Engine, scheduler: Scheduler, n_requests: int,
     t0 = time.monotonic()
     report = engine.serve(scheduler=scheduler)
     dt = time.monotonic() - t0
+    stats = report.stats
     n_tokens = sum(len(r.tokens) for r in report.requests)
     served = [r for r in report.requests if r.status == DRAINED]
-    queue_steps = [r.admit_step - r.submit_step for r in served]
     decode_steps = [r.finish_step - r.admit_step for r in served
                     if r.finish_step >= 0]
-    return {
+    rec = {
         "n_requests": n_requests,
-        "completed": report.stats["drained"],
+        "completed": stats["drained"],
         "n_tokens": n_tokens,
         "wall_s": dt,
         "tok_per_s": n_tokens / dt if dt else 0.0,
-        "host_syncs": report.stats["host_syncs"],
-        "decode_steps_total": report.stats["decode_steps"],
-        "n_slots": report.stats["n_slots"],
-        "max_slot_reuse": report.stats["max_slot_reuse"],
-        "queue_steps_p50": _percentile(queue_steps, 50),
-        "queue_steps_p95": _percentile(queue_steps, 95),
+        "host_syncs": stats["host_syncs"],
+        "decode_steps_total": stats["decode_steps"],
+        "n_slots": stats["n_slots"],
+        "max_slot_reuse": stats["max_slot_reuse"],
+        # per-request latency percentiles from the scheduler's clocks —
+        # TTFT (submit -> admission) and end-to-end (submit -> drain)
+        "ttft_steps_p50": _percentile(stats["ttft_steps"], 50),
+        "ttft_steps_p95": _percentile(stats["ttft_steps"], 95),
+        "e2e_steps_p50": _percentile(stats["e2e_steps"], 50),
+        "e2e_steps_p95": _percentile(stats["e2e_steps"], 95),
         "decode_steps_p50": _percentile(decode_steps, 50),
         "decode_steps_p95": _percentile(decode_steps, 95),
+        "preemptions": stats["preemptions"],
+        "spilled_pages": stats["spilled_pages"],
+        "restores": stats["restores"],
     }
+    if stats.get("paged"):
+        rec.update({k: stats[k] for k in (
+            "page_tokens", "n_pages", "n_spill_pages", "pages_high_water",
+            "spill_high_water", "pool_bytes", "spill_bytes")})
+    return rec
 
 
 def main(argv=None) -> int:
@@ -84,7 +102,17 @@ def main(argv=None) -> int:
     ap.add_argument("--slots", type=int, default=None,
                     help="override the CapacityPartition-derived slot count")
     ap.add_argument("--sync-interval", type=int, default=8)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve --stream over the paged two-tier KV pool")
+    ap.add_argument("--page-tokens", type=int, default=16,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--layer0-bytes", type=int, default=None,
+                    help="override the layer-0 (hot tier) page-pool budget")
+    ap.add_argument("--layer1-bytes", type=int, default=None,
+                    help="override the layer-1 (spill tier) budget")
     args = ap.parse_args(argv)
+    if args.paged and not args.stream:
+        ap.error("--paged applies to --stream serving")
 
     cfg = get_config(args.arch) if args.full else get_reduced(args.arch)
     if args.stream and (cfg.family == "encdec" or cfg.frontend_len):
@@ -103,22 +131,43 @@ def main(argv=None) -> int:
                                      sync_interval=args.sync_interval))
 
         if args.stream:
+            pages = None
+            if args.paged:
+                pages = derive_page_geometry(
+                    cfg, max_len, page_tokens=args.page_tokens,
+                    max_slots=max(2, args.batch),
+                    layer0_bytes=args.layer0_bytes,
+                    layer1_bytes=args.layer1_bytes)
             n_slots = args.slots or derive_n_slots(
-                cfg, max_len, max_slots=max(2, args.batch))
-            sched = Scheduler(n_slots=n_slots)
+                cfg, max_len, max_slots=max(2, args.batch), pages=pages)
+            sched = Scheduler(n_slots=n_slots, pages=pages)
             rec = run_stream(engine, sched, args.stream, args.prompt_len,
                              args.gen_len, cfg.vocab_size)
-            print(f"arch={cfg.name} stream={args.stream} "
+            mode = "paged" if args.paged else "dense"
+            print(f"arch={cfg.name} stream={args.stream} mode={mode} "
                   f"slots={rec['n_slots']} (max reuse {rec['max_slot_reuse']})")
             print(f"completed {rec['completed']}/{rec['n_requests']} "
                   f"({rec['n_tokens']} tokens) in {rec['wall_s']*1e3:.0f} ms "
                   f"-> {rec['tok_per_s']:.1f} tok/s")
             print(f"host syncs {rec['host_syncs']} over "
                   f"{rec['decode_steps_total']} decode steps")
-            print(f"latency (decode steps): queue p50/p95 "
-                  f"{rec['queue_steps_p50']:.0f}/{rec['queue_steps_p95']:.0f}, "
-                  f"decode p50/p95 {rec['decode_steps_p50']:.0f}/"
-                  f"{rec['decode_steps_p95']:.0f}", flush=True)
+            print(f"latency (decode steps): ttft p50/p95 "
+                  f"{rec['ttft_steps_p50']:.0f}/{rec['ttft_steps_p95']:.0f}, "
+                  f"e2e p50/p95 {rec['e2e_steps_p50']:.0f}/"
+                  f"{rec['e2e_steps_p95']:.0f}, decode p50/p95 "
+                  f"{rec['decode_steps_p50']:.0f}/"
+                  f"{rec['decode_steps_p95']:.0f}")
+            if args.paged:
+                print(f"pages: {rec['pages_high_water']}/{rec['n_pages']} "
+                      f"layer-0 high water ({rec['pool_bytes']} B), "
+                      f"{rec['preemptions']} preemptions -> "
+                      f"{rec['spilled_pages']} pages spilled, "
+                      f"{rec['restores']} restores "
+                      f"(layer-1 high water {rec['spill_high_water']}/"
+                      f"{rec['n_spill_pages']})", flush=True)
+            else:
+                print(f"preemptions {rec['preemptions']} (dense pool)",
+                      flush=True)
             return 0
 
         key = jax.random.PRNGKey(1)

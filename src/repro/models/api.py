@@ -142,13 +142,16 @@ class Model:
 
     def decode_step(self, params, tokens: jax.Array, state: Dict[str, Any],
                     cache_len: jax.Array, *,
-                    plans: Optional[KernelPlans] = None):
+                    plans: Optional[KernelPlans] = None,
+                    block_tables: Optional[jax.Array] = None):
         """One decode step for every row of the batch.
 
         ``cache_len`` is the filled KV prefix per row: a scalar when all rows
         share one frontier (one-shot ``Engine.generate``) or a ``(B,)``
         vector when rows are independent slots of the pooled KV cache
-        (continuous batching). All masking stays on-device.
+        (continuous batching). With ``block_tables`` (B, P) the state holds
+        the paged two-tier pool and every attention layer walks the table.
+        All masking stays on-device.
         """
         cfg = self.cfg
         if cfg.family == "encdec":
@@ -161,7 +164,8 @@ class Model:
             return logits, {**state, "caches": caches}
         logits, caches = transformer.decode_step(cfg, params, tokens,
                                                  state["caches"], cache_len,
-                                                 plans=plans)
+                                                 plans=plans,
+                                                 block_tables=block_tables)
         return logits, {**state, "caches": caches}
 
     def slot_update(self, pool_state: Dict[str, Any],
@@ -190,6 +194,48 @@ class Model:
             new_state["enc_out"] = _scatter(0)(pool_state["enc_out"],
                                                row_state["enc_out"])
         return new_state
+
+    def slot_update_paged(self, pool_state: Dict[str, Any],
+                          row_state: Dict[str, Any], slot: jax.Array,
+                          block_row: jax.Array, page_tokens: int
+                          ) -> Dict[str, Any]:
+        """Scatter a prefilled dense row into the paged two-tier pool.
+
+        The row's contiguous ``depth = P * page_tokens`` KV is cut into P
+        pages and written at the physical pages ``block_row`` maps (the
+        slot's block-table row; unmapped tail entries point at null page 0,
+        so their junk lands in memory no sequence reads). Recurrent SSM
+        state keeps the dense per-slot scatter at ``slot``.
+        """
+        p_max = block_row.shape[0]
+
+        def scatter_gqa(pool, row):
+            r, _, hkv, _, hd = row.shape
+            cut = row[:, 0].reshape(r, hkv, p_max, page_tokens, hd)
+            cut = jnp.moveaxis(cut, 2, 1).astype(pool.dtype)
+            return pool.at[:, block_row].set(cut)
+
+        def scatter_mla(pool, row):
+            r, _, _, lat = row.shape
+            cut = row[:, 0].reshape(r, p_max, page_tokens, lat)
+            return pool.at[:, block_row].set(cut.astype(pool.dtype))
+
+        def scatter_slot(pool, row):
+            return jax.lax.dynamic_update_slice_in_dim(
+                pool, row.astype(pool.dtype), slot, axis=1)
+
+        new_caches: Dict[str, Any] = {}
+        for group in self.cfg.layer_groups():
+            g: Dict[str, Any] = {}
+            for pos, kind in enumerate(group.pattern):
+                key = f"pos{pos}"
+                fn = {"mamba": scatter_slot,
+                      "mla": scatter_mla}.get(kind.attn, scatter_gqa)
+                g[key] = jax.tree.map(fn,
+                                      pool_state["caches"][group.name][key],
+                                      row_state["caches"][group.name][key])
+            new_caches[group.name] = g
+        return {**pool_state, "caches": new_caches}
 
     # ------------------------------------------------------ input specs
     def input_specs(self, shape: ShapeCfg,

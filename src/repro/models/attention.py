@@ -7,6 +7,18 @@ cannot shard, e.g. long_500k's batch=1). The attention math below is written
 so GSPMD turns the softmax reductions into partial max/sum + psum over the
 cache shards — flash-decoding across chips, i.e. remote "banks" at the group
 level of the hierarchy.
+
+Two cache layouts share the math:
+
+  * **dense slot slab** — ``(B, ..., max_len, ...)``, one worst-case-deep
+    slab per slot. This is the oracle path.
+  * **paged pool** — ``(n_pages, ..., page_tokens, ...)``, a flat page pool
+    addressed through per-slot block tables (the two-tier pool of
+    DESIGN.md §Paged two-tier pool). Writes resolve
+    ``cache_len -> (physical page, offset)`` through the block table;
+    reads walk the table (:mod:`repro.kernels.paged_attention`). A paged
+    decode is bit-exact with the dense one: the gather reassembles the
+    same contiguous view the slab holds.
 """
 
 from __future__ import annotations
@@ -20,6 +32,9 @@ import jax.numpy as jnp
 from repro.core import tiling
 from repro.distributed.sharding import BATCH, shard
 from repro.kernels import ops
+from repro.kernels.paged_attention import (decode_attention_masked,
+                                           gather_kv_pages,
+                                           paged_decode_attention)
 from repro.models import layers
 from repro.models.config import LayerKind, ModelConfig
 from repro.models.layers import cast, linear
@@ -51,6 +66,31 @@ def _cache_write(cache_arr: jax.Array, new: jax.Array, cache_len,
                                                cache_len, axis)
 
 
+def _paged_cache_write(pages: jax.Array, new: jax.Array,
+                       cache_len: jax.Array, block_tables: jax.Array,
+                       axis: int) -> jax.Array:
+    """Block-table-aware single-token append into the paged pool.
+
+    ``pages`` is ``(n_pages, *page_shape)`` with the token axis at ``axis``
+    inside a page (GQA: 1, MLA: 0); ``new`` is the dense single-token write
+    ``(B, ..., 1, ...)``. Each row's ``cache_len`` resolves to
+    ``(physical page, in-page offset)`` through its block-table row. Rows
+    whose frontier is at or past the mapped depth (a drained slot's frozen
+    decode) are routed to the reserved null page 0 — the paged analogue of
+    the dense iota-select writing nowhere.
+    """
+    pt = pages.shape[1 + axis]
+    p_max = block_tables.shape[1]
+    logical = jnp.minimum(cache_len // pt, p_max - 1)
+    phys = jnp.take_along_axis(block_tables, logical[:, None], axis=1)[:, 0]
+    phys = jnp.where(cache_len < p_max * pt, phys, 0)
+    off = cache_len % pt
+    new = new.astype(pages.dtype)
+    if axis == 0:
+        return pages.at[phys, off].set(new[:, 0])
+    return pages.at[phys, :, off].set(new[:, :, 0])
+
+
 # ---------------------------------------------------------------------- GQA
 
 def init_gqa(cfg: ModelConfig, key) -> Dict:
@@ -77,6 +117,13 @@ def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def init_gqa_pages(cfg: ModelConfig, n_pages: int, page_tokens: int,
+                   dtype=jnp.bfloat16) -> Dict:
+    """Flat page pool replacing the per-slot slab (page 0 = null page)."""
+    shape = (n_pages, cfg.n_kv_heads, page_tokens, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
 def gqa_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
                   kind: LayerKind,
                   positions: jax.Array,
@@ -86,12 +133,16 @@ def gqa_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
                   cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
                   causal: bool = True,
                   plan: Optional[tiling.AttentionPlan] = None,
+                  block_tables: Optional[jax.Array] = None,
                   ) -> Tuple[jax.Array, Optional[Dict]]:
     """x: (B, S, d). Returns (out, updated_cache).
 
     Modes: training/prefill (cache=None, full seq); decode (cache given,
     S is the new-token count, cache_len the filled prefix length);
     cross-attention (cross_kv given: precomputed encoder K/V, no cache write).
+    With ``block_tables`` the cache is the paged page pool instead of a
+    per-slot slab: single-token decode only, write + attention both walk
+    the table.
     """
     b, s, _ = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -109,6 +160,24 @@ def gqa_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
             k = layers.apply_rope(k, positions, cfg.rope_theta)
     else:
         k, v = cross_kv
+
+    if cache is not None and block_tables is not None:
+        # paged two-tier pool: block-table write, page-walk attention. The
+        # page axis takes the seq shards' role (pages spread over `model`);
+        # q replicates exactly as in the dense pooled-decode layout.
+        k_pages = _paged_cache_write(cache["k"], k, cache_len, block_tables,
+                                     axis=1)
+        v_pages = _paged_cache_write(cache["v"], v, cache_len, block_tables,
+                                     axis=1)
+        new_cache = {"k": k_pages, "v": v_pages}
+        q = shard(q, BATCH, None, None, None)
+        k_pages = shard(k_pages, "model", None, None, None)
+        v_pages = shard(v_pages, "model", None, None, None)
+        out = paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                     cache_len, window=kind.window,
+                                     causal=causal)
+        out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+        return shard(linear(out, p["wo"]), BATCH, None, None), new_cache
 
     new_cache = None
     q_offset = 0
@@ -147,42 +216,10 @@ def gqa_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
     return shard(out, BATCH, None, None), new_cache
 
 
-def _decode_attention(q, k, v, cache_len, *, window=None, causal=True):
-    """Masked attention with a traced valid-prefix length (decode path).
-
-    GQA WITHOUT materializing repeated K/V: q is viewed as
-    (B, Hkv, group, S, D) and contracted against the (B, Hkv, T, D) cache —
-    a jnp.repeat here lowers to broadcast+reshape that merges the head dims,
-    which breaks GSPMD's seq-sharding propagation and all-gathers the whole
-    pooled cache per layer (§Perf, decode/h3).
-
-    ``cache_len`` is a scalar or a per-row ``(B,)`` vector (slot pool: rows
-    at different fill depths decode in one batched step). Positions at or
-    beyond a row's frontier — including stale K/V left over from a padded
-    prefill or a previous occupant of the slot — are masked out, so a slot
-    row never attends across its own reuse boundary."""
-    b, hq, s, d = q.shape
-    hkv, skv = k.shape[1], k.shape[2]
-    group = hq // hkv
-    scale = d ** -0.5
-    qg = q.reshape(b, hkv, group, s, d)
-    logits = jnp.einsum("bhgsd,bhtd->bhgst", qg, k,
-                        preferred_element_type=jnp.float32) * scale
-    if isinstance(cache_len, jax.Array) and cache_len.ndim == 1:
-        # (B,1,1,1,1): broadcasts against logits' (B,Hkv,group,S,T)
-        cache_len = cache_len.reshape(b, 1, 1, 1, 1)
-    qpos = cache_len + jnp.arange(s)[:, None]
-    tpos = jnp.arange(skv)[None, :]
-    mask = tpos < cache_len + s            # written region only
-    if causal:
-        mask = mask & (tpos <= qpos)
-    if window is not None:
-        mask = mask & (tpos > qpos - window)
-    logits = jnp.where(mask, logits, -jnp.inf)
-    probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bhgst,bhtd->bhgsd",
-                     probs.astype(jnp.float32), v.astype(jnp.float32))
-    return out.reshape(b, hq, s, d).astype(q.dtype)
+# The masked decode-attention oracle lives in kernels/paged_attention so the
+# paged page-walk path can share its exact math (paged == dense bit-exact);
+# the dense slab path below calls the same function.
+_decode_attention = decode_attention_masked
 
 
 # ---------------------------------------------------------------------- MLA
@@ -214,12 +251,23 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
+def init_mla_pages(cfg: ModelConfig, n_pages: int, page_tokens: int,
+                   dtype=jnp.bfloat16) -> Dict:
+    """Paged latent pool: pages of the 576-dim latent, not per-head K/V."""
+    return {
+        "ckv": jnp.zeros((n_pages, page_tokens, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((n_pages, page_tokens, cfg.qk_rope_head_dim),
+                           dtype),
+    }
+
+
 def mla_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
                   kind: LayerKind,
                   positions: jax.Array,
                   cache: Optional[Dict] = None,
                   cache_len: Optional[jax.Array] = None,
                   plan: Optional[tiling.AttentionPlan] = None,
+                  block_tables: Optional[jax.Array] = None,
                   **_unused) -> Tuple[jax.Array, Optional[Dict]]:
     """Multi-head latent attention. Cache stores only the 576-dim latent —
     the paper's 'more capacity in the same footprint', algorithmically."""
@@ -242,7 +290,19 @@ def mla_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
 
     new_cache = None
     q_offset = 0
-    if cache is not None:
+    if cache is not None and block_tables is not None:
+        # paged latent pool: block-table write, then gather back the same
+        # contiguous per-slot view the dense slab holds — the absorbed
+        # decode below is untouched and bit-exact with the dense path.
+        ckv_pages = _paged_cache_write(cache["ckv"], ckv, cache_len,
+                                       block_tables, axis=0)
+        krope_pages = _paged_cache_write(cache["krope"], k_rope, cache_len,
+                                         block_tables, axis=0)
+        new_cache = {"ckv": ckv_pages, "krope": krope_pages}
+        ckv = gather_kv_pages(ckv_pages, block_tables, seq_axis=0)
+        k_rope = gather_kv_pages(krope_pages, block_tables, seq_axis=0)
+        q_offset = cache_len
+    elif cache is not None:
         ckv = _cache_write(cache["ckv"], ckv, cache_len, axis=1)
         k_rope = _cache_write(cache["krope"], k_rope, cache_len, axis=1)
         new_cache = {"ckv": ckv, "krope": k_rope}

@@ -76,11 +76,13 @@ def init_lm(cfg: ModelConfig, key) -> Params:
 
 def _apply_layer(cfg: ModelConfig, kind: LayerKind, p: Params, x: jax.Array,
                  *, positions, positions3, cache, cache_len,
-                 plans: Optional[KernelPlans] = None):
+                 plans: Optional[KernelPlans] = None, block_tables=None):
     """Returns (x, aux, new_cache)."""
     aux = jnp.zeros((), jnp.float32)
     h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
     if kind.attn == "mamba":
+        # recurrent state is per-slot resident, never paged — block tables
+        # only address the attention page pools
         y, new_attn_cache = ssm.mamba_block(
             p["mamba"], h, cfg=cfg, cache=cache,
             plan=plans.scan_chunk if plans else None)
@@ -88,7 +90,8 @@ def _apply_layer(cfg: ModelConfig, kind: LayerKind, p: Params, x: jax.Array,
         y, new_attn_cache = attn_mod.APPLY[kind.attn](
             p["attn"], h, cfg=cfg, kind=kind, positions=positions,
             positions3=positions3, cache=cache, cache_len=cache_len,
-            plan=plans.attention if plans else None)
+            plan=plans.attention if plans else None,
+            block_tables=block_tables)
     x = x + y
     if kind.mlp == "mlp":
         x = x + layers.mlp(p["mlp"], layers.rmsnorm(p["ln2"], x, cfg.norm_eps))
@@ -102,7 +105,8 @@ def _apply_layer(cfg: ModelConfig, kind: LayerKind, p: Params, x: jax.Array,
 
 def _superblock(cfg: ModelConfig, group: LayerGroup, stacked: Params,
                 x: jax.Array, caches, cache_len, positions, positions3,
-                aux: jax.Array, plans: Optional[KernelPlans] = None):
+                aux: jax.Array, plans: Optional[KernelPlans] = None,
+                block_tables=None):
     """Apply one repetition of ``group.pattern``. stacked/caches are the
     per-repetition slices (no leading axis here)."""
     new_caches = {}
@@ -111,7 +115,7 @@ def _superblock(cfg: ModelConfig, group: LayerGroup, stacked: Params,
         x, aux_i, nc = _apply_layer(cfg, kind, stacked[f"pos{pos}"], x,
                                     positions=positions, positions3=positions3,
                                     cache=cache_i, cache_len=cache_len,
-                                    plans=plans)
+                                    plans=plans, block_tables=block_tables)
         aux = aux + aux_i
         if nc is not None:
             new_caches[f"pos{pos}"] = nc
@@ -120,7 +124,8 @@ def _superblock(cfg: ModelConfig, group: LayerGroup, stacked: Params,
 
 def _run_groups(cfg: ModelConfig, params: Params, x: jax.Array, *,
                 positions, positions3=None, caches=None, cache_len=None,
-                remat: bool = True, plans: Optional[KernelPlans] = None):
+                remat: bool = True, plans: Optional[KernelPlans] = None,
+                block_tables=None):
     aux = jnp.zeros((), jnp.float32)
     new_caches: Dict[str, Any] = {}
     for group in cfg.layer_groups():
@@ -132,7 +137,7 @@ def _run_groups(cfg: ModelConfig, params: Params, x: jax.Array, *,
             p_slice, c_slice = xs
             xo, auxo, nc = _superblock(cfg, _group, p_slice, xc, c_slice,
                                        cache_len, positions, positions3, auxc,
-                                       plans)
+                                       plans, block_tables)
             return (xo, auxo), nc
 
         if remat:
@@ -152,7 +157,8 @@ def forward(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
             frontend_embeds: Optional[jax.Array] = None,
             caches=None, cache_len=None, remat: bool = True,
             positions: Optional[jax.Array] = None,
-            plans: Optional[KernelPlans] = None):
+            plans: Optional[KernelPlans] = None,
+            block_tables: Optional[jax.Array] = None):
     """tokens: (B, S) int32. Optional frontend prefix embeds (B, Sf, d) are
     concatenated before the token embeddings (vlm/audio stubs).
 
@@ -177,7 +183,7 @@ def forward(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
     x, aux, new_caches = _run_groups(cfg, params, x, positions=positions,
                                      positions3=positions3, caches=caches,
                                      cache_len=cache_len, remat=remat,
-                                     plans=plans)
+                                     plans=plans, block_tables=block_tables)
     x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     return x, aux, new_caches
 
@@ -253,6 +259,36 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
     return caches
 
 
+def init_paged_caches(cfg: ModelConfig, batch: int, n_pages: int,
+                      page_tokens: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Paged two-tier pool caches: attention layers share a flat page pool
+    (``n_pages`` pages of ``page_tokens`` tokens, page 0 = null); recurrent
+    SSM state stays per-slot resident exactly as in :func:`init_caches`."""
+    caches: Dict[str, Any] = {}
+    for group in cfg.layer_groups():
+        g: Dict[str, Any] = {}
+        for pos, kind in enumerate(group.pattern):
+            if kind.attn == "mamba":
+                one = ssm.init_mamba_cache(cfg, batch)
+            elif kind.attn == "mla":
+                one = attn_mod.init_mla_pages(cfg, n_pages, page_tokens, dtype)
+            else:
+                one = attn_mod.init_gqa_pages(cfg, n_pages, page_tokens, dtype)
+            g[f"pos{pos}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (group.n_repeat,) + a.shape), one)
+        caches[group.name] = g
+    return caches
+
+
+def paged_cache_kinds(cfg: ModelConfig):
+    """Yield ``(group_name, pos_key, is_paged)`` for every cache entry —
+    the walk order engine-side spill/restore and page scatter share.
+    ``is_paged`` is False for recurrent (per-slot resident) entries."""
+    for group in cfg.layer_groups():
+        for pos, kind in enumerate(group.pattern):
+            yield group.name, f"pos{pos}", kind.attn != "mamba"
+
+
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
@@ -273,10 +309,13 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
 def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                 caches, cache_len: jax.Array,
-                plans: Optional[KernelPlans] = None):
+                plans: Optional[KernelPlans] = None,
+                block_tables: Optional[jax.Array] = None):
     """One decode step. tokens: (B, 1); cache_len: scalar or per-slot (B,)
-    filled-prefix lengths. Returns (logits (B,1,Vpad), caches)."""
+    filled-prefix lengths. With ``block_tables`` (B, P) the caches are the
+    paged pool. Returns (logits (B,1,Vpad), caches)."""
     x, _, new_caches = forward(cfg, params, tokens, caches=caches,
-                               cache_len=cache_len, remat=False, plans=plans)
+                               cache_len=cache_len, remat=False, plans=plans,
+                               block_tables=block_tables)
     logits = layers.unembed_logits(params["tok"], x)
     return logits, new_caches

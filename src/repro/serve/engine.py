@@ -17,7 +17,13 @@ Two serving surfaces share one decode substrate:
     (:meth:`~repro.models.api.Model.slot_update`) without touching in-flight
     rows, and every chunk decodes ALL slots in one batched step with
     per-slot ``cache_len`` vectors. Finished sequences free their slots for
-    immediate reuse.
+    immediate reuse. When the scheduler carries a
+    :class:`~repro.serve.scheduler.PageGeometry`, serving switches to the
+    **paged two-tier pool** (:meth:`init_paged_pool`): KV storage is a flat
+    layer-0 page pool addressed through per-slot block tables, admission
+    reserves *pages* instead of ``max_len`` slabs, and when layer 0 runs
+    out the youngest resident spills verbatim to the layer-1 tier — the
+    paper's two-die capacity split, applied to serving.
 
 The cache layout is the pooled-memory design (DESIGN.md §Pooled KV cache):
 sequence dim sharded across the `model` axis, so aggregate pod HBM is one
@@ -65,14 +71,22 @@ class EngineConfig:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class PoolState:
-    """Device-side state of the KV slot pool (batch axis = slot index)."""
+    """Device-side state of the KV slot pool (batch axis = slot index).
 
-    state: Dict[str, Any]       # model caches (+aux), slot-major
+    ``block_tables`` is ``None`` for the dense slot-slab pool; in paged
+    mode it is the ``(S, P)`` int32 map from each slot's logical page index
+    to a physical page of the flat layer-0 page pool (null page 0 for
+    unmapped entries). The host rebuilds and uploads it at every drain
+    boundary from the scheduler's page mappings.
+    """
+
+    state: Dict[str, Any]       # model caches (+aux), slot- or page-major
     tok: jax.Array              # (S,) int32 — last emitted token per slot
     cache_len: jax.Array        # (S,) int32 — filled KV prefix per slot
     done: jax.Array             # (S,) bool — drained/empty slot mask
     n_gen: jax.Array            # (S,) int32 — tokens emitted per occupant
     budget: jax.Array           # (S,) int32 — occupant's max_new_tokens
+    block_tables: Optional[jax.Array] = None    # (S, P) int32, paged only
 
 
 @dataclasses.dataclass
@@ -97,6 +111,8 @@ class Engine:
         self._chunk_fns: Dict[int, Any] = {}        # one-shot decode chunks
         self._pool_chunk_fns: Dict[int, Any] = {}   # pooled decode chunks
         self._admit = self._make_admit_fn()
+        self._paged_admit_fns: Dict[Any, Any] = {}  # keyed by page geometry
+        self._tier_copy = None      # jitted layer-0 <-> layer-1 copy
         self.last_stats: Dict[str, Any] = {}
         if ecfg.prompt_pad_multiple and self._has_ssm():
             raise ValueError(
@@ -266,7 +282,7 @@ class Engine:
                 def step(pool: PoolState, _):
                     logits, state = self.model.decode_step(
                         params, pool.tok[:, None], pool.state, pool.cache_len,
-                        plans=plans)
+                        plans=plans, block_tables=pool.block_tables)
                     nxt = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
                     was_done = pool.done
                     tok = jnp.where(was_done, ecfg.eos_token,
@@ -279,7 +295,8 @@ class Engine:
                             | (cache_len >= ecfg.max_len))
                     new = PoolState(state=state, tok=tok, cache_len=cache_len,
                                     done=done, n_gen=n_gen,
-                                    budget=pool.budget)
+                                    budget=pool.budget,
+                                    block_tables=pool.block_tables)
                     return new, (tok, ~was_done)
 
                 pool, (toks, valid) = jax.lax.scan(step, pool, None, length=n)
@@ -287,6 +304,216 @@ class Engine:
 
             self._pool_chunk_fns[n] = jax.jit(run)
         return self._pool_chunk_fns[n]
+
+    # ------------------------------------------------- paged two-tier pool
+    def init_paged_pool(self, sch: sched_mod.Scheduler
+                        ) -> Tuple[PoolState, Dict[str, Any]]:
+        """Empty paged pool + the layer-1 spill tier's device arrays.
+
+        Layer 0 is a flat page pool shared by all slots (block tables map
+        slots to pages); layer 1 mirrors it at the spill budget, plus one
+        resident "seat" per spill page for recurrent SSM state (a spilled
+        sequence holds at least one page, so seats cannot run out first).
+        """
+        geom = sch.pages
+        assert geom is not None, "init_paged_pool needs a paged scheduler"
+        cfg = self.model.cfg
+        if cfg.family == "encdec" or cfg.frontend_len:
+            raise NotImplementedError(
+                "paged serving targets decoder-only token-prompt models; "
+                "others go through one-shot generate()")
+        from repro.models import transformer
+        n_slots = sch.n_slots
+        state = {"caches": transformer.init_paged_caches(
+            cfg, n_slots, geom.n_pages, geom.page_tokens)}
+        spill = transformer.init_paged_caches(
+            cfg, geom.n_spill_pages, geom.n_spill_pages, geom.page_tokens)
+        zeros = jnp.zeros((n_slots,), jnp.int32)
+        pool = PoolState(
+            state=state,
+            tok=jnp.full((n_slots,), self.ecfg.pad_token, jnp.int32),
+            cache_len=zeros, done=jnp.ones((n_slots,), bool),
+            n_gen=zeros, budget=zeros,
+            block_tables=jnp.zeros((n_slots, geom.max_pages_per_slot),
+                                   jnp.int32))
+        return pool, spill
+
+    def _make_paged_admit_fn(self, geom: sched_mod.PageGeometry):
+        """Jitted paged admission: prefill one prompt row at the pool's
+        page-aligned depth, cut it into pages and scatter them at the
+        slot's block-table row. In-flight pages are untouched."""
+        cfg, ecfg, plans = self.model.cfg, self.ecfg, self.plans
+        depth, pt = geom.depth, geom.page_tokens
+
+        def run(params, tokens, true_len, budget, slot, block_row,
+                pool: PoolState):
+            last = (true_len - 1)[None]                 # (1,) gather
+            logits, row = self.model.prefill(
+                params, {"tokens": tokens}, depth, plans=plans, last_pos=last)
+            first = jnp.argmax(logits[0, -1, :cfg.vocab_size])
+            first = first.astype(jnp.int32)
+            state = self.model.slot_update_paged(pool.state, row, slot,
+                                                 block_row, pt)
+            kv_len = true_len
+            done0 = ((first == ecfg.eos_token) | (budget <= 1)
+                     | (kv_len >= ecfg.max_len))
+            return dataclasses.replace(
+                pool, state=state,
+                tok=pool.tok.at[slot].set(first),
+                cache_len=pool.cache_len.at[slot].set(kv_len),
+                done=pool.done.at[slot].set(done0),
+                n_gen=pool.n_gen.at[slot].set(1),
+                budget=pool.budget.at[slot].set(budget)), first
+
+        return jax.jit(run)
+
+    def _paged_admit(self, pool: PoolState, slot: int,
+                     req: sched_mod.Request, geom: sched_mod.PageGeometry
+                     ) -> Tuple[PoolState, jax.Array]:
+        tokens, true_len = self._pad_prompt(np.asarray(req.prompt, np.int32))
+        block_row = self._pad_pages(req.pages, geom.max_pages_per_slot)
+        key = (geom.depth, geom.page_tokens)
+        if key not in self._paged_admit_fns:
+            self._paged_admit_fns[key] = self._make_paged_admit_fn(geom)
+        return self._paged_admit_fns[key](
+            self.params, tokens[None], jnp.asarray(true_len, jnp.int32),
+            jnp.asarray(req.max_new_tokens, jnp.int32),
+            jnp.asarray(slot, jnp.int32), block_row, pool)
+
+    def _tier_copy_fn(self):
+        """ONE jitted layer-0 <-> layer-1 copy, shared by spill and restore
+        (jit's shape-keyed cache traces each direction independently).
+
+        Page pools move whole pages (gather by source ids, scatter at
+        destination ids — padded entries route through the null pages);
+        recurrent per-slot state moves one row between the slot axis and
+        the spill seat axis. Everything stays on device.
+        """
+        if self._tier_copy is not None:
+            return self._tier_copy
+        from repro.models import transformer
+        cfg = self.model.cfg
+
+        def copy(src_caches, dst_caches, row_src, row_dst, pages_src,
+                 pages_dst):
+            def page_copy(s, d):
+                return d.at[:, pages_dst].set(s[:, pages_src].astype(d.dtype))
+
+            def row_copy(s, d):
+                row = jax.lax.dynamic_slice_in_dim(s, row_src, 1, axis=1)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    d, row.astype(d.dtype), row_dst, axis=1)
+
+            out: Dict[str, Any] = {}
+            for gname, key, is_paged in transformer.paged_cache_kinds(cfg):
+                fn = page_copy if is_paged else row_copy
+                out.setdefault(gname, {})[key] = jax.tree.map(
+                    fn, src_caches[gname][key], dst_caches[gname][key])
+            return out
+
+        self._tier_copy = jax.jit(copy)
+        return self._tier_copy
+
+    @staticmethod
+    def _pad_pages(pages, p_max: int) -> jax.Array:
+        row = np.zeros((p_max,), np.int32)
+        row[:len(pages)] = pages
+        return jnp.asarray(row)
+
+    def _exec_spill(self, pool: PoolState, spill: Dict[str, Any],
+                    act: sched_mod.SpillAction, p_max: int) -> Dict[str, Any]:
+        return self._tier_copy_fn()(
+            pool.state["caches"], spill,
+            jnp.asarray(act.slot, jnp.int32),
+            jnp.asarray(act.seat, jnp.int32),
+            self._pad_pages(act.src_pages, p_max),
+            self._pad_pages(act.dst_pages, p_max))
+
+    def _exec_restore(self, pool: PoolState, spill: Dict[str, Any],
+                      act: sched_mod.RestoreAction, p_max: int) -> PoolState:
+        """Copy a preempted sequence back into layer 0 and re-arm its slot.
+
+        The per-slot vectors are rebuilt from the host mirror: the KV
+        frontier is one behind the emitted count (the last token's K/V is
+        written by its own upcoming decode step), so decode resumes
+        bit-exactly where preemption cut it."""
+        req = act.req
+        caches = self._tier_copy_fn()(
+            spill, pool.state["caches"],
+            jnp.asarray(act.seat, jnp.int32),
+            jnp.asarray(act.slot, jnp.int32),
+            self._pad_pages(act.src_pages, p_max),
+            self._pad_pages(req.pages[:len(act.src_pages)], p_max))
+        slot = act.slot
+        return dataclasses.replace(
+            pool, state={**pool.state, "caches": caches},
+            tok=pool.tok.at[slot].set(int(req.tokens[-1])),
+            cache_len=pool.cache_len.at[slot].set(req.cache_len),
+            done=pool.done.at[slot].set(False),
+            n_gen=pool.n_gen.at[slot].set(len(req.tokens)),
+            budget=pool.budget.at[slot].set(req.max_new_tokens))
+
+    def _serve_paged(self, sch: sched_mod.Scheduler,
+                     max_steps: Optional[int] = None) -> ServeReport:
+        """Continuous batching over the paged two-tier pool.
+
+        Same drain-boundary discipline as the dense loop (ONE host read per
+        chunk); what changes is the boundary work: the scheduler plans
+        grow / preempt / restore / admit in pages, the engine executes the
+        device copies in plan order and uploads the fresh block table, and
+        the decode chunk walks block tables instead of slot slabs.
+        """
+        geom = sch.pages
+        self.last_stats = {"host_syncs": 0, "decode_steps": 0, "chunks": 0}
+        pool, spill = self.init_paged_pool(sch)
+        pending_first: List[Tuple[sched_mod.Request, jax.Array]] = []
+        step_clock = 0
+        n = self.ecfg.sync_interval
+        p_max = geom.max_pages_per_slot
+        while sch.has_work():
+            plan = sch.plan_boundary(chunk_tokens=n,
+                                     max_len=self.ecfg.max_len)
+            for req in plan.rejects:
+                req.finish_step = step_clock
+            # spills FIRST: they read layer-0 pages that restores/admits may
+            # reuse later this boundary (functional arrays keep this exact)
+            for act in plan.spills:
+                spill = self._exec_spill(pool, spill, act, p_max)
+            for act in plan.restores:
+                pool = self._exec_restore(pool, spill, act, p_max)
+            for slot, req in plan.admits:
+                req.admit_step = step_clock
+                pool, first = self._paged_admit(pool, slot, req, geom)
+                req.status = sched_mod.DECODING
+                pending_first.append((req, first))
+            # the boundary's page moves, as one host->device upload
+            pool = dataclasses.replace(
+                pool, block_tables=jnp.asarray(sch.block_table()))
+            pool, toks, valid = self._pool_chunk(n)(self.params, pool)
+            step_clock += n
+            self.last_stats["decode_steps"] += n
+            self.last_stats["chunks"] += 1
+            # ---- drain boundary: the single host sync of this iteration
+            toks_h, valid_h, done_h, firsts = self._fetch(
+                (toks, valid, pool.done, [f for _, f in pending_first]))
+            for (req, _), f in zip(pending_first, firsts):
+                req.tokens.append(int(f))
+            pending_first.clear()
+            for slot in sorted(sch.active):
+                req = sch.active[slot]
+                req.tokens.extend(
+                    int(t) for t, v in zip(toks_h[:, slot], valid_h[:, slot])
+                    if v)
+                if done_h[slot]:
+                    req.finish_step = step_clock
+                    sch.complete(slot)
+            if max_steps is not None and step_clock >= max_steps:
+                break
+        stats = dict(self.last_stats)
+        stats.update(sch.stats())
+        return ServeReport(requests=(sch.drained + list(sch.active.values())
+                                     + list(sch.queue)),
+                           stats=stats)
 
     # ------------------------------------------------------------ stream
     def serve(self, requests: Iterable[sched_mod.Request] = (),
@@ -304,6 +531,8 @@ class Engine:
             self.model.cfg, self.ecfg.max_len)
         for req in requests:
             sch.submit_request(req)
+        if sch.pages is not None:        # paged two-tier pool
+            return self._serve_paged(sch, max_steps)
         self.last_stats = {"host_syncs": 0, "decode_steps": 0, "chunks": 0}
         pool = self.init_pool(sch.n_slots)
         pending_first: List[Tuple[sched_mod.Request, jax.Array]] = []

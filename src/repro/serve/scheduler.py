@@ -1,26 +1,38 @@
-"""Continuous-batching scheduler: request queue, slot table, admission policy.
+"""Continuous-batching scheduler: request queue, slot table, page allocator.
 
 The serving engine treats the KV cache as a *pool of slots* — one resident
 sequence per slot, all slots decoded in a single batched step. This module
-owns everything about slots that is NOT device math:
+owns everything about slots and pages that is NOT device math:
 
   * :class:`Request` — one user request and its lifecycle
-    (``queued -> prefilling -> decoding -> drained``).
+    (``queued -> prefilling -> decoding -> drained``, with a
+    ``preempted`` detour in paged mode).
   * :class:`SlotTable` — which request occupies which KV slot, with per-slot
     allocation counters (slot *reuse* is the whole point: a drained slot is
     immediately refilled from the queue without touching in-flight rows).
+  * :class:`PagePool` / :class:`PageGeometry` — the paged two-tier KV pool:
+    KV storage is a flat pool of fixed-size pages; each slot maps logical
+    page indices to physical pages through a block table. Admission is by
+    *pages*, not slots, so short requests stop paying worst-case ``max_len``
+    reservations. When layer 0 (the hot tier) is exhausted, the youngest
+    resident sequence is preempted: its pages spill verbatim to layer 1
+    (the stacked spill tier) and return to the shared free list; a later
+    restore copies them back and decoding resumes bit-exactly.
   * :class:`Scheduler` — admission policy. ``fcfs`` admits in arrival order
     (the fairness default); ``shortest`` admits the shortest queued prompt
     first (throughput-greedy, can starve long prompts — benchmarks only).
 
-Slot budget = the paper's capacity partition, applied to serving. The number
-of KV slots is derived from the active :class:`~repro.core.target.
+Slot and page budgets = the paper's capacity partition, applied to serving.
+The dense slot count is derived from the active :class:`~repro.core.target.
 HardwareTarget` through the SAME :class:`~repro.core.target.
-CapacityPartition` budget formula the tile planner uses for kernel blocks:
-the KV pool level (HBM on TPU, the shared-L1 cluster SPM on MemPool) is
-partitioned, and ``required_bytes(streamed=kv_bytes_per_token * max_len,
-resident=recurrent state)`` prices one slot. MemPool's lesson — one logical
-pool, explicitly partitioned — decides how many sequences may be resident.
+CapacityPartition` budget formula the tile planner uses for kernel blocks.
+The paged pool stacks that partition across two memory layers
+(:class:`~repro.core.target.TieredPartition` — MemPool-3D's logic-die /
+memory-die split): layer 0 prices the hot page pool, layer 1 the spill
+pool. MemPool's lesson — one logical pool, explicitly partitioned — decides
+how many sequences may be resident, and the 3D lesson — stack a second
+layer instead of stretching the first — decides where preempted sequences
+park.
 """
 
 from __future__ import annotations
@@ -31,7 +43,8 @@ from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.target import CapacityPartition, HardwareTarget, get_target
+from repro.core.target import (CapacityPartition, HardwareTarget,
+                               TieredPartition, get_target)
 from repro.models.config import ModelConfig
 
 #: Request lifecycle states (DESIGN.md §Serving — slot lifecycle).
@@ -40,6 +53,7 @@ PREFILLING = "prefilling"
 DECODING = "decoding"
 DRAINED = "drained"
 REJECTED = "rejected"      # invalid for the pool (e.g. prompt > max_len)
+PREEMPTED = "preempted"    # spilled to layer 1, waiting to be restored
 
 
 @dataclasses.dataclass
@@ -55,10 +69,22 @@ class Request:
     submit_step: int = 0
     admit_step: int = -1
     finish_step: int = -1
+    # paged mode: physical pages mapped to this request (layer 0 / layer 1)
+    pages: List[int] = dataclasses.field(default_factory=list)
+    spill_pages: List[int] = dataclasses.field(default_factory=list)
+    spill_seat: int = -1                # layer-1 seat for resident SSM state
+    preemptions: int = 0
 
     @property
     def prompt_len(self) -> int:
         return int(np.asarray(self.prompt).shape[0])
+
+    @property
+    def cache_len(self) -> int:
+        """Host-side mirror of the device ``cache_len``: the filled KV
+        prefix. The last emitted token's K/V is written by the NEXT decode
+        step, so the frontier is one behind the emitted count."""
+        return self.prompt_len + max(len(self.tokens) - 1, 0)
 
 
 # ---------------------------------------------------------------------------
@@ -123,14 +149,214 @@ def pool_partition(target: Optional[HardwareTarget] = None, *,
 def derive_n_slots(cfg: ModelConfig, max_len: int, *,
                    target: Optional[HardwareTarget] = None,
                    fraction: float = 0.8, max_slots: int = 64,
-                   cache_dtype_bytes: int = 2) -> int:
-    """How many KV slots the pool sustains at ``max_len`` per sequence."""
+                   cache_dtype_bytes: int = 2,
+                   pages: Optional["PageGeometry"] = None) -> int:
+    """How many KV slots the pool sustains.
+
+    Dense (``pages=None``): every slot reserves a full ``max_len`` KV slab,
+    so slots = budget // slab. Paged: a slot only needs one mapped page to
+    be resident, so the same byte budget carries ``n_data_pages`` slots in
+    the best case — the two-tier pool's capacity win. Admission by pages
+    keeps actual residency honest.
+    """
+    if pages is not None:
+        return int(max(1, min(pages.n_data_pages, max_slots)))
     part = pool_partition(target, fraction=fraction)
     per_slot = part.required_bytes(
         kv_bytes_per_token(cfg, cache_dtype_bytes) * max_len,
         resident_bytes_per_slot(cfg))
     n = part.budget_bytes // max(per_slot, 1)
     return int(max(1, min(n, max_slots)))
+
+
+# ---------------------------------------------------------------------------
+# Paged two-tier pool — PageGeometry, tiers, and the page allocator
+# ---------------------------------------------------------------------------
+
+
+def pool_tiers(target: Optional[HardwareTarget] = None, *,
+               fraction: float = 0.8,
+               layer1_fraction: Optional[float] = None) -> TieredPartition:
+    """The KV pool partition, stacked across two memory layers.
+
+    Layer 0 is :func:`pool_partition`'s budget (the hot tier resident
+    sequences decode against); layer 1 is the stacked spill tier. The
+    default split mirrors the paper's die split: a MemPool-3D target gets a
+    full second layer (``layer1_fraction=1.0`` — the bonded memory die
+    doubles capacity at iso-footprint); 2D and TPU targets get a half-layer
+    spill budget (cold capacity behind the same port).
+    """
+    target = target or get_target()
+    if layer1_fraction is None:
+        flow = getattr(target.profile, "flow", None)
+        layer1_fraction = 1.0 if flow == "3D" else 0.5
+    return pool_partition(target, fraction=fraction).stacked(layer1_fraction)
+
+
+@dataclasses.dataclass(frozen=True)
+class PageGeometry:
+    """Shape of the paged two-tier KV pool.
+
+    Physical page 0 of EACH tier is the reserved *null page*: block-table
+    entries of free or out-of-range positions point at it, so stray writes
+    (a drained slot's frozen decode, scatter tails past a prompt) land in
+    memory no live sequence ever reads. Allocators hand out pages
+    ``1..n_pages-1``.
+    """
+
+    page_tokens: int            # tokens per page
+    n_pages: int                # layer-0 physical pages, incl. null page 0
+    n_spill_pages: int          # layer-1 physical pages, incl. null page 0
+    max_pages_per_slot: int     # block-table width: ceil(max_len/page_tokens)
+    page_bytes: int             # KV bytes of one page (all layers)
+
+    @property
+    def depth(self) -> int:
+        """Per-slot logical KV depth (>= max_len, page-aligned)."""
+        return self.max_pages_per_slot * self.page_tokens
+
+    @property
+    def n_data_pages(self) -> int:
+        return self.n_pages - 1
+
+    @property
+    def n_spill_data_pages(self) -> int:
+        return self.n_spill_pages - 1
+
+    @property
+    def layer0_bytes(self) -> int:
+        return self.n_data_pages * self.page_bytes
+
+    @property
+    def layer1_bytes(self) -> int:
+        return self.n_spill_data_pages * self.page_bytes
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to map ``n_tokens`` of KV (at least one)."""
+        return max(1, -(-int(n_tokens) // self.page_tokens))
+
+
+def derive_page_geometry(cfg: ModelConfig, max_len: int, *,
+                         target: Optional[HardwareTarget] = None,
+                         fraction: float = 0.8,
+                         layer1_fraction: Optional[float] = None,
+                         page_tokens: int = 16, max_slots: int = 64,
+                         cache_dtype_bytes: int = 2,
+                         layer0_bytes: Optional[int] = None,
+                         layer1_bytes: Optional[int] = None) -> PageGeometry:
+    """Page count, page size, and spill budget from the two-tier partition.
+
+    ``layer0_bytes``/``layer1_bytes`` override the derived tier budgets —
+    benchmarks use them to compare dense and paged pools inside the SAME
+    layer-0 byte budget, and to force the spill tier into play on small
+    smoke runs. Page counts are capped at ``max_slots`` full-depth
+    sequences so host-scale targets do not allocate absurd pools.
+    """
+    pt = int(max(1, min(page_tokens, max_len)))
+    p_max = -(-int(max_len) // pt)
+    page_bytes = kv_bytes_per_token(cfg, cache_dtype_bytes) * pt
+    tiers = pool_tiers(target, fraction=fraction,
+                       layer1_fraction=layer1_fraction)
+    resident = resident_bytes_per_slot(cfg) * max_slots
+    n0, n1 = tiers.units_per_tier(page_bytes, resident)
+    if layer0_bytes is not None:
+        n0 = layer0_bytes // max(page_bytes, 1)
+    if layer1_bytes is not None:
+        n1 = layer1_bytes // max(page_bytes, 1)
+    cap = max_slots * p_max
+    n0, n1 = min(int(n0), cap), min(int(n1), cap)
+    if n0 < p_max:
+        raise ValueError(
+            f"layer-0 budget holds {n0} pages but one full-depth sequence "
+            f"needs {p_max} (max_len={max_len}, page_tokens={pt}); raise the "
+            f"budget or shrink max_len")
+    return PageGeometry(page_tokens=pt, n_pages=n0 + 1,
+                        n_spill_pages=max(n1, 0) + 1,
+                        max_pages_per_slot=p_max, page_bytes=page_bytes)
+
+
+class PagePool:
+    """Free-list allocator over a tier's physical pages (1..n_pages-1).
+
+    Page 0 is the reserved null page and is never handed out. Allocation is
+    all-or-nothing; freed pages return to the shared free list (LIFO, so
+    reuse stays hot). Double-free and foreign pages raise.
+    """
+
+    def __init__(self, n_pages: int, name: str = "layer0"):
+        if n_pages < 1:
+            raise ValueError(f"need at least the null page, got {n_pages}")
+        self.n_pages = n_pages
+        self.name = name
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self._free_set = set(self._free)
+        self.high_water = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return (self.n_pages - 1) - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """``n`` pages or None (all-or-nothing; never partial)."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} pages")
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(out)
+        self.high_water = max(self.high_water, self.in_use)
+        return out
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if not 1 <= p < self.n_pages:
+                raise ValueError(f"page {p} outside {self.name} pool "
+                                 f"(1..{self.n_pages - 1})")
+            if p in self._free_set:
+                raise RuntimeError(f"double free of {self.name} page {p}")
+            self._free.append(p)
+            self._free_set.add(p)
+
+
+@dataclasses.dataclass
+class SpillAction:
+    """One preemption: copy ``src_pages`` (layer 0) to ``dst_pages``
+    (layer 1) and, for models with resident SSM state, slot row -> seat."""
+
+    slot: int
+    req: Request
+    src_pages: List[int]
+    dst_pages: List[int]
+    seat: int
+
+
+@dataclasses.dataclass
+class RestoreAction:
+    """The inverse copy: layer-1 ``src_pages`` back into the request's
+    freshly allocated layer-0 pages (``req.pages`` prefix), seat -> slot."""
+
+    slot: int
+    req: Request
+    src_pages: List[int]
+    seat: int
+
+
+@dataclasses.dataclass
+class PagePlan:
+    """Everything one drain boundary decided; the engine executes the device
+    copies in EXACTLY this order (spills read layer 0 before any restore or
+    admission writes it; restores read layer 1 before later spills could
+    reuse freed spill pages — the allocator's alloc-before-free discipline
+    inside :meth:`Scheduler.plan_boundary` guarantees id-disjointness)."""
+
+    spills: List[SpillAction] = dataclasses.field(default_factory=list)
+    restores: List[RestoreAction] = dataclasses.field(default_factory=list)
+    admits: List[Tuple[int, Request]] = dataclasses.field(default_factory=list)
+    rejects: List[Request] = dataclasses.field(default_factory=list)
 
 
 def synthetic_stream(n_requests: int, prompt_len: int, gen_len: int,
@@ -198,11 +424,19 @@ class SlotTable:
 
 
 class Scheduler:
-    """Admission control between the request queue and the slot table."""
+    """Admission control between the request queue and the slot table.
+
+    With ``pages`` set, the scheduler also owns the paged two-tier pool's
+    host state: the layer-0 and layer-1 :class:`PagePool` free lists, the
+    per-request page mappings, and the preempt-and-spill policy
+    (:meth:`plan_boundary`). The engine mirrors the mappings into the
+    device block-table array and executes the planned copies.
+    """
 
     POLICIES = ("fcfs", "shortest")
 
-    def __init__(self, n_slots: int, policy: str = "fcfs"):
+    def __init__(self, n_slots: int, policy: str = "fcfs",
+                 pages: Optional[PageGeometry] = None):
         if policy not in self.POLICIES:
             raise ValueError(f"unknown policy {policy!r}; have {self.POLICIES}")
         self.n_slots = n_slots
@@ -213,16 +447,44 @@ class Scheduler:
         self.drained: List[Request] = []
         self._next_rid = 0
         self.admit_order: List[int] = []          # rids in admission order
+        self._active_order: List[int] = []        # slots, oldest admit first
+        # ---- paged two-tier pool (None -> dense slot-slab mode)
+        self.pages = pages
+        self.page_pool: Optional[PagePool] = None
+        self.spill_pool: Optional[PagePool] = None
+        self.seat_pool: Optional[PagePool] = None
+        self.preemptions = 0
+        self.spilled_pages = 0
+        self.restores = 0
+        if pages is not None:
+            self.page_pool = PagePool(pages.n_pages, "layer0")
+            self.spill_pool = PagePool(pages.n_spill_pages, "layer1")
+            # one layer-1 seat per spill page: each spilled request holds at
+            # least one page, so seats can never run out before pages do
+            self.seat_pool = PagePool(pages.n_spill_pages, "seats")
 
     @classmethod
     def for_model(cls, cfg: ModelConfig, max_len: int, *,
                   target: Optional[HardwareTarget] = None,
                   policy: str = "fcfs", fraction: float = 0.8,
-                  max_slots: int = 64) -> "Scheduler":
-        """Size the slot table from the target's CapacityPartition budget."""
+                  max_slots: int = 64, paged: bool = False,
+                  page_tokens: int = 16,
+                  layer1_fraction: Optional[float] = None,
+                  layer0_bytes: Optional[int] = None,
+                  layer1_bytes: Optional[int] = None) -> "Scheduler":
+        """Size the slot table (and, when ``paged``, the two-tier page
+        pools) from the target's CapacityPartition budget."""
+        pages = None
+        if paged:
+            pages = derive_page_geometry(
+                cfg, max_len, target=target, fraction=fraction,
+                layer1_fraction=layer1_fraction, page_tokens=page_tokens,
+                max_slots=max_slots, layer0_bytes=layer0_bytes,
+                layer1_bytes=layer1_bytes)
         return cls(derive_n_slots(cfg, max_len, target=target,
-                                  fraction=fraction, max_slots=max_slots),
-                   policy=policy)
+                                  fraction=fraction, max_slots=max_slots,
+                                  pages=pages),
+                   policy=policy, pages=pages)
 
     # ------------------------------------------------------------- queue
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
@@ -256,7 +518,8 @@ class Scheduler:
         """Fill free slots from the queue; returns (slot, request) pairs.
 
         Called at batch-drain boundaries only — admission never interrupts
-        the in-flight decode chunk, it refills slots between chunks.
+        the in-flight decode chunk, it refills slots between chunks. Dense
+        mode only; paged admission goes through :meth:`plan_boundary`.
         """
         placed: List[Tuple[int, Request]] = []
         while self.queue and self.table.n_occupied < self.n_slots:
@@ -265,17 +528,165 @@ class Scheduler:
             req.status = PREFILLING
             self.active[slot] = req
             self.admit_order.append(req.rid)
+            self._active_order.append(slot)
             placed.append((slot, req))
         return placed
 
     def complete(self, slot: int, status: str = DRAINED) -> Request:
-        """Mark the slot's request drained (or rejected) and free the slot
-        for reuse."""
+        """Mark the slot's request drained (or rejected), free the slot for
+        reuse and — in paged mode — return its pages to the free list."""
         req = self.active.pop(slot)
         self.table.release(slot)
+        self._active_order.remove(slot)
+        if self.page_pool is not None and req.pages:
+            self.page_pool.free(req.pages)
+            req.pages = []
         req.status = status
         self.drained.append(req)
         return req
+
+    # --------------------------------------------------- paged admission
+    def _admissible_index(self) -> int:
+        """Queue index the policy would admit next. Preempted requests are
+        restored first (they hold layer-1 resources), in queue order."""
+        for i, req in enumerate(self.queue):
+            if req.status == PREEMPTED:
+                return i
+        if self.policy == "shortest":
+            return min(range(len(self.queue)),
+                       key=lambda i: self.queue[i].prompt_len)
+        return 0
+
+    def _preempt(self, slot: int) -> SpillAction:
+        """Spill ``slot`` to layer 1. Allocates the layer-1 resources FIRST
+        so a spill-tier-exhausted failure leaves the scheduler untouched."""
+        req = self.active[slot]
+        dst = self.spill_pool.alloc(len(req.pages))
+        seat = self.seat_pool.alloc(1)
+        if dst is None or seat is None:
+            if dst is not None:
+                self.spill_pool.free(dst)
+            if seat is not None:
+                self.seat_pool.free(seat)
+            raise RuntimeError(
+                f"layer-1 spill tier exhausted ({self.spill_pool.in_use}/"
+                f"{self.pages.n_spill_data_pages} pages in use) — raise "
+                f"layer1_fraction / layer1_bytes")
+        self.active.pop(slot)
+        self.table.release(slot)
+        self._active_order.remove(slot)
+        src = req.pages
+        self.page_pool.free(src)
+        req.pages = []
+        req.spill_pages = dst
+        req.spill_seat = seat[0]
+        req.status = PREEMPTED
+        req.preemptions += 1
+        self.preemptions += 1
+        self.spilled_pages += len(src)
+        self.queue.appendleft(req)        # restored before fresh admissions
+        return SpillAction(slot=slot, req=req, src_pages=src, dst_pages=dst,
+                           seat=req.spill_seat)
+
+    def plan_boundary(self, *, chunk_tokens: int, max_len: int) -> PagePlan:
+        """Paged-mode drain-boundary plan: grow, preempt, restore, admit.
+
+        1. **Growth** (oldest resident first): every active slot gets pages
+           covering its next ``chunk_tokens`` of decode. If layer 0 is
+           exhausted, the YOUNGEST resident is preempted and its pages
+           spill to layer 1 — repeatedly, until the grow fits. When the
+           grower is itself the youngest, IT spills rather than evicting
+           an older sequence (oldest-first growth always wins), and its
+           restore reallocates the full need — so an older resident is
+           never sacrificed for a younger one, and every boundary makes
+           progress on the oldest resident.
+        2. **Restores + admissions** (policy order, preempted first): a
+           restore reallocates layer-0 pages and schedules the copy back; a
+           fresh admission reserves pages for ``prompt + chunk`` only — the
+           whole point of paging: no worst-case ``max_len`` slab. Admission
+           stops at the first request that does not fit (no queue-jumping
+           beyond the policy's pick). Admission never preempts; only
+           growth of already-resident sequences does.
+        """
+        assert self.pages is not None, "plan_boundary is paged-mode only"
+        geom = self.pages
+        plan = PagePlan()
+        for slot in list(self._active_order):
+            if slot not in self.active:
+                continue                 # preempted earlier this boundary
+            req = self.active[slot]
+            target_tokens = min(req.cache_len + chunk_tokens, max_len)
+            while True:
+                need = geom.pages_for(target_tokens) - len(req.pages)
+                if need <= 0:
+                    break
+                got = self.page_pool.alloc(need)
+                if got is not None:
+                    req.pages.extend(got)
+                    break
+                if self._active_order[-1] != slot:
+                    # victim: the most recently (re)admitted resident —
+                    # always strictly younger than the grower here
+                    plan.spills.append(self._preempt(self._active_order[-1]))
+                    continue
+                # the grower IS the youngest: spill it instead of evicting
+                # an older sequence; its restore reallocates the full need
+                plan.spills.append(self._preempt(slot))
+                break
+        while self.queue and self.table.free_slots():
+            idx = self._admissible_index()
+            req = self.queue[idx]
+            if req.status == PREEMPTED:
+                need = max(geom.pages_for(
+                    min(req.cache_len + chunk_tokens, max_len)),
+                    len(req.spill_pages))
+                got = self.page_pool.alloc(need)
+                if got is None:
+                    break
+                del self.queue[idx]
+                slot = self.table.allocate(req.rid)
+                src, seat = req.spill_pages, req.spill_seat
+                req.pages, req.spill_pages, req.spill_seat = got, [], -1
+                req.status = DECODING
+                self.active[slot] = req
+                self.admit_order.append(req.rid)
+                self._active_order.append(slot)
+                self.restores += 1
+                plan.restores.append(RestoreAction(slot=slot, req=req,
+                                                   src_pages=src, seat=seat))
+                # freed only now — after this boundary's spills allocated
+                # theirs, so restore-read and spill-write ids are disjoint
+                self.spill_pool.free(src)
+                self.seat_pool.free([seat])
+                continue
+            if req.prompt_len > max_len:
+                del self.queue[idx]
+                req.status = REJECTED
+                self.drained.append(req)
+                plan.rejects.append(req)
+                continue
+            need = geom.pages_for(min(req.prompt_len + chunk_tokens, max_len))
+            got = self.page_pool.alloc(need)
+            if got is None:
+                break
+            del self.queue[idx]
+            slot = self.table.allocate(req.rid)
+            req.pages = got
+            req.status = PREFILLING
+            self.active[slot] = req
+            self.admit_order.append(req.rid)
+            self._active_order.append(slot)
+            plan.admits.append((slot, req))
+        return plan
+
+    def block_table(self) -> np.ndarray:
+        """The (n_slots, max_pages_per_slot) int32 block table implied by
+        the current page mappings; unmapped entries point at null page 0."""
+        assert self.pages is not None
+        bt = np.zeros((self.n_slots, self.pages.max_pages_per_slot), np.int32)
+        for slot, req in self.active.items():
+            bt[slot, :len(req.pages)] = req.pages
+        return bt
 
     # ------------------------------------------------------------- state
     def has_work(self) -> bool:
@@ -283,13 +694,39 @@ class Scheduler:
 
     def stats(self) -> Dict[str, Any]:
         allocs = self.table.allocations
-        return {
+        done = [r for r in self.drained if r.status == DRAINED]
+        out = {
             "n_slots": self.n_slots,
             "policy": self.policy,
             "queued": len(self.queue),
             "active": len(self.active),
-            "drained": sum(r.status == DRAINED for r in self.drained),
+            "drained": len(done),
             "rejected": sum(r.status == REJECTED for r in self.drained),
             "slot_allocations": list(allocs),
             "max_slot_reuse": max(allocs) if allocs else 0,
+            # per-request latency, in decode-step clock units: time to first
+            # token (admission wait) and end-to-end (submit -> drain)
+            "ttft_steps": [r.admit_step - r.submit_step for r in done],
+            "e2e_steps": [r.finish_step - r.submit_step for r in done
+                          if r.finish_step >= 0],
+            "preemptions": self.preemptions,
+            "spilled_pages": self.spilled_pages,
+            "restores": self.restores,
         }
+        if self.pages is not None:
+            geom = self.pages
+            out.update({
+                "paged": True,
+                "page_tokens": geom.page_tokens,
+                "n_pages": geom.n_data_pages,
+                "n_spill_pages": geom.n_spill_data_pages,
+                "pages_in_use": self.page_pool.in_use,
+                "pages_high_water": self.page_pool.high_water,
+                "spill_pages_in_use": self.spill_pool.in_use,
+                "spill_high_water": self.spill_pool.high_water,
+                "pool_bytes": geom.layer0_bytes,
+                "spill_bytes": geom.layer1_bytes,
+            })
+        else:
+            out["paged"] = False
+        return out

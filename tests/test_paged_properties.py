@@ -1,0 +1,97 @@
+"""Hypothesis property tests for the paged pool's allocator + scheduler:
+no double-mapped page, alloc/free conservation, block tables always
+consistent with the free list."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.models.config import ModelConfig
+from repro.serve import scheduler as sm
+
+TINY = ModelConfig(
+    name="tiny-paged-prop", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=128,
+)
+
+
+@hypothesis.given(
+    st.integers(2, 40),                      # pool size
+    st.lists(st.tuples(st.booleans(), st.integers(0, 7)), max_size=60),
+)
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_page_pool_conservation(n_pages, ops):
+    """No page is double-mapped; alloc/free conserves the page set."""
+    pool = sm.PagePool(n_pages)
+    universe = set(range(1, n_pages))
+    held = []
+    for is_alloc, n in ops:
+        if is_alloc:
+            got = pool.alloc(n)
+            if got is None:
+                assert n > pool.n_free       # refusal only when short
+            else:
+                assert len(got) == n and len(set(got)) == n
+                for blk in held:
+                    assert set(got).isdisjoint(blk)
+                held.append(got)
+        elif held:
+            pool.free(held.pop(n % len(held)))
+    in_use = set().union(*held) if held else set()
+    assert in_use | set(pool._free) == universe
+    assert in_use.isdisjoint(pool._free)
+    assert pool.in_use == len(in_use)
+
+
+@hypothesis.given(st.integers(0, 2 ** 31 - 1), st.integers(4, 12),
+                  st.integers(2, 6))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_scheduler_block_tables_consistent_with_free_list(seed, n_reqs,
+                                                          n_slots):
+    """Drive plan_boundary with a simulated decode loop: block tables must
+    always map exactly the pages the free lists do not hold, with no page
+    shared between two slots (and same for the spill tier)."""
+    rng = np.random.RandomState(seed)
+    max_len, chunk, pt = 32, 4, 8
+    pb = sm.kv_bytes_per_token(TINY) * pt
+    geom = sm.derive_page_geometry(
+        TINY, max_len, page_tokens=pt, max_slots=n_slots,
+        layer0_bytes=pb * int(rng.randint(4, 10)),
+        layer1_bytes=pb * int(rng.randint(6, 12)))
+    sch = sm.Scheduler(n_slots=n_slots, pages=geom)
+    for _ in range(n_reqs):
+        sch.submit(rng.randint(2, 128, size=rng.randint(1, 12)),
+                   int(rng.randint(1, 16)))
+    for _ in range(200):
+        if not sch.has_work():
+            break
+        sch.plan_boundary(chunk_tokens=chunk, max_len=max_len)
+        # ---- invariants after every boundary
+        active_pages = [p for r in sch.active.values() for p in r.pages]
+        assert len(active_pages) == len(set(active_pages))   # no double map
+        assert set(active_pages).isdisjoint(sch.page_pool._free)
+        assert set(active_pages) | set(sch.page_pool._free) == \
+            set(range(1, geom.n_pages))                      # conservation
+        bt = sch.block_table()
+        for slot, req in sch.active.items():
+            assert list(bt[slot, :len(req.pages)]) == req.pages
+            assert (bt[slot, len(req.pages):] == 0).all()    # null tail
+        spilled = [p for r in sch.queue if r.status == sm.PREEMPTED
+                   for p in r.spill_pages]
+        assert len(spilled) == len(set(spilled))
+        assert set(spilled).isdisjoint(sch.spill_pool._free)
+        # ---- simulate the decode chunk + drain boundary
+        for slot in sorted(sch.active):
+            req = sch.active[slot]
+            take = min(chunk, req.max_new_tokens - len(req.tokens),
+                       max_len - req.cache_len)
+            req.tokens.extend([7] * max(take, 0))
+            if (len(req.tokens) >= req.max_new_tokens
+                    or req.cache_len >= max_len):
+                sch.complete(slot)
+    assert not sch.has_work()
+    assert sch.page_pool.in_use == 0                         # all returned
+    assert sch.spill_pool.in_use == 0

@@ -123,3 +123,57 @@ def test_derive_n_slots_scales_with_capacity_and_len():
     assert shorter > few                # shorter slots -> more of them
     assert sm.derive_n_slots(TINY, 10**9,
                              target=get_target("mempool-2d-1mib")) == 1
+
+
+# ------------------------------------------------------- two-tier pool
+
+def test_pool_tiers_mirror_the_die_split():
+    """3D-flow targets get a full stacked layer (the bonded memory die);
+    2D and TPU targets get a half-layer spill budget."""
+    t3d = sm.pool_tiers(get_target("mempool-3d-4mib"), fraction=1.0)
+    assert t3d.layer1.budget_bytes == t3d.layer0.budget_bytes
+    t2d = sm.pool_tiers(get_target("mempool-2d-4mib"), fraction=1.0)
+    assert t2d.layer1.budget_bytes == t2d.layer0.budget_bytes // 2
+    tpu = sm.pool_tiers(get_target("tpu-v5e"), fraction=0.5)
+    assert tpu.layer0.budget_bytes == tpu.layer0.capacity_bytes // 2
+    assert tpu.layer1.budget_bytes == tpu.layer0.budget_bytes // 2
+
+
+def test_derive_page_geometry_from_target_budget():
+    geom = sm.derive_page_geometry(TINY, 1024, page_tokens=16,
+                                   target=get_target("mempool-3d-1mib"),
+                                   max_slots=8)
+    assert geom.page_tokens == 16
+    assert geom.max_pages_per_slot == 64
+    assert geom.depth == 1024
+    assert geom.page_bytes == sm.kv_bytes_per_token(TINY) * 16
+    # capped at max_slots full-depth sequences, never below one sequence
+    assert geom.max_pages_per_slot <= geom.n_data_pages <= 8 * 64
+    assert geom.pages_for(1) == 1 and geom.pages_for(17) == 2
+
+
+def test_for_model_paged_carries_geometry_and_more_slots():
+    dense = sm.Scheduler.for_model(TINY, 256,
+                                   target=get_target("mempool-2d-1mib"),
+                                   max_slots=64)
+    paged = sm.Scheduler.for_model(TINY, 256,
+                                   target=get_target("mempool-2d-1mib"),
+                                   max_slots=64, paged=True, page_tokens=16)
+    assert dense.pages is None and paged.pages is not None
+    assert paged.page_pool.n_free == paged.pages.n_data_pages
+    # pages, not slabs: same budget carries more resident sequences
+    assert paged.n_slots >= dense.n_slots
+    assert paged.stats()["paged"] and not dense.stats()["paged"]
+
+
+def test_stats_latency_and_spill_counters():
+    sch = sm.Scheduler(n_slots=1)
+    a = sch.submit(np.arange(2, 8, dtype=np.int32), 4, submit_step=0)
+    sch.admit()
+    a.admit_step = 8
+    sch.complete(0)
+    a.finish_step = 24
+    s = sch.stats()
+    assert s["ttft_steps"] == [8]
+    assert s["e2e_steps"] == [24]
+    assert s["preemptions"] == 0 and s["spilled_pages"] == 0

@@ -190,3 +190,35 @@ def test_mempool_target_plans_shrink_with_capacity():
         big = tiling.plan_matmul(4096, 4096, 4096)
     assert big.bm * big.bn >= small.bm * small.bn
     assert big.vmem_bytes() > small.vmem_bytes()
+
+
+# ------------------------------------------------------------ tiered split
+
+def test_stacked_partition_budgets():
+    """TieredPartition stacks the same budget formula across two layers —
+    the paper's die split: layer 0 keeps the base budget, layer 1 adds a
+    fraction of the level's capacity on top."""
+    part = CapacityPartition(capacity_bytes=1000, fraction=0.8, n_buffers=1)
+    tiers = part.stacked(0.5)
+    assert tiers.layer0 is part
+    assert tiers.layer0.budget_bytes == 800
+    assert tiers.layer1.budget_bytes == 400        # 1000 * 0.5 * 0.8
+    assert tiers.budget_bytes == 1200              # the 3D capacity win
+    assert tiers.tier_budgets() == (800, 400)
+
+
+def test_stacked_partition_units_and_resident_charge():
+    part = CapacityPartition(capacity_bytes=1000, fraction=1.0, n_buffers=1)
+    tiers = part.stacked(1.0)
+    # 100-byte units: 10 per layer; resident state charged to layer 0 only
+    assert tiers.units_per_tier(100) == (10, 10)
+    assert tiers.units_per_tier(100, resident_bytes=250) == (7, 10)
+
+
+def test_stacked_partition_rejects_negative_layer1():
+    part = CapacityPartition(capacity_bytes=1000, n_buffers=1)
+    with pytest.raises(ValueError, match="layer1_fraction"):
+        part.stacked(-0.1)
+    empty = part.stacked(0.0)                      # a 2D flow: no layer 1
+    assert empty.layer1.budget_bytes == 0
+    assert empty.units_per_tier(100)[1] == 0
