@@ -25,7 +25,8 @@ NON_CLI = {"common.py", "check_cli.py", "__init__.py"}
 #: per-script extra required flags, beyond the universal --target
 EXTRA_FLAGS = {
     "serve_bench.py": ("--paged", "--page-tokens", "--layer0-bytes",
-                       "--layer1-bytes", "--require-spill"),
+                       "--layer1-bytes", "--require-spill", "--prefix-share",
+                       "--system-len", "--require-share-win"),
 }
 
 

@@ -1,8 +1,8 @@
-"""Serving benchmark: static vs continuous vs paged-two-tier tokens/s AND
-pool footprint.
+"""Serving benchmark: static vs continuous vs paged-two-tier vs
+prefix-shared tokens/s AND pool footprint.
 
 Drives the same synthetic mixed short/long request stream through the same
-Engine in up to three modes:
+Engine in up to four modes:
 
   * **static** — requests are grouped into fixed batches of ``n_slots``; a
     batch admits once and decodes until its SLOWEST request drains (empty
@@ -15,6 +15,12 @@ Engine in up to three modes:
     the layer-1 tier under pressure. The interesting number is not just
     tok/s but *concurrent slots per byte* — the capacity win the paper gets
     from stacking a second memory layer.
+  * **paged+share** (``--prefix-share``) — the stream becomes the
+    shared-system-prompt workload (one common ``--system-len`` prefix per
+    request) and the paged pool runs twice in the SAME layer-0 byte
+    budget, sharing off vs on. Reported head-to-head: tok/s, TTFT
+    percentiles, physical vs *mapped* pages (the concurrent-residency
+    win), plus a bit-identical output check between the two runs.
 
 Every record carries pool bytes and pages-in-use next to throughput, so the
 dense-vs-paged comparison shows capacity, not just speed. Emits
@@ -22,7 +28,8 @@ dense-vs-paged comparison shows capacity, not just speed. Emits
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--target NAME] [--paged]
         [--page-tokens N] [--layer0-bytes B] [--layer1-bytes B]
-        [--require-spill] [...]
+        [--require-spill] [--prefix-share] [--system-len N]
+        [--require-share-win] [...]
 """
 
 from __future__ import annotations
@@ -38,11 +45,13 @@ from benchmarks.common import add_target_arg, fmt_table, save_artifact, \
 
 def _run_mode(engine, stream: List[Dict], n_slots: int, mode: str,
               geom=None) -> Dict:
-    from repro.serve.scheduler import Scheduler
+    from repro.serve.scheduler import Scheduler, percentile
+
+    paged = mode in ("paged", "paged+share")
 
     def make_sched():
-        return Scheduler(n_slots=n_slots,
-                         pages=geom if mode == "paged" else None)
+        return Scheduler(n_slots=n_slots, pages=geom if paged else None,
+                         prefix_share=(mode == "paged+share"))
 
     t0 = time.monotonic()
     reports = []
@@ -52,13 +61,14 @@ def _run_mode(engine, stream: List[Dict], n_slots: int, mode: str,
             for spec in stream[i:i + n_slots]:
                 sch.submit(spec["prompt"], spec["max_new_tokens"])
             reports.append(engine.serve(scheduler=sch))
-    else:                                   # continuous / paged
+    else:                                   # continuous / paged [+share]
         sch = make_sched()
         for spec in stream:
             sch.submit(spec["prompt"], spec["max_new_tokens"])
         reports.append(engine.serve(scheduler=sch))
     dt = time.monotonic() - t0
     n_tokens = sum(len(r.tokens) for rep in reports for r in rep.requests)
+    ttft = [t for rep in reports for t in rep.stats["ttft_steps"]]
     last = reports[-1].stats
     rec = {
         "mode": mode,
@@ -74,8 +84,20 @@ def _run_mode(engine, stream: List[Dict], n_slots: int, mode: str,
         "preemptions": sum(rep.stats["preemptions"] for rep in reports),
         "spilled_pages": sum(rep.stats["spilled_pages"] for rep in reports),
         "restores": sum(rep.stats["restores"] for rep in reports),
+        # admission wait in decode-step clock units (scheduler TTFT).
+        # Meaningless for static mode: each per-batch serve() restarts the
+        # step clock, so cross-batch queueing is invisible — reported as
+        # None and rendered "-" in the table.
+        "ttft_steps_p50": (None if mode == "static"
+                           else percentile(ttft, 50)),
+        "ttft_steps_p95": (None if mode == "static"
+                           else percentile(ttft, 95)),
+        # rid -> tokens, for cross-mode bit-identity checks (single-report
+        # modes only: static restarts rids per batch)
+        "outputs": ({r.rid: list(r.tokens) for r in reports[0].requests}
+                    if len(reports) == 1 else {}),
     }
-    if mode == "paged":
+    if paged:
         rec.update({
             "pool_bytes": last["pool_bytes"],
             "spill_bytes": last["spill_bytes"],
@@ -85,7 +107,15 @@ def _run_mode(engine, stream: List[Dict], n_slots: int, mode: str,
                                     for rep in reports),
             "spill_high_water": max(rep.stats["spill_high_water"]
                                     for rep in reports),
+            "mapped_high_water": max(rep.stats["mapped_high_water"]
+                                     for rep in reports),
         })
+    if mode == "paged+share":
+        rec.update({k: last[k] for k in (
+            "prefix_hits", "prefix_misses", "shared_prefix_tokens",
+            "cow_copies")})
+        rec["residency_ratio"] = (rec["mapped_high_water"]
+                                  / max(rec["pages_high_water"], 1))
     return rec
 
 
@@ -94,26 +124,39 @@ def run(target_name=None, arch: str = "qwen2.5-3b", n_requests: int = 32,
         seed: int = 0, paged: bool = False, page_tokens: int = 8,
         layer0_bytes: Optional[int] = None,
         layer1_bytes: Optional[int] = None, max_slots: int = 32,
-        require_spill: bool = False) -> str:
+        require_spill: bool = False, prefix_share: bool = False,
+        system_len: Optional[int] = None,
+        require_share_win: bool = False) -> str:
     import jax
     from repro.configs import get_reduced
     from repro.core.target import get_target
     from repro.models import build_model
     from repro.serve.engine import Engine, EngineConfig
     from repro.serve.scheduler import (derive_n_slots, derive_page_geometry,
-                                       kv_bytes_per_token, synthetic_stream)
+                                       kv_bytes_per_token,
+                                       shared_prefix_stream, synthetic_stream)
 
+    paged = paged or prefix_share
     with target_scope(target_name):
         target = get_target()
         cfg = get_reduced(arch)
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
+        if prefix_share:
+            # shared-system-prompt workload: one common prefix (3 full
+            # pages by default) + unique tails up to one page
+            system_len = system_len or 3 * page_tokens
+            tail_len = page_tokens
+            prompt_len = system_len + tail_len
+            stream = shared_prefix_stream(n_requests, system_len, tail_len,
+                                          gen_len, cfg.vocab_size, seed)
+        else:
+            stream = synthetic_stream(n_requests, prompt_len, gen_len,
+                                      cfg.vocab_size, seed)
         max_len = prompt_len + gen_len
         n_slots = n_slots or derive_n_slots(cfg, max_len, max_slots=8)
         engine = Engine(model, params,
                         EngineConfig(max_len=max_len, sync_interval=4))
-        stream = synthetic_stream(n_requests, prompt_len, gen_len,
-                                  cfg.vocab_size, seed)
         # the dense pool's layer-0 footprint is the shared byte budget:
         # the paged pool must beat it on concurrency INSIDE the same bytes
         dense_bytes = n_slots * kv_bytes_per_token(cfg) * max_len
@@ -128,6 +171,9 @@ def run(target_name=None, arch: str = "qwen2.5-3b", n_requests: int = 32,
             paged_slots = derive_n_slots(cfg, max_len, pages=geom,
                                          max_slots=max_slots)
             modes.append(("paged", paged_slots, geom))
+            if prefix_share:
+                # sharing on vs off, SAME geometry and layer-0 bytes
+                modes.append(("paged+share", paged_slots, geom))
         # warmup: compile prefill (per distinct prompt length) + decode chunk
         for mode, slots, g in modes[1:]:
             _run_mode(engine, stream, slots, mode, g)
@@ -135,6 +181,7 @@ def run(target_name=None, arch: str = "qwen2.5-3b", n_requests: int = 32,
                 for mode, slots, g in modes]
 
     by_mode = {r["mode"]: r for r in recs}
+    outputs = {r["mode"]: r.pop("outputs") for r in recs}   # not in artifact
     stat, cont = by_mode["static"], by_mode["continuous"]
     for r in recs:
         r["pool_bytes"] = r.get("pool_bytes", dense_bytes)
@@ -165,14 +212,45 @@ def run(target_name=None, arch: str = "qwen2.5-3b", n_requests: int = 32,
             raise SystemExit(
                 "serve_bench --require-spill: the layer-1 spill tier was "
                 "never exercised — shrink --layer0-bytes")
+    if prefix_share:
+        pg, sh = by_mode["paged"], by_mode["paged+share"]
+        if outputs["paged"] != outputs["paged+share"]:
+            raise SystemExit(
+                "serve_bench --prefix-share: sharing-on outputs differ "
+                "from sharing-off — prefix sharing must be bit-exact")
+        artifact.update({
+            "prefix_share": sh, "system_len": system_len,
+            "residency_ratio": sh["residency_ratio"],
+            "share_outputs_bit_identical": True,
+        })
+        lines.append(
+            f"prefix sharing (system prompt {system_len} tok, same "
+            f"{sh['pool_bytes']} layer-0 bytes): residency "
+            f"{sh['mapped_high_water']} mapped vs {sh['pages_high_water']} "
+            f"physical pages ({sh['residency_ratio']:.2f}x), ttft p50/p95 "
+            f"{sh['ttft_steps_p50']:.0f}/{sh['ttft_steps_p95']:.0f} vs "
+            f"{pg['ttft_steps_p50']:.0f}/{pg['ttft_steps_p95']:.0f} steps "
+            f"sharing-off, {sh['prefix_hits']} hits "
+            f"({sh['shared_prefix_tokens']} prompt tokens from cache, "
+            f"{sh['cow_copies']} COW), outputs bit-identical")
+        if require_share_win and (
+                sh["residency_ratio"] < 1.5
+                or sh["ttft_steps_p95"] > pg["ttft_steps_p95"]):
+            raise SystemExit(
+                "serve_bench --require-share-win: expected >=1.5x mapped/"
+                "physical residency and no-worse TTFT p95 with sharing on; "
+                f"got {sh['residency_ratio']:.2f}x, p95 "
+                f"{sh['ttft_steps_p95']:.0f} vs {pg['ttft_steps_p95']:.0f}")
     save_artifact("serve_bench.json", artifact)
     rows = [[r["mode"], f"{r['tok_per_s']:.1f}", r["n_tokens"], r["n_slots"],
              r["pool_bytes"], r.get("pages_high_water", "-"),
+             ("-" if r["ttft_steps_p50"] is None else
+              f"{r['ttft_steps_p50']:.0f}/{r['ttft_steps_p95']:.0f}"),
              r["preemptions"], r["max_slot_reuse"],
              f"{r['wall_s']*1e3:.0f} ms"] for r in recs]
     table = fmt_table(
         ["mode", "tok/s", "tokens", "slots", "pool bytes", "pages hw",
-         "preempt", "max reuse", "wall"],
+         "ttft p50/95", "preempt", "max reuse", "wall"],
         rows, title=f"Serve bench — {cfg.name}, {n_requests} requests "
                     f"({target.name})")
     return "\n".join([table,
@@ -202,13 +280,25 @@ def main(argv=None) -> int:
                     help="cap on paged-mode concurrent slots")
     ap.add_argument("--require-spill", action="store_true",
                     help="fail unless the layer-1 spill tier was exercised")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="replay a shared-system-prompt stream through the "
+                         "paged pool with prefix sharing off vs on (same "
+                         "layer-0 bytes; outputs must be bit-identical)")
+    ap.add_argument("--system-len", type=int, default=None,
+                    help="shared system-prompt length for --prefix-share "
+                         "(default: 3 full pages)")
+    ap.add_argument("--require-share-win", action="store_true",
+                    help="fail unless sharing shows >=1.5x mapped/physical "
+                         "residency and no-worse TTFT p95")
     add_target_arg(ap)
     args = ap.parse_args(argv)
     print(run(args.target, args.arch, args.requests, args.prompt_len,
               args.gen_len, args.slots, args.seed, paged=args.paged,
               page_tokens=args.page_tokens, layer0_bytes=args.layer0_bytes,
               layer1_bytes=args.layer1_bytes, max_slots=args.max_slots,
-              require_spill=args.require_spill))
+              require_spill=args.require_spill,
+              prefix_share=args.prefix_share, system_len=args.system_len,
+              require_share_win=args.require_share_win))
     return 0
 
 

@@ -1,8 +1,10 @@
 """Serving demo: the serving surfaces of the Engine over the pooled KV
 cache — one-shot batched decode across three architecture families (dense
-GQA, MLA+MoE, pure SSM), continuous batching over the dense slot pool, and
-the paged two-tier pool: same stream, same layer-0 bytes, more concurrent
-slots, with preempt-and-spill to the stacked layer-1 tier.
+GQA, MLA+MoE, pure SSM), continuous batching over the dense slot pool,
+the paged two-tier pool (same stream, same layer-0 bytes, more concurrent
+slots, preempt-and-spill to the stacked layer-1 tier), and ref-counted
+prefix sharing over a shared-system-prompt stream. Walkthrough:
+docs/SERVING.md.
 
     PYTHONPATH=src python examples/serve_demo.py
 """
@@ -20,7 +22,7 @@ from repro.models import build_model
 from repro.serve.engine import Engine, EngineConfig
 from repro.serve.scheduler import (Scheduler, derive_n_slots,
                                    derive_page_geometry, kv_bytes_per_token,
-                                   synthetic_stream)
+                                   shared_prefix_stream, synthetic_stream)
 
 
 def demo(arch: str, prompt_len: int = 16, gen: int = 8) -> None:
@@ -106,6 +108,42 @@ def demo_paged(arch: str = "qwen2.5-3b", n_requests: int = 12,
           f"{s['restores']} restores")
 
 
+def demo_prefix_share(arch: str = "qwen2.5-3b", n_requests: int = 12) -> None:
+    """Ref-counted prefix sharing over the paged pool: every request
+    carries the same system prompt; with sharing on, admissions map the
+    cached prefix pages read-only and prefill only the unique tail —
+    same budget, more resident requests, identical outputs."""
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = 40
+    engine = Engine(model, params, EngineConfig(max_len=max_len,
+                                                sync_interval=4))
+    geom = derive_page_geometry(
+        cfg, max_len, page_tokens=8, max_slots=16,
+        layer0_bytes=16 * kv_bytes_per_token(cfg) * 8)
+    stream = shared_prefix_stream(n_requests, system_len=16, suffix_len=8,
+                                  gen_len=8, vocab=cfg.vocab_size)
+    outs, stats = {}, {}
+    for share in (False, True):
+        sched = Scheduler(n_slots=derive_n_slots(cfg, max_len, pages=geom,
+                                                 max_slots=16),
+                          pages=geom, prefix_share=share)
+        for spec in stream:
+            sched.submit(spec["prompt"], spec["max_new_tokens"])
+        report = engine.serve(scheduler=sched)
+        outs[share] = {r.rid: r.tokens for r in report.requests}
+        stats[share] = report.stats
+    s = stats[True]
+    print(f"\nprefix sharing            {arch}: {s['prefix_hits']} hits / "
+          f"{s['prefix_misses']} misses, {s['shared_prefix_tokens']} prompt "
+          f"tokens served from cache, {s['cow_copies']} COW copies")
+    print(f"  residency {s['mapped_high_water']} mapped vs "
+          f"{s['pages_high_water']} physical pages "
+          f"({s['mapped_high_water'] / max(s['pages_high_water'], 1):.2f}x) "
+          f"| outputs sharing on == off: {outs[True] == outs[False]}")
+
+
 def main() -> int:
     print("family-spanning serving demo (reduced configs, CPU):")
     for arch in ("yi-6b", "deepseek-v2-236b", "falcon-mamba-7b",
@@ -115,6 +153,7 @@ def main() -> int:
           "\nwhy falcon-mamba/jamba run the long_500k cell (DESIGN.md §Shape-cell skip rules).")
     demo_continuous()
     demo_paged()
+    demo_prefix_share()
     return 0
 
 

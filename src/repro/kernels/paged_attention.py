@@ -20,6 +20,18 @@ layout:
     slot owns — the two-tier pool's analogue of MemPool fetching only the
     banks a tile maps to. Fully-masked pages (beyond the slot's frontier)
     are skipped with ``pl.when``.
+
+Page ALIASING is invisible to everything here: attention only ever reads
+through a slot's block table, so two slots mapping the same physical page
+(ref-counted prefix sharing — DESIGN.md §Prefix sharing & copy-on-write)
+each see it as ordinary positions of their own contiguous view, and the
+gather/page-walk math is unchanged. The aliasing contract lives entirely
+at the WRITE edge, upstream of this module: shared pages are full prompt
+pages strictly behind every reader's ``cache_len`` frontier, and the one
+page a cache-hit admission both matches and writes (the partial frontier
+page of a page-aligned full match) is copied into a private page at
+admission — so the per-token append in ``attention._paged_cache_write``
+can never land in a page another slot reads.
 """
 
 from __future__ import annotations

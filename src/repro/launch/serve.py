@@ -12,6 +12,12 @@ Two modes through the same Engine (pooled KV cache):
     admission by pages, preempt-and-spill to the layer-1 tier when layer 0
     runs out. ``--page-tokens`` / ``--layer0-bytes`` / ``--layer1-bytes``
     shape the pool; preemption/spill counters join the report.
+  * ``--stream N --paged --prefix-share`` — the stream becomes the
+    shared-system-prompt workload (every prompt = one common
+    ``--system-len`` prefix + a unique tail) and admissions serve the
+    shared prefix from ref-counted resident pages, prefilling only the
+    tail; prefix hit/miss, shared-token, COW, and mapped-vs-physical page
+    counters join the report (DESIGN.md §Prefix sharing & copy-on-write).
 
 Hardware target selection: ``--target <name>`` (or ``REPRO_TARGET``) — the
 slot/page budgets are derived from that target's CapacityPartition
@@ -27,7 +33,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.core.target import available_targets, use_target
@@ -36,19 +41,14 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.serve.engine import Engine, EngineConfig
 from repro.serve.scheduler import (DRAINED, Scheduler, derive_n_slots,
-                                   derive_page_geometry, synthetic_stream)
+                                   derive_page_geometry, percentile,
+                                   shared_prefix_stream, synthetic_stream)
 
 
-def _percentile(xs, q):
-    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
-
-
-def run_stream(engine: Engine, scheduler: Scheduler, n_requests: int,
-               prompt_len: int, gen_len: int, vocab: int, seed: int = 0
-               ) -> dict:
-    """Drive a synthetic mixed-length request stream; return counters."""
-    for spec in synthetic_stream(n_requests, prompt_len, gen_len, vocab,
-                                 seed):
+def run_stream(engine: Engine, scheduler: Scheduler, stream: list) -> dict:
+    """Drive a prepared request stream; return counters."""
+    n_requests = len(stream)
+    for spec in stream:
         scheduler.submit(spec["prompt"], spec["max_new_tokens"])
     t0 = time.monotonic()
     report = engine.serve(scheduler=scheduler)
@@ -70,12 +70,12 @@ def run_stream(engine: Engine, scheduler: Scheduler, n_requests: int,
         "max_slot_reuse": stats["max_slot_reuse"],
         # per-request latency percentiles from the scheduler's clocks —
         # TTFT (submit -> admission) and end-to-end (submit -> drain)
-        "ttft_steps_p50": _percentile(stats["ttft_steps"], 50),
-        "ttft_steps_p95": _percentile(stats["ttft_steps"], 95),
-        "e2e_steps_p50": _percentile(stats["e2e_steps"], 50),
-        "e2e_steps_p95": _percentile(stats["e2e_steps"], 95),
-        "decode_steps_p50": _percentile(decode_steps, 50),
-        "decode_steps_p95": _percentile(decode_steps, 95),
+        "ttft_steps_p50": percentile(stats["ttft_steps"], 50),
+        "ttft_steps_p95": percentile(stats["ttft_steps"], 95),
+        "e2e_steps_p50": percentile(stats["e2e_steps"], 50),
+        "e2e_steps_p95": percentile(stats["e2e_steps"], 95),
+        "decode_steps_p50": percentile(decode_steps, 50),
+        "decode_steps_p95": percentile(decode_steps, 95),
         "preemptions": stats["preemptions"],
         "spilled_pages": stats["spilled_pages"],
         "restores": stats["restores"],
@@ -84,6 +84,10 @@ def run_stream(engine: Engine, scheduler: Scheduler, n_requests: int,
         rec.update({k: stats[k] for k in (
             "page_tokens", "n_pages", "n_spill_pages", "pages_high_water",
             "spill_high_water", "pool_bytes", "spill_bytes")})
+    if stats.get("prefix_sharing"):
+        rec.update({k: stats[k] for k in (
+            "prefix_hits", "prefix_misses", "shared_prefix_tokens",
+            "cow_copies", "mapped_high_water")})
     return rec
 
 
@@ -110,9 +114,18 @@ def main(argv=None) -> int:
                     help="override the layer-0 (hot tier) page-pool budget")
     ap.add_argument("--layer1-bytes", type=int, default=None,
                     help="override the layer-1 (spill tier) budget")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="share cached prompt prefixes across requests "
+                         "(paged mode; drives a shared-system-prompt stream)")
+    ap.add_argument("--system-len", type=int, default=None,
+                    help="shared system-prompt length for --prefix-share "
+                         "(default: half of --prompt-len)")
     args = ap.parse_args(argv)
     if args.paged and not args.stream:
         ap.error("--paged applies to --stream serving")
+    if args.prefix_share and not args.paged:
+        ap.error("--prefix-share requires --paged (shared pages live in "
+                 "the paged pool)")
 
     cfg = get_config(args.arch) if args.full else get_reduced(args.arch)
     if args.stream and (cfg.family == "encdec" or cfg.frontend_len):
@@ -140,10 +153,22 @@ def main(argv=None) -> int:
                     layer1_bytes=args.layer1_bytes)
             n_slots = args.slots or derive_n_slots(
                 cfg, max_len, max_slots=max(2, args.batch), pages=pages)
-            sched = Scheduler(n_slots=n_slots, pages=pages)
-            rec = run_stream(engine, sched, args.stream, args.prompt_len,
-                             args.gen_len, cfg.vocab_size)
-            mode = "paged" if args.paged else "dense"
+            sched = Scheduler(n_slots=n_slots, pages=pages,
+                              prefix_share=args.prefix_share)
+            if args.prefix_share:
+                system_len = args.system_len or max(1, args.prompt_len // 2)
+                if system_len >= args.prompt_len:
+                    ap.error("--system-len must leave room for a unique "
+                             "tail (< --prompt-len)")
+                stream = shared_prefix_stream(
+                    args.stream, system_len, args.prompt_len - system_len,
+                    args.gen_len, cfg.vocab_size)
+            else:
+                stream = synthetic_stream(args.stream, args.prompt_len,
+                                          args.gen_len, cfg.vocab_size)
+            rec = run_stream(engine, sched, stream)
+            mode = ("paged+share" if args.prefix_share
+                    else "paged" if args.paged else "dense")
             print(f"arch={cfg.name} stream={args.stream} mode={mode} "
                   f"slots={rec['n_slots']} (max reuse {rec['max_slot_reuse']})")
             print(f"completed {rec['completed']}/{rec['n_requests']} "
@@ -165,6 +190,16 @@ def main(argv=None) -> int:
                       f"{rec['restores']} restores "
                       f"(layer-1 high water {rec['spill_high_water']}/"
                       f"{rec['n_spill_pages']})", flush=True)
+                if args.prefix_share:
+                    hw = max(rec["pages_high_water"], 1)
+                    print(f"prefix sharing: {rec['prefix_hits']} hits / "
+                          f"{rec['prefix_misses']} misses, "
+                          f"{rec['shared_prefix_tokens']} prompt tokens "
+                          f"served from cache, {rec['cow_copies']} COW "
+                          f"copies; residency {rec['mapped_high_water']} "
+                          f"mapped vs {rec['pages_high_water']} physical "
+                          f"pages ({rec['mapped_high_water'] / hw:.2f}x)",
+                          flush=True)
             else:
                 print(f"preemptions {rec['preemptions']} (dense pool)",
                       flush=True)

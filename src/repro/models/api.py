@@ -101,17 +101,30 @@ class Model:
     # ---------------------------------------------------------- serving
     def prefill(self, params, batch: Dict[str, jax.Array], max_len: int, *,
                 plans: Optional[KernelPlans] = None,
-                last_pos: Optional[jax.Array] = None):
-        """Run the full prompt, building ``max_len``-sized KV caches.
+                last_pos: Optional[jax.Array] = None,
+                prefix_len: int = 0,
+                prefix_state: Optional[Dict[str, Any]] = None):
+        """Run the prompt, building ``max_len``-sized KV caches.
 
         Returns ``(logits (B, 1, padded_vocab), state)``. By default logits
         come from the final sequence position; ``last_pos`` (per-row ``(B,)``
         int32) instead gathers each row's logits at that position — the
         continuous-batching path prefills right-padded prompt buckets and
         reads logits at the true last prompt token (DESIGN.md §Serving).
+
+        ``prefix_len``/``prefix_state`` run a *suffix* prefill for prefix
+        sharing (DESIGN.md §Prefix sharing & copy-on-write): the state
+        already caches the first ``prefix_len`` positions, ``tokens`` is
+        the unmatched tail only, and RoPE positions start at ``prefix_len``
+        (a static int, so the blockwise-flash prefill path is kept).
+        Decoder-only token models only — exactly the families paged
+        serving admits.
         """
         cfg = self.cfg
         from repro.models import layers
+        if prefix_len and (cfg.family == "encdec" or cfg.frontend_len):
+            raise NotImplementedError(
+                "suffix prefill targets decoder-only token-prompt models")
 
         def _last(x: jax.Array) -> jax.Array:
             if last_pos is None:
@@ -136,7 +149,9 @@ class Model:
         plans = plans or self.kernel_plans(s, max_len)
         x, caches = transformer.prefill(cfg, params, batch["tokens"], max_len,
                                         frontend_embeds=batch.get("frontend_embeds"),
-                                        plans=plans)
+                                        plans=plans,
+                                        caches=(prefix_state or {}).get("caches"),
+                                        prefix_len=prefix_len)
         logits = layers.unembed_logits(params["tok"], _last(x))
         return logits, {"caches": caches}
 
@@ -236,6 +251,46 @@ class Model:
                                       row_state["caches"][group.name][key])
             new_caches[group.name] = g
         return {**pool_state, "caches": new_caches}
+
+    def gather_row_paged(self, pool_state: Dict[str, Any],
+                         block_row: jax.Array, page_tokens: int
+                         ) -> Dict[str, Any]:
+        """Assemble one slot's dense (batch-1) cache view from the paged
+        pool — the inverse of :meth:`slot_update_paged`'s page cut.
+
+        ``block_row`` maps logical page indices to the physical pages to
+        read; null entries (page 0) gather zeros that downstream masking
+        hides, exactly like unwritten positions of a fresh dense cache.
+        This is the read half of suffix prefill: shared prefix pages (and
+        the copy-on-write source page) are gathered into the contiguous
+        view the suffix tokens attend over. Attention-only models — shared
+        pages cannot carry recurrent SSM state.
+        """
+        p_max = block_row.shape[0]
+
+        def gather_gqa(pages):
+            r, _, hkv, pt, hd = pages.shape
+            g = jnp.moveaxis(pages[:, block_row], 1, 2)    # (r, hkv, P, pt, hd)
+            return g.reshape(r, hkv, p_max * pt, hd)[:, None]
+
+        def gather_mla(pages):
+            r = pages.shape[0]
+            g = pages[:, block_row]                        # (r, P, pt, lat)
+            return g.reshape(r, p_max * page_tokens, -1)[:, None]
+
+        caches: Dict[str, Any] = {}
+        for group in self.cfg.layer_groups():
+            g: Dict[str, Any] = {}
+            for pos, kind in enumerate(group.pattern):
+                if kind.attn == "mamba":
+                    raise NotImplementedError(
+                        "prefix sharing requires attention-only models: "
+                        "recurrent SSM state is per-sequence, not per-page")
+                fn = gather_mla if kind.attn == "mla" else gather_gqa
+                g[f"pos{pos}"] = jax.tree.map(
+                    fn, pool_state["caches"][group.name][f"pos{pos}"])
+            caches[group.name] = g
+        return {"caches": caches}
 
     # ------------------------------------------------------ input specs
     def input_specs(self, shape: ShapeCfg,

@@ -78,6 +78,12 @@ def _paged_cache_write(pages: jax.Array, new: jax.Array,
     whose frontier is at or past the mapped depth (a drained slot's frozen
     decode) are routed to the reserved null page 0 — the paged analogue of
     the dense iota-select writing nowhere.
+
+    With prefix sharing, the page this write resolves to is private to the
+    row BY SCHEDULER INVARIANT: shared (ref-counted) pages sit strictly
+    behind the frontier and the copy-on-write rule gives every request its
+    own frontier page at admission (DESIGN.md §Prefix sharing &
+    copy-on-write) — so no guard is needed here.
     """
     pt = pages.shape[1 + axis]
     p_max = block_tables.shape[1]

@@ -295,15 +295,24 @@ def _round_up(x: int, m: int) -> int:
 
 def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
             max_len: int, *, frontend_embeds=None,
-            plans: Optional[KernelPlans] = None):
-    """Run the full prompt, building caches. Returns (x_last, caches)."""
-    caches = init_caches(cfg, tokens.shape[0], max_len)
-    # cache_len=0 is a *python* int here: prefill takes the static-offset
-    # (blockwise-flash) attention path, not the traced decode path.
+            plans: Optional[KernelPlans] = None,
+            caches=None, prefix_len: int = 0):
+    """Run the prompt, building caches. Returns (x_last, caches).
+
+    ``caches``/``prefix_len`` enable *suffix* prefill for prefix sharing:
+    ``caches`` already holds the K/V of the first ``prefix_len`` positions
+    (gathered from shared pages), ``tokens`` is only the unmatched tail,
+    and RoPE positions/causal masks start at ``prefix_len``. ``prefix_len``
+    stays a *python* int either way, so prefill takes the static-offset
+    (blockwise-flash) attention path, not the traced decode path — a
+    suffix row's math is bit-identical to the same row of a full prefill.
+    """
+    if caches is None:
+        caches = init_caches(cfg, tokens.shape[0], max_len)
     x, aux, caches = forward(cfg, params, tokens,
                              frontend_embeds=frontend_embeds,
-                             caches=caches, cache_len=0, remat=False,
-                             plans=plans)
+                             caches=caches, cache_len=int(prefix_len),
+                             remat=False, plans=plans)
     return x, caches
 
 

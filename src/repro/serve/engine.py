@@ -23,7 +23,11 @@ Two serving surfaces share one decode substrate:
     layer-0 page pool addressed through per-slot block tables, admission
     reserves *pages* instead of ``max_len`` slabs, and when layer 0 runs
     out the youngest resident spills verbatim to the layer-1 tier — the
-    paper's two-die capacity split, applied to serving.
+    paper's two-die capacity split, applied to serving. A scheduler built
+    with ``prefix_share=True`` additionally executes prefix-index hits as
+    **suffix-only prefills** over ref-counted shared pages
+    (:meth:`_shared_paged_admit`), turning shared-prefix TTFT compute from
+    O(prompt) into O(suffix) — DESIGN.md §Prefix sharing & copy-on-write.
 
 The cache layout is the pooled-memory design (DESIGN.md §Pooled KV cache):
 sequence dim sharded across the `model` axis, so aggregate pod HBM is one
@@ -112,6 +116,7 @@ class Engine:
         self._pool_chunk_fns: Dict[int, Any] = {}   # pooled decode chunks
         self._admit = self._make_admit_fn()
         self._paged_admit_fns: Dict[Any, Any] = {}  # keyed by page geometry
+        self._suffix_admit_fns: Dict[Any, Any] = {}  # + static prefix_len
         self._tier_copy = None      # jitted layer-0 <-> layer-1 copy
         self.last_stats: Dict[str, Any] = {}
         if ecfg.prompt_pad_multiple and self._has_ssm():
@@ -380,6 +385,83 @@ class Engine:
             jnp.asarray(req.max_new_tokens, jnp.int32),
             jnp.asarray(slot, jnp.int32), block_row, pool)
 
+    def _make_suffix_admit_fn(self, geom: sched_mod.PageGeometry,
+                              prefix_len: int):
+        """Jitted cache-hit admission: prefill ONLY the unmatched suffix.
+
+        The shared prefix pages (plus the copy-on-write source, when the
+        match ends mid-page) are gathered into a dense batch-1 view, the
+        suffix runs through ``Model.prefill`` at a static ``prefix_len``
+        offset (RoPE positions and causal masks continue where the shared
+        prefix ends — bit-identical to the same rows of a full prefill),
+        and the result is scattered back through ``write_row``, whose
+        entries for shared pages point at null page 0: shared history is
+        never written, and the frontier page lands in the request's fresh
+        private page (the COW copy rides the gather->scatter cycle).
+        TTFT compute drops from O(prompt) to O(suffix).
+        """
+        cfg, ecfg, plans = self.model.cfg, self.ecfg, self.plans
+        depth, pt = geom.depth, geom.page_tokens
+
+        def run(params, tokens, true_len, budget, slot, read_row, write_row,
+                pool: PoolState):
+            prefix = self.model.gather_row_paged(pool.state, read_row, pt)
+            last = (true_len - 1)[None]                 # (1,) gather
+            logits, row = self.model.prefill(
+                params, {"tokens": tokens}, depth, plans=plans, last_pos=last,
+                prefix_len=prefix_len, prefix_state=prefix)
+            first = jnp.argmax(logits[0, -1, :cfg.vocab_size])
+            first = first.astype(jnp.int32)
+            state = self.model.slot_update_paged(pool.state, row, slot,
+                                                 write_row, pt)
+            kv_len = true_len + prefix_len
+            done0 = ((first == ecfg.eos_token) | (budget <= 1)
+                     | (kv_len >= ecfg.max_len))
+            return dataclasses.replace(
+                pool, state=state,
+                tok=pool.tok.at[slot].set(first),
+                cache_len=pool.cache_len.at[slot].set(kv_len),
+                done=pool.done.at[slot].set(done0),
+                n_gen=pool.n_gen.at[slot].set(1),
+                budget=pool.budget.at[slot].set(budget)), first
+
+        return jax.jit(run)
+
+    def _shared_paged_admit(self, pool: PoolState, slot: int,
+                            req: sched_mod.Request,
+                            geom: sched_mod.PageGeometry
+                            ) -> Tuple[PoolState, jax.Array]:
+        """Execute a prefix-index-hit admission planned by the scheduler.
+
+        ``read_row`` maps the pages the suffix attends over: the shared
+        full pages, plus — when the match ends mid-page — the COW *source*
+        page at the frontier index. ``write_row`` maps where suffix K/V
+        lands: null (page 0) under the shared prefix, the request's own
+        fresh pages from the frontier on. The frontier page is therefore
+        read from the canonical copy but written to a private one.
+        """
+        pt, p_max = geom.page_tokens, geom.max_pages_per_slot
+        suffix = np.asarray(req.prompt, np.int32)[req.prefix_len:]
+        tokens, true_len = self._pad_prompt(suffix)
+        if req.prefix_len + tokens.shape[0] > geom.depth:
+            tokens = tokens[:geom.depth - req.prefix_len]   # trim pad only
+        f_w = req.prefix_len // pt                  # frontier logical page
+        read = np.zeros((p_max,), np.int32)
+        read[:req.n_shared] = req.pages[:req.n_shared]
+        if req.cow_src >= 0:
+            read[f_w] = req.cow_src
+        write = np.zeros((p_max,), np.int32)
+        write[f_w:len(req.pages)] = req.pages[f_w:]
+        key = (geom.depth, pt, req.prefix_len, tokens.shape[0])
+        if key not in self._suffix_admit_fns:
+            self._suffix_admit_fns[key] = self._make_suffix_admit_fn(
+                geom, req.prefix_len)
+        return self._suffix_admit_fns[key](
+            self.params, tokens[None], jnp.asarray(true_len, jnp.int32),
+            jnp.asarray(req.max_new_tokens, jnp.int32),
+            jnp.asarray(slot, jnp.int32), jnp.asarray(read),
+            jnp.asarray(write), pool)
+
     def _tier_copy_fn(self):
         """ONE jitted layer-0 <-> layer-1 copy, shared by spill and restore
         (jit's shape-keyed cache traces each direction independently).
@@ -464,6 +546,10 @@ class Engine:
         the decode chunk walks block tables instead of slot slabs.
         """
         geom = sch.pages
+        if sch.prefix_index is not None and self._has_ssm():
+            raise ValueError(
+                "prefix sharing requires attention-only models: recurrent "
+                "SSM state is per-sequence, not per-page (docs/SERVING.md)")
         self.last_stats = {"host_syncs": 0, "decode_steps": 0, "chunks": 0}
         pool, spill = self.init_paged_pool(sch)
         pending_first: List[Tuple[sched_mod.Request, jax.Array]] = []
@@ -483,7 +569,11 @@ class Engine:
                 pool = self._exec_restore(pool, spill, act, p_max)
             for slot, req in plan.admits:
                 req.admit_step = step_clock
-                pool, first = self._paged_admit(pool, slot, req, geom)
+                if req.prefix_len:      # prefix-index hit: suffix-only prefill
+                    pool, first = self._shared_paged_admit(pool, slot, req,
+                                                           geom)
+                else:
+                    pool, first = self._paged_admit(pool, slot, req, geom)
                 req.status = sched_mod.DECODING
                 pending_first.append((req, first))
             # the boundary's page moves, as one host->device upload

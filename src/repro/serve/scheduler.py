@@ -13,11 +13,17 @@ owns everything about slots and pages that is NOT device math:
   * :class:`PagePool` / :class:`PageGeometry` — the paged two-tier KV pool:
     KV storage is a flat pool of fixed-size pages; each slot maps logical
     page indices to physical pages through a block table. Admission is by
-    *pages*, not slots, so short requests stop paying worst-case ``max_len``
+    *pages*, not slots (pages for ``prompt + chunk`` only, grown at each
+    boundary), so short requests stop paying worst-case ``max_len``
     reservations. When layer 0 (the hot tier) is exhausted, the youngest
     resident sequence is preempted: its pages spill verbatim to layer 1
-    (the stacked spill tier) and return to the shared free list; a later
-    restore copies them back and decoding resumes bit-exactly.
+    (the stacked spill tier) and are dereferenced; a later restore copies
+    them back and decoding resumes bit-exactly.
+  * :class:`PrefixIndex` — content index over resident full pages for
+    ref-counted prefix sharing: admissions whose prompt prefix is already
+    cached map the shared pages read-only and prefill only the suffix,
+    with the frontier page copied-on-write so decode never mutates another
+    request's history (DESIGN.md §Prefix sharing & copy-on-write).
   * :class:`Scheduler` — admission policy. ``fcfs`` admits in arrival order
     (the fairness default); ``shortest`` admits the shortest queued prompt
     first (throughput-greedy, can starve long prompts — benchmarks only).
@@ -39,6 +45,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -74,6 +81,13 @@ class Request:
     spill_pages: List[int] = dataclasses.field(default_factory=list)
     spill_seat: int = -1                # layer-1 seat for resident SSM state
     preemptions: int = 0
+    # prefix sharing (DESIGN.md §Prefix sharing & copy-on-write): tokens of
+    # the prompt served from already-resident shared pages, how many leading
+    # entries of ``pages`` are shared (refcounted, read-only) mappings, and
+    # the source page a partially-matched frontier page is COW-copied from.
+    prefix_len: int = 0
+    n_shared: int = 0
+    cow_src: int = -1
 
     @property
     def prompt_len(self) -> int:
@@ -276,11 +290,19 @@ def derive_page_geometry(cfg: ModelConfig, max_len: int, *,
 
 
 class PagePool:
-    """Free-list allocator over a tier's physical pages (1..n_pages-1).
+    """Ref-counted free-list allocator over a tier's pages (1..n_pages-1).
 
     Page 0 is the reserved null page and is never handed out. Allocation is
-    all-or-nothing; freed pages return to the shared free list (LIFO, so
-    reuse stays hot). Double-free and foreign pages raise.
+    all-or-nothing and hands out pages at refcount 1; :meth:`share` adds a
+    reader to an already-mapped page (prefix sharing — DESIGN.md §Prefix
+    sharing & copy-on-write); :meth:`free` drops one reference per page and
+    only returns a page to the free list (LIFO, so reuse stays hot) when its
+    refcount hits zero — a shared page stays resident for its other readers.
+    Double-free (freeing an unmapped page) and foreign pages raise.
+
+    ``in_use`` counts *physical* pages off the free list; ``mapped`` counts
+    *logical* mappings (the sum of refcounts == block-table entries across
+    all readers). ``mapped / in_use`` is the sharing factor.
     """
 
     def __init__(self, n_pages: int, name: str = "layer0"):
@@ -290,7 +312,10 @@ class PagePool:
         self.name = name
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
         self._free_set = set(self._free)
+        self._refs = [0] * n_pages
         self.high_water = 0
+        self.mapped = 0
+        self.mapped_high_water = 0
 
     @property
     def n_free(self) -> int:
@@ -300,6 +325,9 @@ class PagePool:
     def in_use(self) -> int:
         return (self.n_pages - 1) - len(self._free)
 
+    def refcount(self, page: int) -> int:
+        return self._refs[page]
+
     def alloc(self, n: int) -> Optional[List[int]]:
         """``n`` pages or None (all-or-nothing; never partial)."""
         if n < 0:
@@ -308,18 +336,116 @@ class PagePool:
             return None
         out = [self._free.pop() for _ in range(n)]
         self._free_set.difference_update(out)
+        for p in out:
+            self._refs[p] = 1
+        self.mapped += n
         self.high_water = max(self.high_water, self.in_use)
+        self.mapped_high_water = max(self.mapped_high_water, self.mapped)
         return out
 
-    def free(self, pages: Sequence[int]) -> None:
+    def share(self, pages: Sequence[int]) -> None:
+        """Add one reader to each (already-mapped) page."""
         for p in pages:
             if not 1 <= p < self.n_pages:
                 raise ValueError(f"page {p} outside {self.name} pool "
                                  f"(1..{self.n_pages - 1})")
-            if p in self._free_set:
+            if self._refs[p] < 1:
+                raise RuntimeError(
+                    f"sharing unmapped {self.name} page {p} (refcount 0)")
+            self._refs[p] += 1
+        self.mapped += len(pages)
+        self.mapped_high_water = max(self.mapped_high_water, self.mapped)
+
+    def free(self, pages: Sequence[int]) -> List[int]:
+        """Drop one reference per page; returns the pages actually released
+        to the free list (refcount reached zero) so callers can drop any
+        content-index entries for them."""
+        released: List[int] = []
+        for p in pages:
+            if not 1 <= p < self.n_pages:
+                raise ValueError(f"page {p} outside {self.name} pool "
+                                 f"(1..{self.n_pages - 1})")
+            if p in self._free_set or self._refs[p] < 1:
                 raise RuntimeError(f"double free of {self.name} page {p}")
-            self._free.append(p)
-            self._free_set.add(p)
+            self._refs[p] -= 1
+            self.mapped -= 1
+            if self._refs[p] == 0:
+                self._free.append(p)
+                self._free_set.add(p)
+                released.append(p)
+        return released
+
+
+class PrefixIndex:
+    """Content index over resident full KV pages: chained token-id hash per
+    full page -> the physical layer-0 page caching exactly that prefix.
+
+    The key of logical page ``i`` hashes page ``i``'s token ids together
+    with page ``i-1``'s key, so a hit at page ``i`` implies the WHOLE
+    prefix up to ``(i+1) * page_tokens`` tokens matches — matching is a walk
+    from page 0 that stops at the first miss. Only *full* pages are ever
+    indexed (a partial tail page will receive decode writes and is never
+    shareable), and an entry lives exactly as long as its page is mapped:
+    the scheduler calls :meth:`forget` with whatever :meth:`PagePool.free`
+    released. See DESIGN.md §Prefix sharing & copy-on-write.
+    """
+
+    _SEED = b"kv-prefix-index-v1"
+
+    def __init__(self, page_tokens: int):
+        self.page_tokens = int(page_tokens)
+        self._by_key: Dict[bytes, int] = {}
+        self._by_page: Dict[int, bytes] = {}
+
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+    def keys_for(self, prompt: Sequence[int]) -> List[bytes]:
+        """One chained key per full page of ``prompt``."""
+        toks = np.asarray(prompt, np.int32)
+        out: List[bytes] = []
+        prev = self._SEED
+        for i in range(toks.shape[0] // self.page_tokens):
+            page = toks[i * self.page_tokens:(i + 1) * self.page_tokens]
+            prev = hashlib.blake2b(prev + page.tobytes(),
+                                   digest_size=16).digest()
+            out.append(prev)
+        return out
+
+    def match(self, prompt: Sequence[int]) -> List[int]:
+        """Physical pages of the longest indexed full-page prefix."""
+        pages: List[int] = []
+        for key in self.keys_for(prompt):
+            page = self._by_key.get(key)
+            if page is None:
+                break
+            pages.append(page)
+        return pages
+
+    def register(self, prompt: Sequence[int], pages: Sequence[int]) -> int:
+        """Index a freshly admitted request's full prompt pages.
+
+        ``pages[i]`` is the physical page at logical index ``i``. Keys that
+        are already indexed keep their canonical page (the new request maps
+        that very page when it was a hit, or holds a duplicate it prefilled
+        itself when admitted in the same boundary as the canonical).
+        Returns the number of newly indexed pages.
+        """
+        n = 0
+        for key, page in zip(self.keys_for(prompt), pages):
+            if key in self._by_key or page in self._by_page:
+                continue
+            self._by_key[key] = page
+            self._by_page[page] = key
+            n += 1
+        return n
+
+    def forget(self, pages: Sequence[int]) -> None:
+        """Drop entries for pages released back to the free list."""
+        for p in pages:
+            key = self._by_page.pop(p, None)
+            if key is not None:
+                self._by_key.pop(key, None)
 
 
 @dataclasses.dataclass
@@ -359,6 +485,13 @@ class PagePlan:
     rejects: List[Request] = dataclasses.field(default_factory=list)
 
 
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Percentile with an empty-list guard — shared by the stream driver
+    and serve_bench so their latency columns agree on the edge cases."""
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if len(xs) \
+        else 0.0
+
+
 def synthetic_stream(n_requests: int, prompt_len: int, gen_len: int,
                      vocab: int, seed: int = 0) -> List[Dict[str, Any]]:
     """The canonical mixed-length synthetic workload: prompt lengths in
@@ -372,6 +505,27 @@ def synthetic_stream(n_requests: int, prompt_len: int, gen_len: int,
         glen = int(rng.randint(max(1, gen_len // 2), gen_len + 1))
         out.append({"prompt": rng.randint(2, vocab,
                                           size=plen).astype(np.int32),
+                    "max_new_tokens": glen})
+    return out
+
+
+def shared_prefix_stream(n_requests: int, system_len: int, suffix_len: int,
+                         gen_len: int, vocab: int,
+                         seed: int = 0) -> List[Dict[str, Any]]:
+    """The shared-system-prompt workload: every request is one common
+    ``system_len``-token prefix followed by a unique tail of up to
+    ``suffix_len`` tokens — the traffic shape prefix sharing is built for
+    (shared system prompts, few-shot templates). Shared by the stream
+    driver and ``serve_bench --prefix-share`` so the benchmark's
+    residency/TTFT datapoints measure exactly what ``--stream`` drives."""
+    rng = np.random.RandomState(seed)
+    system = rng.randint(2, vocab, size=int(system_len)).astype(np.int32)
+    out = []
+    for _ in range(n_requests):
+        slen = int(rng.randint(max(1, suffix_len // 2), suffix_len + 1))
+        glen = int(rng.randint(max(1, gen_len // 2), gen_len + 1))
+        tail = rng.randint(2, vocab, size=slen).astype(np.int32)
+        out.append({"prompt": np.concatenate([system, tail]),
                     "max_new_tokens": glen})
     return out
 
@@ -431,14 +585,24 @@ class Scheduler:
     per-request page mappings, and the preempt-and-spill policy
     (:meth:`plan_boundary`). The engine mirrors the mappings into the
     device block-table array and executes the planned copies.
+
+    With ``prefix_share`` additionally set, admission consults a
+    :class:`PrefixIndex` of resident full pages: a queued prompt whose
+    longest full-page prefix is already cached maps those pages read-only
+    (refcounted) and reserves fresh pages only for the unmatched tail —
+    the engine then prefills only the suffix (DESIGN.md §Prefix sharing &
+    copy-on-write).
     """
 
     POLICIES = ("fcfs", "shortest")
 
     def __init__(self, n_slots: int, policy: str = "fcfs",
-                 pages: Optional[PageGeometry] = None):
+                 pages: Optional[PageGeometry] = None,
+                 prefix_share: bool = False):
         if policy not in self.POLICIES:
             raise ValueError(f"unknown policy {policy!r}; have {self.POLICIES}")
+        if prefix_share and pages is None:
+            raise ValueError("prefix_share requires the paged pool (pages=)")
         self.n_slots = n_slots
         self.policy = policy
         self.table = SlotTable(n_slots)
@@ -456,6 +620,14 @@ class Scheduler:
         self.preemptions = 0
         self.spilled_pages = 0
         self.restores = 0
+        # ---- prefix sharing (None -> every admission prefills in full)
+        self.prefix_index: Optional[PrefixIndex] = None
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.shared_prefix_tokens = 0   # prompt tokens served from the index
+        self.cow_copies = 0
+        if prefix_share:
+            self.prefix_index = PrefixIndex(pages.page_tokens)
         if pages is not None:
             self.page_pool = PagePool(pages.n_pages, "layer0")
             self.spill_pool = PagePool(pages.n_spill_pages, "layer1")
@@ -471,7 +643,8 @@ class Scheduler:
                   page_tokens: int = 16,
                   layer1_fraction: Optional[float] = None,
                   layer0_bytes: Optional[int] = None,
-                  layer1_bytes: Optional[int] = None) -> "Scheduler":
+                  layer1_bytes: Optional[int] = None,
+                  prefix_share: bool = False) -> "Scheduler":
         """Size the slot table (and, when ``paged``, the two-tier page
         pools) from the target's CapacityPartition budget."""
         pages = None
@@ -484,7 +657,7 @@ class Scheduler:
         return cls(derive_n_slots(cfg, max_len, target=target,
                                   fraction=fraction, max_slots=max_slots,
                                   pages=pages),
-                   policy=policy, pages=pages)
+                   policy=policy, pages=pages, prefix_share=prefix_share)
 
     # ------------------------------------------------------------- queue
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
@@ -518,8 +691,10 @@ class Scheduler:
         """Fill free slots from the queue; returns (slot, request) pairs.
 
         Called at batch-drain boundaries only — admission never interrupts
-        the in-flight decode chunk, it refills slots between chunks. Dense
-        mode only; paged admission goes through :meth:`plan_boundary`.
+        the in-flight decode chunk, it refills slots between chunks
+        (DESIGN.md §Serving). Dense slot-slab mode only; paged admission —
+        by pages, with optional prefix sharing — goes through
+        :meth:`plan_boundary` (DESIGN.md §Paged two-tier pool).
         """
         placed: List[Tuple[int, Request]] = []
         while self.queue and self.table.n_occupied < self.n_slots:
@@ -533,13 +708,18 @@ class Scheduler:
         return placed
 
     def complete(self, slot: int, status: str = DRAINED) -> Request:
-        """Mark the slot's request drained (or rejected), free the slot for
-        reuse and — in paged mode — return its pages to the free list."""
+        """Mark the slot's request drained (or rejected) and free the slot
+        for reuse. In paged mode this drops one reference on each of the
+        request's pages: a private page returns to the free list, a shared
+        page stays resident for its other readers, and pages that actually
+        released fall out of the prefix index."""
         req = self.active.pop(slot)
         self.table.release(slot)
         self._active_order.remove(slot)
         if self.page_pool is not None and req.pages:
-            self.page_pool.free(req.pages)
+            released = self.page_pool.free(req.pages)
+            if self.prefix_index is not None:
+                self.prefix_index.forget(released)
             req.pages = []
         req.status = status
         self.drained.append(req)
@@ -576,7 +756,12 @@ class Scheduler:
         self.table.release(slot)
         self._active_order.remove(slot)
         src = req.pages
-        self.page_pool.free(src)
+        # dereference: private pages release (and leave the prefix index);
+        # a shared page stays resident for its other readers — the layer-1
+        # copy below still reads it, since nobody writes shared pages
+        released = self.page_pool.free(src)
+        if self.prefix_index is not None:
+            self.prefix_index.forget(released)
         req.pages = []
         req.spill_pages = dst
         req.spill_seat = seat[0]
@@ -603,10 +788,19 @@ class Scheduler:
         2. **Restores + admissions** (policy order, preempted first): a
            restore reallocates layer-0 pages and schedules the copy back; a
            fresh admission reserves pages for ``prompt + chunk`` only — the
-           whole point of paging: no worst-case ``max_len`` slab. Admission
-           stops at the first request that does not fit (no queue-jumping
-           beyond the policy's pick). Admission never preempts; only
-           growth of already-resident sequences does.
+           whole point of paging: no worst-case ``max_len`` slab. With
+           prefix sharing, the admission first matches the longest indexed
+           full-page prefix (:meth:`_match_prefix`) and allocates fresh
+           pages only for the unmatched tail. Admission stops at the first
+           request that does not fit (no queue-jumping beyond the policy's
+           pick). Admission never preempts; only growth of already-resident
+           sequences does.
+
+        Ordering contract with the engine (DESIGN.md §Paged two-tier pool):
+        spills are planned before restores/admissions so their device
+        copies read layer-0 pages before anything reuses them; restored
+        spill pages are freed only after this boundary's spills allocated
+        theirs, keeping read and write page ids disjoint.
         """
         assert self.pages is not None, "plan_boundary is paged-mode only"
         geom = self.pages
@@ -665,19 +859,56 @@ class Scheduler:
                 self.drained.append(req)
                 plan.rejects.append(req)
                 continue
+            shared, prefix_len, cow_src = self._match_prefix(req)
             need = geom.pages_for(min(req.prompt_len + chunk_tokens, max_len))
-            got = self.page_pool.alloc(need)
+            got = self.page_pool.alloc(need - len(shared))
             if got is None:
                 break
+            if shared:
+                self.page_pool.share(shared)
             del self.queue[idx]
             slot = self.table.allocate(req.rid)
-            req.pages = got
+            req.pages = shared + got
+            req.prefix_len, req.n_shared, req.cow_src = (prefix_len,
+                                                         len(shared), cow_src)
+            if self.prefix_index is not None:
+                if prefix_len:
+                    self.prefix_hits += 1
+                    self.shared_prefix_tokens += prefix_len
+                    self.cow_copies += cow_src >= 0
+                else:
+                    self.prefix_misses += 1
+                self.prefix_index.register(req.prompt, req.pages)
             req.status = PREFILLING
             self.active[slot] = req
             self.admit_order.append(req.rid)
             self._active_order.append(slot)
             plan.admits.append((slot, req))
         return plan
+
+    def _match_prefix(self, req: Request) -> Tuple[List[int], int, int]:
+        """Prefix-index lookup for a fresh admission.
+
+        Returns ``(shared_pages, prefix_len, cow_src)``: the physical pages
+        to map read-only at logical indices ``0..len(shared)-1``, how many
+        prompt tokens they cover, and — when the match ends mid-page — the
+        source page the engine COW-copies the frontier page from (else -1).
+
+        The match is capped at ``prompt_len - 1`` tokens: at least one
+        prompt token is always prefilled (the request's first output token
+        is the argmax at the last prompt position). When the cap bites (a
+        page-aligned prompt fully covered by the index), the final matched
+        page would hold the write frontier — it is NEVER shared; the engine
+        copies it into a fresh private page instead (the copy-on-write rule:
+        decode writes must not mutate another request's history)."""
+        if self.prefix_index is None:
+            return [], 0, -1
+        matched = self.prefix_index.match(req.prompt)
+        pt = self.pages.page_tokens
+        prefix_len = min(len(matched) * pt, req.prompt_len - 1)
+        full = prefix_len // pt
+        cow_src = matched[full] if prefix_len % pt else -1
+        return matched[:full], prefix_len, cow_src
 
     def block_table(self) -> np.ndarray:
         """The (n_slots, max_pages_per_slot) int32 block table implied by
@@ -726,6 +957,17 @@ class Scheduler:
                 "spill_high_water": self.spill_pool.high_water,
                 "pool_bytes": geom.layer0_bytes,
                 "spill_bytes": geom.layer1_bytes,
+                # prefix sharing: logical mappings vs physical pages — the
+                # ratio is the concurrent-residency win per layer-0 byte
+                "prefix_sharing": self.prefix_index is not None,
+                "prefix_hits": self.prefix_hits,
+                "prefix_misses": self.prefix_misses,
+                "shared_prefix_tokens": self.shared_prefix_tokens,
+                "cow_copies": self.cow_copies,
+                "mapped_pages": self.page_pool.mapped,
+                "mapped_high_water": self.page_pool.mapped_high_water,
+                "indexed_pages": (len(self.prefix_index)
+                                  if self.prefix_index is not None else 0),
             })
         else:
             out["paged"] = False

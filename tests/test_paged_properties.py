@@ -1,6 +1,8 @@
 """Hypothesis property tests for the paged pool's allocator + scheduler:
 no double-mapped page, alloc/free conservation, block tables always
-consistent with the free list."""
+consistent with the free list, and — with prefix sharing — refcount
+conservation plus the copy-on-write aliasing rules (DESIGN.md §Prefix
+sharing & copy-on-write)."""
 
 import numpy as np
 import pytest
@@ -95,3 +97,81 @@ def test_scheduler_block_tables_consistent_with_free_list(seed, n_reqs,
     assert not sch.has_work()
     assert sch.page_pool.in_use == 0                         # all returned
     assert sch.spill_pool.in_use == 0
+
+
+def check_sharing_invariants(sch, geom):
+    """Refcount + COW invariants that must hold at every drain boundary
+    (shared with the hypothesis property below so a plain deterministic
+    loop can also drive it)."""
+    pool, pt = sch.page_pool, geom.page_tokens
+    # refcount conservation: sum of refcounts == mapped block-table entries
+    mapped = sum(len(r.pages) for r in sch.active.values())
+    assert pool.mapped == mapped
+    assert sum(pool._refs[1:]) == mapped
+    # no page freed while a reader holds it
+    assert all(pool._refs[p] == 0 for p in pool._free)
+    assert all(pool._refs[p] >= 1 for p in range(1, geom.n_pages)
+               if p not in pool._free_set)
+    # conservation of the physical page set
+    in_use = {p for r in sch.active.values() for p in r.pages}
+    assert in_use | set(pool._free) == set(range(1, geom.n_pages))
+    for slot, req in sch.active.items():
+        # within one request no logical index maps the same page twice
+        assert len(req.pages) == len(set(req.pages))
+        for i, page in enumerate(req.pages):
+            if pool._refs[page] > 1:
+                # an aliased page lies wholly inside the prompt: strictly
+                # behind every reader's write frontier, write-immutable
+                assert (i + 1) * pt <= req.prompt_len
+        # the COW/write-frontier page is never aliased
+        w = req.cache_len // pt
+        if w < len(req.pages):
+            assert pool._refs[req.pages[w]] == 1
+    # every indexed page is resident (dropped exactly at refcount zero)
+    if sch.prefix_index is not None:
+        for page in sch.prefix_index._by_page:
+            assert pool._refs[page] >= 1
+
+
+@hypothesis.given(st.integers(0, 2 ** 31 - 1), st.integers(8, 24),
+                  st.integers(2, 6))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_refcount_conservation_under_prefix_sharing(seed, n_reqs, n_slots):
+    """Drive plan_boundary over a shared-prefix workload with sharing on:
+    refcounts always equal mapped entries, no page frees early, shared
+    pages stay behind write frontiers, COW pages stay private."""
+    rng = np.random.RandomState(seed)
+    max_len, chunk, pt = 32, 4, 8
+    pb = sm.kv_bytes_per_token(TINY) * pt
+    geom = sm.derive_page_geometry(
+        TINY, max_len, page_tokens=pt, max_slots=n_slots,
+        layer0_bytes=pb * int(rng.randint(4, 12)),
+        layer1_bytes=pb * int(rng.randint(8, 16)))
+    sch = sm.Scheduler(n_slots=n_slots, pages=geom, prefix_share=True)
+    # a small pool of system prefixes => plenty of index hits, including
+    # page-aligned full matches (the COW case)
+    systems = [rng.randint(2, 128, size=n).astype(np.int32)
+               for n in (8, 16, 12)]
+    for _ in range(n_reqs):
+        system = systems[int(rng.randint(len(systems)))]
+        tail = rng.randint(2, 128, size=int(rng.randint(0, 8)))
+        sch.submit(np.concatenate([system, tail.astype(np.int32)]),
+                   int(rng.randint(1, 12)))
+    for _ in range(300):
+        if not sch.has_work():
+            break
+        sch.plan_boundary(chunk_tokens=chunk, max_len=max_len)
+        check_sharing_invariants(sch, geom)
+        for slot in sorted(sch.active):
+            req = sch.active[slot]
+            take = min(chunk, req.max_new_tokens - len(req.tokens),
+                       max_len - req.cache_len)
+            req.tokens.extend([7] * max(take, 0))
+            if (len(req.tokens) >= req.max_new_tokens
+                    or req.cache_len >= max_len):
+                sch.complete(slot)
+        check_sharing_invariants(sch, geom)
+    assert not sch.has_work()
+    assert sch.page_pool.in_use == 0 and sch.page_pool.mapped == 0
+    assert sch.spill_pool.in_use == 0
+    assert len(sch.prefix_index) == 0                # index dies with pages

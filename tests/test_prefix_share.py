@@ -1,0 +1,268 @@
+"""Prefix-shared paged KV pool: refcounted PagePool, PrefixIndex, COW,
+and shared-on/off bit-identical serving (DESIGN.md §Prefix sharing &
+copy-on-write)."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.serve import scheduler as sm
+from repro.serve.engine import Engine, EngineConfig
+
+TINY = ModelConfig(
+    name="tiny-share", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=128,
+)
+
+TINY_WINDOW = dataclasses.replace(
+    TINY, name="tiny-share-window", n_layers=3, window=8,
+    local_global_ratio=2)
+
+TINY_MLA = dataclasses.replace(
+    TINY, name="tiny-share-mla", n_kv_heads=4, use_mla=True, kv_lora_rank=16,
+    qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16)
+
+TINY_HYBRID = dataclasses.replace(
+    TINY, name="tiny-share-hybrid", family="hybrid", n_layers=4,
+    ssm_d_state=8, ssm_conv=4, attn_period=2, attn_offset=1)
+
+
+def _geometry(cfg, max_len=40, pt=8, n_layer0=12, n_layer1=24):
+    pb = sm.kv_bytes_per_token(cfg) * pt
+    return sm.derive_page_geometry(
+        cfg, max_len, page_tokens=pt, max_slots=8,
+        layer0_bytes=pb * n_layer0, layer1_bytes=pb * n_layer1)
+
+
+def _shared_prompts(n, system_len=20, vocab=128, seed=3):
+    rng = np.random.RandomState(seed)
+    system = rng.randint(2, vocab, size=system_len).astype(np.int32)
+    return system, [np.concatenate(
+        [system, rng.randint(2, vocab,
+                             size=int(rng.randint(2, 9))).astype(np.int32)])
+        for _ in range(n)]
+
+
+# ---------------------------------------------------- refcounted PagePool
+
+def test_page_pool_share_and_release():
+    pool = sm.PagePool(8)
+    a = pool.alloc(3)
+    pool.share(a[:2])                         # a second reader
+    assert pool.in_use == 3 and pool.mapped == 5
+    assert pool.mapped_high_water == 5
+    assert pool.free(a) == [a[2]]             # shared pages stay resident
+    assert pool.in_use == 2 and pool.mapped == 2
+    assert sorted(pool.free(a[:2])) == sorted(a[:2])   # last reader frees
+    assert pool.in_use == 0 and pool.mapped == 0
+
+
+def test_page_pool_share_rejects_unmapped_and_foreign():
+    pool = sm.PagePool(4)
+    a = pool.alloc(1)
+    pool.free(a)
+    with pytest.raises(RuntimeError, match="unmapped"):
+        pool.share(a)                         # refcount 0: nothing to share
+    with pytest.raises(ValueError, match="outside"):
+        pool.share([0])
+    b = pool.alloc(1)
+    pool.share(b)
+    pool.free(b)
+    with pytest.raises(RuntimeError, match="double free"):
+        pool.free(b)
+        pool.free(b)                          # refcount exhausted
+
+
+# ------------------------------------------------------------ PrefixIndex
+
+def test_prefix_index_chained_matching():
+    idx = sm.PrefixIndex(page_tokens=4)
+    prompt = np.arange(2, 16, dtype=np.int32)          # 14 tokens: 3 full
+    idx.register(prompt, [5, 6, 7, 8])
+    assert idx.match(prompt) == [5, 6, 7]
+    # same second page but a different FIRST page: the chain must miss
+    other = prompt.copy()
+    other[0] += 1
+    assert idx.match(other) == []
+    # a shorter prompt matches only its own full pages
+    assert idx.match(prompt[:9]) == [5, 6]
+    idx.forget([6])
+    assert idx.match(prompt) == [5]
+    assert len(idx) == 2
+
+
+def test_prefix_index_register_keeps_canonical():
+    idx = sm.PrefixIndex(page_tokens=4)
+    prompt = np.arange(2, 10, dtype=np.int32)
+    assert idx.register(prompt, [3, 4]) == 2
+    assert idx.register(prompt, [7, 8]) == 0    # duplicate content: skip
+    assert idx.match(prompt) == [3, 4]
+
+
+# --------------------------------------------------- scheduler admission
+
+def test_sharing_admission_maps_shared_pages_and_counts():
+    geom = _geometry(TINY)
+    system, prompts = _shared_prompts(4)
+    sch = sm.Scheduler(n_slots=4, pages=geom, prefix_share=True)
+    for p in prompts:
+        sch.submit(p, 8)
+    plan = sch.plan_boundary(chunk_tokens=4, max_len=40)
+    assert len(plan.admits) >= 2
+    first, second = plan.admits[0][1], plan.admits[1][1]
+    assert first.prefix_len == 0 and first.n_shared == 0
+    # the system prompt holds 2 full pages of 8; the chain matches both
+    assert second.prefix_len == 16 and second.n_shared == 2
+    assert second.pages[:2] == first.pages[:2]          # aliased mappings
+    assert sch.page_pool.refcount(first.pages[0]) >= 2
+    assert sch.prefix_hits >= 1 and sch.prefix_misses == 1
+    assert sch.shared_prefix_tokens >= 16
+    stats = sch.stats()
+    assert stats["prefix_sharing"] and stats["mapped_pages"] > \
+        stats["pages_in_use"]
+
+
+def test_cow_on_page_aligned_full_match():
+    """A page-aligned prompt fully covered by the index: the match is
+    capped at prompt_len - 1 and the frontier page is COW'd — mapped
+    fresh and private, read from the canonical page."""
+    geom = _geometry(TINY)
+    prompt = np.arange(2, 18, dtype=np.int32)           # 16 = 2 full pages
+    sch = sm.Scheduler(n_slots=4, pages=geom, prefix_share=True)
+    a = sch.submit(prompt, 8)
+    b = sch.submit(prompt.copy(), 8)
+    sch.plan_boundary(chunk_tokens=4, max_len=40)
+    assert a.prefix_len == 0
+    assert b.prefix_len == 15 and b.n_shared == 1       # capped mid-page
+    assert b.cow_src == a.pages[1]                      # canonical source
+    assert b.pages[1] != a.pages[1]                     # private copy
+    assert sch.page_pool.refcount(b.pages[1]) == 1      # never aliased
+    assert sch.cow_copies == 1
+
+
+def test_shared_pages_survive_other_readers_drain():
+    """Freeing one reader must not reclaim a shared page; the last reader
+    does, and the index entry falls with it."""
+    geom = _geometry(TINY)
+    _, prompts = _shared_prompts(3)
+    sch = sm.Scheduler(n_slots=3, pages=geom, prefix_share=True)
+    reqs = [sch.submit(p, 8) for p in prompts]
+    sch.plan_boundary(chunk_tokens=4, max_len=40)
+    shared_page = reqs[1].pages[0]
+    assert sch.page_pool.refcount(shared_page) == 3
+    for req in reqs:
+        req.tokens.append(7)
+    # drain the canonical owner first: page must stay for readers 2 and 3
+    for slot in sorted(sch.active):
+        if sch.active[slot].rid == reqs[0].rid:
+            sch.complete(slot)
+    assert sch.page_pool.refcount(shared_page) == 2
+    assert shared_page not in sch.page_pool._free_set
+    for slot in sorted(sch.active):
+        sch.complete(slot)
+    assert sch.page_pool.in_use == 0 and sch.page_pool.mapped == 0
+    assert len(sch.prefix_index) == 0
+
+
+def test_sharing_lifts_concurrent_residency():
+    """Host-only replay of a shared-system-prompt stream: the same layer-0
+    budget carries >= 1.5x the block-table mappings per physical page."""
+    geom = _geometry(TINY, n_layer0=16)
+    _, prompts = _shared_prompts(24, seed=5)
+    sch = sm.Scheduler(n_slots=8, pages=geom, prefix_share=True)
+    for p in prompts:
+        sch.submit(p, 12)
+    for _ in range(200):
+        if not sch.has_work():
+            break
+        sch.plan_boundary(chunk_tokens=4, max_len=40)
+        for slot in sorted(sch.active):
+            req = sch.active[slot]
+            take = min(4, req.max_new_tokens - len(req.tokens),
+                       40 - req.cache_len)
+            req.tokens.extend([7] * max(take, 0))
+            if len(req.tokens) >= req.max_new_tokens or req.cache_len >= 40:
+                sch.complete(slot)
+    assert not sch.has_work()
+    stats = sch.stats()
+    assert stats["mapped_high_water"] >= 1.5 * stats["pages_high_water"]
+    assert stats["prefix_hits"] >= 16
+
+
+# ----------------------------------------------- engine: bit-exactness
+
+def _serve(engine, prompts, gen, geom, share, n_slots=4):
+    sch = sm.Scheduler(n_slots=n_slots, pages=geom, prefix_share=share)
+    for p in prompts:
+        sch.submit(p, gen)
+    with jax.transfer_guard_device_to_host("disallow"):
+        report = engine.serve(scheduler=sch)
+    return {r.rid: r.tokens for r in report.requests}, report.stats
+
+
+def test_shared_prefix_stream_bit_identical_32_requests():
+    """32 requests sharing a long system prompt: sharing on == off
+    bit-exactly (transfer-guard enforced), with a sharing request
+    preempted and restored along the way."""
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params,
+                 EngineConfig(max_len=40, eos_token=1, sync_interval=4))
+    _, prompts = _shared_prompts(32, system_len=20, seed=7)
+    geom = _geometry(TINY, n_layer0=10, n_layer1=24)    # tight: must spill
+    off, off_stats = _serve(eng, prompts, 12, geom, share=False)
+    on, on_stats = _serve(eng, prompts, 12, geom, share=True)
+    assert on == off
+    assert on_stats["drained"] == 32
+    assert on_stats["prefix_hits"] >= 20
+    assert on_stats["shared_prefix_tokens"] >= 20 * 16
+    # the tight layer-0 budget preempts sharing requests too: spilled
+    # shared pages stay resident for their other readers and the restore
+    # still reproduces the exact outputs
+    assert on_stats["preemptions"] >= 1 and on_stats["restores"] >= 1
+    assert on_stats["host_syncs"] == on_stats["chunks"]
+    assert on_stats["mapped_high_water"] > on_stats["pages_high_water"]
+    assert on_stats["pages_in_use"] == 0                # all pages freed
+
+
+@pytest.mark.parametrize("cfg", [TINY_WINDOW, TINY_MLA],
+                         ids=lambda c: c.name)
+def test_shared_prefix_bit_identical_across_families(cfg):
+    """Sliding-window and MLA (paged latent) admissions through the
+    suffix-prefill path stay bit-identical with sharing off."""
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params,
+                 EngineConfig(max_len=40, eos_token=1, sync_interval=4))
+    _, prompts = _shared_prompts(6, system_len=20, seed=11)
+    # page-aligned fully-matched prompt: exercises the COW path too
+    prompts.append(prompts[0][:16].copy())
+    prompts.append(prompts[0][:16].copy())
+    geom = _geometry(cfg)
+    off, _ = _serve(eng, prompts, 10, geom, share=False)
+    on, on_stats = _serve(eng, prompts, 10, geom, share=True)
+    assert on == off
+    assert on_stats["prefix_hits"] >= 5
+    assert on_stats["cow_copies"] >= 1
+
+
+def test_prefix_share_requires_attention_only_models():
+    model = build_model(TINY_HYBRID)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params,
+                 EngineConfig(max_len=40, eos_token=1, sync_interval=4))
+    sch = sm.Scheduler(n_slots=2, pages=_geometry(TINY_HYBRID),
+                       prefix_share=True)
+    sch.submit(np.arange(2, 12, dtype=np.int32), 4)
+    with pytest.raises(ValueError, match="attention-only"):
+        eng.serve(scheduler=sch)
+
+
+def test_prefix_share_requires_paged_pool():
+    with pytest.raises(ValueError, match="paged pool"):
+        sm.Scheduler(n_slots=2, prefix_share=True)

@@ -1,0 +1,188 @@
+"""Docs-vs-code consistency check: references in the markdown docs must
+resolve against the actual code.
+
+Two rules, applied to README.md, DESIGN.md and docs/*.md (or any files
+passed on the command line):
+
+  1. **Symbol references.** Every backticked dotted name rooted at a
+     project package — `repro.serve.scheduler.PagePool`,
+     `benchmarks.serve_bench`, ... — must resolve: the longest importable
+     module prefix is imported and the remaining attributes are looked up
+     with getattr. Docs that name a symbol that was renamed or removed
+     fail CI instead of quietly rotting.
+  2. **CLI flags.** Every ``--flag`` on a documented ``python -m
+     <module>`` invocation (line continuations included) must appear in
+     that module's ``--help``. Additionally, a table of knobs can be
+     bound to one or more modules with a directive comment on the line
+     before it::
+
+         <!-- check-docs: flags-for repro.launch.serve benchmarks.serve_bench -->
+
+     Every backticked ``--flag`` in the table below the directive must
+     then exist in EVERY listed module's ``--help``.
+
+Runs in CI next to ``benchmarks/check_cli.py`` (which checks the inverse
+direction: that benchmark CLIs expose the contracted flags at all).
+
+    PYTHONPATH=src python tools/check_docs.py [files...]
+"""
+
+from __future__ import annotations
+
+import contextlib
+import glob
+import importlib
+import io
+import os
+import re
+import runpy
+import sys
+from typing import Dict, List, Optional, Tuple
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (os.path.join(_ROOT, "src"), _ROOT):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+#: packages whose dotted references the docs are held accountable for
+PROJECT_ROOTS = ("repro", "benchmarks", "tools")
+
+_REF_RE = re.compile(
+    r"`((?:%s)(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`" % "|".join(PROJECT_ROOTS))
+_CMD_RE = re.compile(r"python\s+-m\s+((?:%s)[A-Za-z0-9_.]*)"
+                     % "|".join(PROJECT_ROOTS))
+_FLAG_RE = re.compile(r"(--[A-Za-z][A-Za-z0-9-]*)")
+_DIRECTIVE_RE = re.compile(r"<!--\s*check-docs:\s*flags-for\s+([^>]+?)\s*-->")
+
+
+def resolve_symbol(ref: str) -> str:
+    """'' if ``ref`` imports/getattrs cleanly, else the failure reason."""
+    parts = ref.split(".")
+    mod, err = None, None
+    for i in range(len(parts), 0, -1):
+        try:
+            mod = importlib.import_module(".".join(parts[:i]))
+            break
+        except ImportError as e:
+            err = e
+            continue
+    if mod is None:
+        return f"no importable module prefix ({err})"
+    obj = mod
+    for attr in parts[i:]:
+        try:
+            obj = getattr(obj, attr)
+        except AttributeError:
+            return f"{'.'.join(parts[:i])} has no attribute {attr!r}"
+    return ""
+
+
+def _module_help(module: str, cache: Dict[str, Optional[str]]) -> Optional[str]:
+    """The module's ``--help`` text (cached), or None if it has no CLI."""
+    if module in cache:
+        return cache[module]
+    argv, sys.argv = sys.argv, [module, "--help"]
+    buf = io.StringIO()
+    text: Optional[str] = None
+    try:
+        with contextlib.redirect_stdout(buf), contextlib.redirect_stderr(buf):
+            runpy.run_module(module, run_name="__main__")
+    except SystemExit as e:
+        if e.code in (0, None):
+            text = buf.getvalue()
+    except Exception:    # noqa: BLE001 — a non-CLI module is not an error here
+        text = None
+    finally:
+        sys.argv = argv
+    cache[module] = text
+    return text
+
+
+def _continued_lines(lines: List[str]) -> List[Tuple[int, str]]:
+    """Join shell line continuations; yields (first_lineno, full_line)."""
+    out, i = [], 0
+    while i < len(lines):
+        start, buf = i, lines[i]
+        while buf.rstrip().endswith("\\") and i + 1 < len(lines):
+            buf = buf.rstrip()[:-1] + " " + lines[i + 1]
+            i += 1
+        out.append((start + 1, buf))
+        i += 1
+    return out
+
+
+def check_file(path: str, help_cache: Dict[str, Optional[str]]) -> List[str]:
+    """All failures in one markdown file, as 'path:line: reason' strings."""
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    lines = text.splitlines()
+    failures: List[str] = []
+
+    for lineno, line in enumerate(lines, 1):
+        for ref in _REF_RE.findall(line):
+            reason = resolve_symbol(ref)
+            if reason:
+                failures.append(f"{path}:{lineno}: `{ref}` does not "
+                                f"resolve — {reason}")
+
+    def check_flags(module: str, flags: List[str], lineno: int) -> None:
+        help_text = _module_help(module, help_cache)
+        if help_text is None:
+            failures.append(f"{path}:{lineno}: documented module "
+                            f"{module} has no --help")
+            return
+        for flag in flags:
+            if flag not in help_text:
+                failures.append(f"{path}:{lineno}: {module} --help does "
+                                f"not mention documented flag {flag}")
+
+    for lineno, line in _continued_lines(lines):
+        for m in _CMD_RE.finditer(line):
+            flags = _FLAG_RE.findall(line[m.end():])
+            if flags:
+                check_flags(m.group(1), flags, lineno)
+
+    for i, line in enumerate(lines):
+        m = _DIRECTIVE_RE.search(line)
+        if not m:
+            continue
+        modules = m.group(1).split()
+        # the table: contiguous block of |-rows after the directive
+        flags: List[str] = []
+        for row in lines[i + 1:]:
+            if row.strip() and not row.lstrip().startswith("|"):
+                break
+            flags.extend(_FLAG_RE.findall(row))
+        for module in modules:
+            check_flags(module, sorted(set(flags)), i + 1)
+    return failures
+
+
+def default_files() -> List[str]:
+    files = [os.path.join(_ROOT, "README.md"),
+             os.path.join(_ROOT, "DESIGN.md")]
+    files += sorted(glob.glob(os.path.join(_ROOT, "docs", "*.md")))
+    return [f for f in files if os.path.exists(f)]
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    files = args or default_files()
+    help_cache: Dict[str, Optional[str]] = {}
+    failures: List[str] = []
+    for path in files:
+        fails = check_file(path, help_cache)
+        rel = os.path.relpath(path, _ROOT)
+        print(f"[{'FAIL' if fails else 'ok':4s}] {rel}")
+        failures.extend(fails)
+    if failures:
+        print(f"\n{len(failures)} stale doc reference(s):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\nall doc references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
