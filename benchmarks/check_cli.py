@@ -1,11 +1,15 @@
 """CI tooling check: every runnable benchmark script accepts ``--target``,
-and the serving benchmark exposes the paged two-tier pool flags.
+and the serving CLIs expose their contracted flags.
 
 Target selection by name is the registry contract (DESIGN.md
 §HardwareTarget); the serve benchmark's ``--paged`` / tier-budget flags are
 the contract for the dense-vs-paged capacity comparison (DESIGN.md §Paged
-two-tier pool). This check keeps new benchmark scripts honest. Runs each
-script's ``--help`` in-process and greps the usage text.
+two-tier pool), and its ``--chunked-prefill`` family is the contract for
+the admission-stall head-to-head (DESIGN.md §Chunked prefill). The stream
+driver ``repro.launch.serve`` is checked too: it must expose
+``--chunk-prefill-tokens`` so the serving knob documented in
+docs/SERVING.md stays wired. Runs each script's ``--help`` in-process and
+greps the usage text.
 
     PYTHONPATH=src python -m benchmarks.check_cli
 """
@@ -26,11 +30,22 @@ NON_CLI = {"common.py", "check_cli.py", "__init__.py"}
 EXTRA_FLAGS = {
     "serve_bench.py": ("--paged", "--page-tokens", "--layer0-bytes",
                        "--layer1-bytes", "--require-spill", "--prefix-share",
-                       "--system-len", "--require-share-win"),
+                       "--system-len", "--require-share-win",
+                       "--chunked-prefill", "--chunk-prefill-tokens",
+                       "--long-prompt-len", "--sync-interval",
+                       "--require-flat-p99", "--flat-p99-tol", "--repeats",
+                       "--emit-bench"),
 }
 
+#: non-benchmark CLI entry points checked for specific flags only (no
+#: --target requirement): (path relative to repo root, required flags)
+EXTRA_CLIS = (
+    (os.path.join("src", "repro", "launch", "serve.py"),
+     ("--chunk-prefill-tokens", "--paged", "--prefix-share")),
+)
 
-def check(path: str) -> str:
+
+def check(path: str, flags=("--target",)) -> str:
     """Returns '' if ok, else a failure reason."""
     argv, sys.argv = sys.argv, [path, "--help"]
     buf = io.StringIO()
@@ -45,9 +60,7 @@ def check(path: str) -> str:
         return f"{type(e).__name__}: {e}"
     finally:
         sys.argv = argv
-    missing = [flag for flag in
-               ("--target",) + EXTRA_FLAGS.get(os.path.basename(path), ())
-               if flag not in buf.getvalue()]
+    missing = [flag for flag in flags if flag not in buf.getvalue()]
     if missing:
         return f"--help does not mention {', '.join(missing)}"
     return ""
@@ -56,20 +69,28 @@ def check(path: str) -> str:
 def main() -> int:
     root = os.path.dirname(os.path.abspath(__file__))
     failures = []
+
+    def run_check(path, label, flags):
+        reason = check(path, flags)
+        status = "FAIL" if reason else "ok"
+        print(f"[{status:4s}] {label}" + (f" — {reason}" if reason else ""))
+        if reason:
+            failures.append(label)
+
     for path in sorted(glob.glob(os.path.join(root, "*.py"))):
         name = os.path.basename(path)
         if name in NON_CLI:
             continue
-        reason = check(path)
-        status = "FAIL" if reason else "ok"
-        print(f"[{status:4s}] {name}" + (f" — {reason}" if reason else ""))
-        if reason:
-            failures.append(name)
+        run_check(path, name,
+                  ("--target",) + EXTRA_FLAGS.get(name, ()))
+    repo = os.path.dirname(root)
+    for rel, flags in EXTRA_CLIS:
+        run_check(os.path.join(repo, rel), rel, flags)
     if failures:
-        print(f"\n{len(failures)} benchmark script(s) missing --target: "
+        print(f"\n{len(failures)} CLI(s) missing contracted flags: "
               f"{', '.join(failures)}")
         return 1
-    print("\nall benchmark scripts accept --target")
+    print("\nall CLIs expose their contracted flags")
     return 0
 
 

@@ -22,14 +22,31 @@ Engine in up to four modes:
     percentiles, physical vs *mapped* pages (the concurrent-residency
     win), plus a bit-identical output check between the two runs.
 
+A separate head-to-head, ``--chunked-prefill``, measures the admission
+stall chunked prefill exists to kill (DESIGN.md §Chunked prefill). Three
+runs over the same short-request stream: **baseline** (no long prompt),
+**unchunked** (+one ``--long-prompt-len`` prompt admitted whole — the
+stall), **chunked** (+the same prompt admitted ``--chunk-prefill-tokens``
+per boundary, interleaved with decode). The latency metric is the
+token-weighted inter-token distribution: each token emitted at a drain
+boundary contributes one sample of that boundary's wall / sync_interval.
+``--require-flat-p99`` gates on chunked p99 staying within
+``--flat-p99-tol`` of baseline WHILE the one-shot run degrades past it,
+and the chunked outputs must be bit-identical to the one-shot outputs.
+A phase-timed pass adds the prefill/insert/generate/drain breakdown.
+
 Every record carries pool bytes and pages-in-use next to throughput, so the
 dense-vs-paged comparison shows capacity, not just speed. Emits
-``benchmarks/artifacts/serve_bench.json``.
+``benchmarks/artifacts/serve_bench.json``; ``--emit-bench`` additionally
+writes the flat cross-PR metric file ``BENCH_6.json`` at the repo root
+(diffed by ``tools/diff_bench.py``).
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--target NAME] [--paged]
         [--page-tokens N] [--layer0-bytes B] [--layer1-bytes B]
         [--require-spill] [--prefix-share] [--system-len N]
-        [--require-share-win] [...]
+        [--require-share-win] [--chunked-prefill] [--long-prompt-len N]
+        [--chunk-prefill-tokens N] [--sync-interval N] [--require-flat-p99]
+        [--flat-p99-tol F] [--emit-bench] [...]
 """
 
 from __future__ import annotations
@@ -41,6 +58,24 @@ from typing import Dict, List, Optional
 
 from benchmarks.common import add_target_arg, fmt_table, save_artifact, \
     target_scope
+
+BENCH_ID = 6
+
+
+def _emit_bench_json(meta: Dict, metrics: Dict) -> str:
+    """Write the flat cross-PR metric file ``BENCH_<id>.json`` at the repo
+    root. Values are plain numbers only, keyed ``<run>.<metric>``, so
+    ``tools/diff_bench.py`` can diff any two PRs' files key by key."""
+    import json
+    import pathlib
+    path = pathlib.Path(__file__).resolve().parents[1] / \
+        f"BENCH_{BENCH_ID}.json"
+    clean = {k: v for k, v in metrics.items()
+             if isinstance(v, (int, float)) and not isinstance(v, bool)}
+    payload = {"bench_id": BENCH_ID, "schema": 1, "meta": meta,
+               "metrics": clean}
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return str(path)
 
 
 def _run_mode(engine, stream: List[Dict], n_slots: int, mode: str,
@@ -126,7 +161,9 @@ def run(target_name=None, arch: str = "qwen2.5-3b", n_requests: int = 32,
         layer1_bytes: Optional[int] = None, max_slots: int = 32,
         require_spill: bool = False, prefix_share: bool = False,
         system_len: Optional[int] = None,
-        require_share_win: bool = False) -> str:
+        require_share_win: bool = False,
+        sync_interval: Optional[int] = None,
+        emit_bench: bool = False) -> str:
     import jax
     from repro.configs import get_reduced
     from repro.core.target import get_target
@@ -156,7 +193,8 @@ def run(target_name=None, arch: str = "qwen2.5-3b", n_requests: int = 32,
         max_len = prompt_len + gen_len
         n_slots = n_slots or derive_n_slots(cfg, max_len, max_slots=8)
         engine = Engine(model, params,
-                        EngineConfig(max_len=max_len, sync_interval=4))
+                        EngineConfig(max_len=max_len,
+                                     sync_interval=sync_interval or 4))
         # the dense pool's layer-0 footprint is the shared byte budget:
         # the paged pool must beat it on concurrency INSIDE the same bytes
         dense_bytes = n_slots * kv_bytes_per_token(cfg) * max_len
@@ -242,6 +280,14 @@ def run(target_name=None, arch: str = "qwen2.5-3b", n_requests: int = 32,
                 f"got {sh['residency_ratio']:.2f}x, p95 "
                 f"{sh['ttft_steps_p95']:.0f} vs {pg['ttft_steps_p95']:.0f}")
     save_artifact("serve_bench.json", artifact)
+    if emit_bench:
+        metrics = {"speedup_tok_per_s": speedup}
+        for r in recs:
+            metrics.update({f"{r['mode']}.{k}": v for k, v in r.items()})
+        path = _emit_bench_json(
+            {"mode": "serve", "arch": cfg.name, "target": target.name,
+             "n_requests": n_requests}, metrics)
+        lines.append(f"bench metrics -> {path}")
     rows = [[r["mode"], f"{r['tok_per_s']:.1f}", r["n_tokens"], r["n_slots"],
              r["pool_bytes"], r.get("pages_high_water", "-"),
              ("-" if r["ttft_steps_p50"] is None else
@@ -255,6 +301,241 @@ def run(target_name=None, arch: str = "qwen2.5-3b", n_requests: int = 32,
                     f"({target.name})")
     return "\n".join([table,
                       f"continuous/static speedup: {speedup:.2f}x"] + lines)
+
+
+def _stream_metrics(rep, sync_interval: int) -> Dict:
+    """Flatten one ServeReport into the latency/counter record the
+    chunked-prefill head-to-head compares across runs.
+
+    The inter-token distribution is token-weighted: every token emitted at
+    a drain boundary contributes one sample of that boundary's
+    ``wall / sync_interval``, so a slow boundary counts once per consumer
+    that observed the gap. Boundaries that emit nothing (all decode slots
+    drained, only prefill chunks ran) add no samples — no stream observed
+    an inter-token gap there.
+    """
+    from repro.serve.scheduler import percentile
+
+    st = rep.stats
+    samples: List[float] = []
+    for w, t in zip(st["boundary_wall_s"], st["boundary_tokens"]):
+        samples.extend([w / sync_interval] * t)
+    return {
+        "n_tokens": sum(len(r.tokens) for r in rep.requests),
+        "intertoken_p50_ms": percentile(samples, 50) * 1e3,
+        "intertoken_p95_ms": percentile(samples, 95) * 1e3,
+        "intertoken_p99_ms": percentile(samples, 99) * 1e3,
+        "ttft_steps_p50": percentile(st["ttft_steps"], 50),
+        "ttft_steps_p95": percentile(st["ttft_steps"], 95),
+        "ttft_emit_p50": percentile(st["ttft_emit_steps"], 50),
+        "ttft_emit_p95": percentile(st["ttft_emit_steps"], 95),
+        "e2e_steps_p50": percentile(st["e2e_steps"], 50),
+        "e2e_steps_p95": percentile(st["e2e_steps"], 95),
+        "boundaries": len(st["boundary_wall_s"]),
+        "decode_steps": st["decode_steps"],
+        "host_syncs": st["host_syncs"],
+        "preemptions": st["preemptions"],
+        "spilled_pages": st["spilled_pages"],
+        "restores": st["restores"],
+        "prefill_chunks": st["prefill_chunks"],
+        "max_boundary_prefill_tokens": st["max_boundary_prefill_tokens"],
+        "pages_high_water": st.get("pages_high_water", 0),
+        "mapped_high_water": st.get("mapped_high_water", 0),
+        "prefix_hits": st.get("prefix_hits", 0),
+        "cow_copies": st.get("cow_copies", 0),
+    }
+
+
+def run_chunked(target_name=None, arch: str = "qwen2.5-3b",
+                n_requests: int = 32, prompt_len: int = 16,
+                gen_len: int = 12, n_slots: Optional[int] = None,
+                seed: int = 0, page_tokens: int = 8,
+                layer0_bytes: Optional[int] = None,
+                layer1_bytes: Optional[int] = None, max_slots: int = 32,
+                prefix_share: bool = False,
+                system_len: Optional[int] = None,
+                long_prompt_len: int = 4096, long_gen_len: int = 4,
+                chunk_prefill_tokens: int = 0, sync_interval: int = 8,
+                flat_p99_tol: float = 0.10, require_flat_p99: bool = False,
+                require_spill: bool = False, repeats: int = 3,
+                emit_bench: bool = False) -> str:
+    """The chunked-prefill admission-stall head-to-head (see module doc)."""
+    import jax
+    import numpy as np
+    from repro.configs import get_reduced
+    from repro.core.target import get_target
+    from repro.models import build_model
+    from repro.serve.engine import Engine, EngineConfig
+    from repro.serve.scheduler import (Scheduler, derive_page_geometry,
+                                       derive_prefill_chunk,
+                                       kv_bytes_per_token,
+                                       shared_prefix_stream, synthetic_stream)
+
+    with target_scope(target_name):
+        target = get_target()
+        cfg = get_reduced(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        if prefix_share:
+            system_len = system_len or 3 * page_tokens
+            prompt_len = system_len + page_tokens
+            shorts = shared_prefix_stream(n_requests, system_len,
+                                          page_tokens, gen_len,
+                                          cfg.vocab_size, seed)
+        else:
+            shorts = synthetic_stream(n_requests, prompt_len, gen_len,
+                                      cfg.vocab_size, seed)
+        rng = np.random.RandomState(seed + 1)
+        long_prompt = rng.randint(2, cfg.vocab_size,
+                                  size=long_prompt_len).astype(np.int32)
+        chunk = chunk_prefill_tokens or derive_prefill_chunk(cfg)
+        max_len = long_prompt_len + max(gen_len, long_gen_len)
+        n_slots = n_slots or 8
+        if layer0_bytes is None:
+            # fully resident by default: the head-to-head isolates the
+            # admission stall. --layer0-bytes shrinks the pool to compose
+            # chunking with spill/preemption (CI runs both).
+            resident = (n_slots * (prompt_len + gen_len + page_tokens)
+                        + long_prompt_len + long_gen_len + page_tokens)
+            layer0_bytes = kv_bytes_per_token(cfg) * resident
+        geom = derive_page_geometry(cfg, max_len, page_tokens=page_tokens,
+                                    max_slots=max_slots,
+                                    layer0_bytes=layer0_bytes,
+                                    layer1_bytes=layer1_bytes)
+        engine = Engine(model, params,
+                        EngineConfig(max_len=max_len,
+                                     sync_interval=sync_interval))
+
+        def serve(with_long, chunk_setting):
+            sch = Scheduler(n_slots=n_slots, pages=geom,
+                            prefix_share=prefix_share,
+                            chunk_prefill_tokens=chunk_setting)
+            stream = list(shorts)
+            if with_long:
+                # lands mid-stream: the pool decodes at full concurrency
+                # when the long prompt admits
+                stream.insert(min(n_slots, len(stream)),
+                              {"prompt": long_prompt,
+                               "max_new_tokens": long_gen_len})
+            for spec in stream:
+                sch.submit(spec["prompt"], spec["max_new_tokens"])
+            t0 = time.monotonic()
+            rep = engine.serve(scheduler=sch)
+            return rep, time.monotonic() - t0
+
+        runs = [("baseline", False, chunk),   # no long prompt
+                ("unchunked", True, None),    # one-shot 4k admission: stall
+                ("chunked", True, chunk)]     # chunked 4k admission
+        for _, with_long, c in runs:          # warmup: compile everything
+            serve(with_long, c)
+        recs, outputs = [], {}
+        for name, with_long, c in runs:
+            # wall-clock p99 on a shared host is noisy: measure `repeats`
+            # passes and keep the median-p99 one
+            passes = []
+            for _ in range(max(1, repeats)):
+                rep, dt = serve(with_long, c)
+                m = {"run": name, "wall_s": dt,
+                     **_stream_metrics(rep, sync_interval)}
+                m["tok_per_s"] = m["n_tokens"] / dt if dt else 0.0
+                passes.append((m, rep))
+            passes.sort(key=lambda p: p[0]["intertoken_p99_ms"])
+            rec, rep = passes[len(passes) // 2]
+            recs.append(rec)
+            outputs[name] = {r.rid: list(r.tokens) for r in rep.requests}
+        # phase breakdown runs separately: phase_timing blocks on device
+        # completion per phase, which would skew the latency numbers above
+        phases = {}
+        engine.ecfg.phase_timing = True
+        try:
+            for name, with_long, c in (("unchunked", True, None),
+                                       ("chunked", True, chunk)):
+                rep, _ = serve(with_long, c)
+                phases[name] = dict(rep.stats.get("phase_s", {}))
+        finally:
+            engine.ecfg.phase_timing = False
+
+    by = {r["run"]: r for r in recs}
+    if outputs["unchunked"] != outputs["chunked"]:
+        raise SystemExit(
+            "serve_bench --chunked-prefill: chunked outputs differ from "
+            "one-shot prefill — chunked prefill must be bit-exact")
+    base_p99 = by["baseline"]["intertoken_p99_ms"] or 1e-9
+    ratio_chunked = by["chunked"]["intertoken_p99_ms"] / base_p99
+    ratio_unchunked = by["unchunked"]["intertoken_p99_ms"] / base_p99
+    artifact = {
+        "arch": cfg.name, "target": target.name, "n_requests": n_requests,
+        "long_prompt_len": long_prompt_len,
+        "chunk_prefill_tokens": chunk, "sync_interval": sync_interval,
+        "n_slots": n_slots, "layer0_bytes": layer0_bytes,
+        "prefix_share": prefix_share,
+        "p99_ratio_chunked": ratio_chunked,
+        "p99_ratio_unchunked": ratio_unchunked,
+        "flat_p99_tol": flat_p99_tol,
+        "outputs_bit_identical": True,
+        "phase_s": phases,
+        "runs": {r["run"]: r for r in recs},
+    }
+    save_artifact("serve_chunked_bench.json", artifact)
+    rows = [[r["run"], f"{r['tok_per_s']:.1f}", r["n_tokens"],
+             f"{r['intertoken_p50_ms']:.1f}",
+             f"{r['intertoken_p99_ms']:.1f}",
+             f"{r['ttft_emit_p50']:.0f}/{r['ttft_emit_p95']:.0f}",
+             f"{r['e2e_steps_p95']:.0f}", r["preemptions"],
+             r["prefill_chunks"], f"{r['wall_s']*1e3:.0f} ms"]
+            for r in recs]
+    table = fmt_table(
+        ["run", "tok/s", "tokens", "it p50 ms", "it p99 ms",
+         "ttft emit 50/95", "e2e p95", "preempt", "chunks", "wall"],
+        rows, title=f"Chunked prefill head-to-head — {cfg.name}, "
+                    f"{n_requests}+1 requests, {long_prompt_len}-token "
+                    f"admission, chunk={chunk} ({target.name})")
+    phase_keys = ("prefill", "insert", "generate", "drain")
+    phase_rows = [[name] + [f"{phases[name].get(k, 0.0)*1e3:.0f}"
+                            for k in phase_keys]
+                  for name in phases]
+    phase_table = fmt_table(
+        ["run"] + [f"{k} ms" for k in phase_keys], phase_rows,
+        title="Phase breakdown (separate phase-timed pass)")
+    lines = [
+        table, phase_table,
+        f"p99 inter-token vs baseline: chunked x{ratio_chunked:.2f}, "
+        f"one-shot x{ratio_unchunked:.2f} (tol {flat_p99_tol:.0%}); "
+        f"outputs bit-identical"]
+    if require_spill and by["chunked"]["preemptions"] < 1:
+        raise SystemExit(
+            "serve_bench --require-spill: the chunked run never preempted "
+            "— shrink --layer0-bytes")
+    if emit_bench:
+        metrics = {"p99_ratio_chunked": ratio_chunked,
+                   "p99_ratio_unchunked": ratio_unchunked}
+        for r in recs:
+            metrics.update({f"{r['run']}.{k}": v for k, v in r.items()})
+        for name, ph in phases.items():
+            metrics.update({f"{name}.phase_{k}_s": v
+                            for k, v in ph.items()})
+        path = _emit_bench_json(
+            {"mode": "chunked-prefill", "arch": cfg.name,
+             "target": target.name, "n_requests": n_requests,
+             "long_prompt_len": long_prompt_len,
+             "chunk_prefill_tokens": chunk,
+             "sync_interval": sync_interval}, metrics)
+        lines.append(f"bench metrics -> {path}")
+    if require_flat_p99:
+        if ratio_chunked > 1 + flat_p99_tol:
+            raise SystemExit(
+                "serve_bench --require-flat-p99: chunked admission moved "
+                f"p99 inter-token x{ratio_chunked:.2f} vs baseline "
+                f"(tolerance {flat_p99_tol:.0%}) — the chunk budget is not "
+                "hiding under decode; shrink --chunk-prefill-tokens or "
+                "raise --sync-interval")
+        if ratio_unchunked <= 1 + flat_p99_tol:
+            raise SystemExit(
+                "serve_bench --require-flat-p99: the one-shot admission "
+                f"stall never materialized (x{ratio_unchunked:.2f}) — the "
+                "head-to-head is not measuring anything; lengthen "
+                "--long-prompt-len")
+    return "\n".join(lines)
 
 
 def main(argv=None) -> int:
@@ -290,15 +571,60 @@ def main(argv=None) -> int:
     ap.add_argument("--require-share-win", action="store_true",
                     help="fail unless sharing shows >=1.5x mapped/physical "
                          "residency and no-worse TTFT p95")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="run the chunked-prefill admission-stall "
+                         "head-to-head instead of the mode comparison: "
+                         "baseline stream vs one-shot vs chunked admission "
+                         "of one --long-prompt-len prompt")
+    ap.add_argument("--long-prompt-len", type=int, default=4096,
+                    help="length of the admission-stall prompt "
+                         "(--chunked-prefill)")
+    ap.add_argument("--chunk-prefill-tokens", type=int, default=0,
+                    metavar="N",
+                    help="per-boundary prefill-token budget for the "
+                         "chunked run (0: derive from the target's "
+                         "CapacityPartition)")
+    ap.add_argument("--sync-interval", type=int, default=None,
+                    help="decode steps per drain boundary (default: 4, or "
+                         "8 in --chunked-prefill mode)")
+    ap.add_argument("--require-flat-p99", action="store_true",
+                    help="fail unless chunked p99 inter-token latency "
+                         "stays within --flat-p99-tol of baseline while "
+                         "the one-shot admission degrades past it")
+    ap.add_argument("--flat-p99-tol", type=float, default=0.10,
+                    help="relative p99 tolerance for --require-flat-p99")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="measured passes per run in --chunked-prefill "
+                         "mode; the median-p99 pass is reported")
+    ap.add_argument("--emit-bench", action="store_true",
+                    help="write the flat cross-PR metric file "
+                         "BENCH_%d.json at the repo root" % BENCH_ID)
     add_target_arg(ap)
     args = ap.parse_args(argv)
+    if args.chunked_prefill:
+        print(run_chunked(
+            args.target, args.arch, args.requests, args.prompt_len,
+            args.gen_len, args.slots or 16, args.seed,
+            page_tokens=args.page_tokens, layer0_bytes=args.layer0_bytes,
+            layer1_bytes=args.layer1_bytes, max_slots=args.max_slots,
+            prefix_share=args.prefix_share, system_len=args.system_len,
+            long_prompt_len=args.long_prompt_len,
+            chunk_prefill_tokens=args.chunk_prefill_tokens,
+            sync_interval=args.sync_interval or 32,
+            flat_p99_tol=args.flat_p99_tol,
+            require_flat_p99=args.require_flat_p99,
+            require_spill=args.require_spill, repeats=args.repeats,
+            emit_bench=args.emit_bench))
+        return 0
     print(run(args.target, args.arch, args.requests, args.prompt_len,
               args.gen_len, args.slots, args.seed, paged=args.paged,
               page_tokens=args.page_tokens, layer0_bytes=args.layer0_bytes,
               layer1_bytes=args.layer1_bytes, max_slots=args.max_slots,
               require_spill=args.require_spill,
               prefix_share=args.prefix_share, system_len=args.system_len,
-              require_share_win=args.require_share_win))
+              require_share_win=args.require_share_win,
+              sync_interval=args.sync_interval,
+              emit_bench=args.emit_bench))
     return 0
 
 

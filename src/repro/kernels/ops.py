@@ -75,11 +75,18 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               causal: bool = True,
               window: int | None = None,
               scale: float | None = None,
-              q_offset: int = 0,
+              q_offset: int | jax.Array = 0,
               plan: tiling.AttentionPlan | None = None,
               impl: Impl = "auto") -> jax.Array:
-    """Blockwise attention; q (B,Hq,Sq,D), k/v (B,Hkv,Skv,D)."""
-    if not _use_pallas(impl):
+    """Blockwise attention; q (B,Hq,Sq,D), k/v (B,Hkv,Skv,D).
+
+    ``q_offset`` may be a traced int32 scalar (chunked prefill resumes at
+    a runtime cursor): the offset only enters the mask arithmetic of the
+    jnp reference paths, so a traced offset computes the exact same HLO as
+    a static one. The Pallas kernel needs a static grid offset, so traced
+    offsets always take the reference path.
+    """
+    if not _use_pallas(impl) or isinstance(q_offset, jax.Array):
         # long sequences take the blockwise XLA path (bounded transients);
         # short ones take the direct softmax (cheaper compile, exact grads).
         # Cost-mode lowering (dry-run) unrolls the block scans with capped

@@ -18,6 +18,12 @@ Two modes through the same Engine (pooled KV cache):
     shared prefix from ref-counted resident pages, prefilling only the
     tail; prefix hit/miss, shared-token, COW, and mapped-vs-physical page
     counters join the report (DESIGN.md §Prefix sharing & copy-on-write).
+  * ``--chunk-prefill-tokens N`` (any stream mode) — chunked prefill:
+    admission prefill is capped at N tokens per drain boundary and
+    interleaved with decode, so a long prompt no longer stalls in-flight
+    requests; ``0`` derives the budget from the target
+    (``derive_prefill_chunk``). Chunk counters (chunks, max boundary
+    prefill tokens) join the report (DESIGN.md §Chunked prefill).
 
 Hardware target selection: ``--target <name>`` (or ``REPRO_TARGET``) — the
 slot/page budgets are derived from that target's CapacityPartition
@@ -41,7 +47,8 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.serve.engine import Engine, EngineConfig
 from repro.serve.scheduler import (DRAINED, Scheduler, derive_n_slots,
-                                   derive_page_geometry, percentile,
+                                   derive_page_geometry,
+                                   derive_prefill_chunk, percentile,
                                    shared_prefix_stream, synthetic_stream)
 
 
@@ -79,6 +86,14 @@ def run_stream(engine: Engine, scheduler: Scheduler, stream: list) -> dict:
         "preemptions": stats["preemptions"],
         "spilled_pages": stats["spilled_pages"],
         "restores": stats["restores"],
+        # chunked prefill: TTFT to the first OUTPUT token (under chunking
+        # the final chunk's boundary, later than slot admission) and how
+        # much prompt work any single boundary booked
+        "ttft_emit_steps_p50": percentile(stats["ttft_emit_steps"], 50),
+        "ttft_emit_steps_p95": percentile(stats["ttft_emit_steps"], 95),
+        "chunk_prefill_tokens": stats["chunk_prefill_tokens"],
+        "prefill_chunks": stats["prefill_chunks"],
+        "max_boundary_prefill_tokens": stats["max_boundary_prefill_tokens"],
     }
     if stats.get("paged"):
         rec.update({k: stats[k] for k in (
@@ -120,6 +135,12 @@ def main(argv=None) -> int:
     ap.add_argument("--system-len", type=int, default=None,
                     help="shared system-prompt length for --prefix-share "
                          "(default: half of --prompt-len)")
+    ap.add_argument("--chunk-prefill-tokens", type=int, default=None,
+                    metavar="N",
+                    help="chunked prefill: cap prompt prefill at N tokens "
+                         "per drain boundary, interleaved with decode "
+                         "(0: derive N from the target's CapacityPartition; "
+                         "default: whole-prompt admission)")
     args = ap.parse_args(argv)
     if args.paged and not args.stream:
         ap.error("--paged applies to --stream serving")
@@ -153,8 +174,12 @@ def main(argv=None) -> int:
                     layer1_bytes=args.layer1_bytes)
             n_slots = args.slots or derive_n_slots(
                 cfg, max_len, max_slots=max(2, args.batch), pages=pages)
+            chunk = args.chunk_prefill_tokens
+            if chunk == 0:
+                chunk = derive_prefill_chunk(cfg)
             sched = Scheduler(n_slots=n_slots, pages=pages,
-                              prefix_share=args.prefix_share)
+                              prefix_share=args.prefix_share,
+                              chunk_prefill_tokens=chunk)
             if args.prefix_share:
                 system_len = args.system_len or max(1, args.prompt_len // 2)
                 if system_len >= args.prompt_len:
@@ -182,6 +207,14 @@ def main(argv=None) -> int:
                   f"{rec['e2e_steps_p95']:.0f}, decode p50/p95 "
                   f"{rec['decode_steps_p50']:.0f}/"
                   f"{rec['decode_steps_p95']:.0f}")
+            if rec["chunk_prefill_tokens"]:
+                print(f"chunked prefill: {rec['chunk_prefill_tokens']} "
+                      f"tokens/boundary budget, {rec['prefill_chunks']} "
+                      f"chunks, max boundary prefill "
+                      f"{rec['max_boundary_prefill_tokens']} tokens, "
+                      f"ttft-to-first-token p50/p95 "
+                      f"{rec['ttft_emit_steps_p50']:.0f}/"
+                      f"{rec['ttft_emit_steps_p95']:.0f}")
             if args.paged:
                 print(f"pages: {rec['pages_high_water']}/{rec['n_pages']} "
                       f"layer-0 high water ({rec['pool_bytes']} B), "

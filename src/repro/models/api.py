@@ -112,19 +112,23 @@ class Model:
         continuous-batching path prefills right-padded prompt buckets and
         reads logits at the true last prompt token (DESIGN.md §Serving).
 
-        ``prefix_len``/``prefix_state`` run a *suffix* prefill for prefix
-        sharing (DESIGN.md §Prefix sharing & copy-on-write): the state
-        already caches the first ``prefix_len`` positions, ``tokens`` is
-        the unmatched tail only, and RoPE positions start at ``prefix_len``
-        (a static int, so the blockwise-flash prefill path is kept).
-        Decoder-only token models only — exactly the families paged
-        serving admits.
+        ``prefix_len``/``prefix_state`` run a *resumed* prefill — the
+        prefix-share suffix path (DESIGN.md §Prefix sharing &
+        copy-on-write) and the chunked-prefill chunk path (DESIGN.md
+        §Chunked prefill): the state already caches the first
+        ``prefix_len`` positions, ``tokens`` is the tail only, and RoPE
+        positions start at ``prefix_len``. A static int offset is
+        jit-specialized; a traced int32 scalar (the chunk cursor) rides
+        into the mask arithmetic instead. Decoder-only token models only —
+        exactly the families paged serving admits.
         """
         cfg = self.cfg
         from repro.models import layers
-        if prefix_len and (cfg.family == "encdec" or cfg.frontend_len):
+        resumed = (isinstance(prefix_len, jax.Array)
+                   or prefix_len or prefix_state is not None)
+        if resumed and (cfg.family == "encdec" or cfg.frontend_len):
             raise NotImplementedError(
-                "suffix prefill targets decoder-only token-prompt models")
+                "resumed prefill targets decoder-only token-prompt models")
 
         def _last(x: jax.Array) -> jax.Array:
             if last_pos is None:
@@ -291,6 +295,26 @@ class Model:
                     fn, pool_state["caches"][group.name][f"pos{pos}"])
             caches[group.name] = g
         return {"caches": caches}
+
+    def gather_row(self, pool_state: Dict[str, Any],
+                   slot: jax.Array) -> Dict[str, Any]:
+        """Slice one slot's dense (batch-1) cache view out of the slot-major
+        pool — the read half of DENSE chunked prefill, the inverse of
+        :meth:`slot_update`. The slice carries everything earlier chunks
+        wrote for this slot; unwritten positions hold zeros that the
+        resumed prefill's masks hide. Attention-only models — chunked
+        admission is exact-length gated off for SSM/hybrid families."""
+        for group in self.cfg.layer_groups():
+            for kind in group.pattern:
+                if kind.attn == "mamba":
+                    raise NotImplementedError(
+                        "chunked prefill requires attention-only models: "
+                        "recurrent SSM state has no resumable KV prefix")
+
+        def take(pool: jax.Array) -> jax.Array:
+            return jax.lax.dynamic_slice_in_dim(pool, slot, 1, axis=1)
+
+        return {"caches": jax.tree.map(take, pool_state["caches"])}
 
     # ------------------------------------------------------ input specs
     def input_specs(self, shape: ShapeCfg,

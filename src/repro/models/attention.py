@@ -209,13 +209,19 @@ def gqa_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
         k = shard(k, BATCH, "model", None, None)
         v = shard(v, BATCH, "model", None, None)
 
-    if cache is not None and isinstance(q_offset, jax.Array):
+    if cache is not None and isinstance(q_offset, jax.Array) and s == 1:
         # decode with traced offset: direct masked attention over the cache
         out = _decode_attention(q, k, v, q_offset, window=kind.window,
                                 causal=causal)
     else:
+        # prefill — including multi-token chunks resuming at a TRACED
+        # cursor (chunked prefill): the offset only shifts the causal mask,
+        # so this is the same blockwise math as a static-offset prefill
         out = ops.attention(q, k, v, causal=causal and cross_kv is None,
-                            window=kind.window, q_offset=int(q_offset),
+                            window=kind.window,
+                            q_offset=(q_offset
+                                      if isinstance(q_offset, jax.Array)
+                                      else int(q_offset)),
                             plan=plan)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
     out = linear(out, p["wo"])
@@ -316,7 +322,7 @@ def mla_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
 
     scale = (nope + rope_d) ** -0.5
 
-    if cache is not None and isinstance(q_offset, jax.Array):
+    if cache is not None and isinstance(q_offset, jax.Array) and s == 1:
         # ---- ABSORBED (latent-space) decode: never materialize per-head
         # K/V. q_nope is folded through wkv_b's K half so scores/values are
         # computed directly against the 576-dim latent cache — O(T*(l+r))
@@ -345,7 +351,9 @@ def mla_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
         out = out.astype(x.dtype)
     else:
         # prefill/train: decompress + flash attention (compute-optimal for
-        # long query blocks; the latent trick only wins at small s)
+        # long query blocks; the latent trick only wins at small s). A
+        # multi-token chunk resuming at a TRACED cursor lands here too —
+        # the same decompression an unchunked (static-offset) prefill does.
         ckv = shard(ckv, BATCH, None, None)
         kv = linear(ckv, p["wkv_b"]).reshape(*ckv.shape[:2], h, nope + vdim)
         k_nope = kv[..., :nope].transpose(0, 2, 1, 3)   # (B,H,Skv,nope)
@@ -354,7 +362,11 @@ def mla_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
         k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
         q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
         out = ops.attention(q_full, k, v, causal=True, window=kind.window,
-                            scale=scale, q_offset=int(q_offset), plan=plan)
+                            scale=scale,
+                            q_offset=(q_offset
+                                      if isinstance(q_offset, jax.Array)
+                                      else int(q_offset)),
+                            plan=plan)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, h * vdim)
     return linear(out, p["wo"]), new_cache
 

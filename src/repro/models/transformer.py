@@ -296,22 +296,28 @@ def _round_up(x: int, m: int) -> int:
 def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
             max_len: int, *, frontend_embeds=None,
             plans: Optional[KernelPlans] = None,
-            caches=None, prefix_len: int = 0):
+            caches=None, prefix_len=0):
     """Run the prompt, building caches. Returns (x_last, caches).
 
-    ``caches``/``prefix_len`` enable *suffix* prefill for prefix sharing:
-    ``caches`` already holds the K/V of the first ``prefix_len`` positions
-    (gathered from shared pages), ``tokens`` is only the unmatched tail,
-    and RoPE positions/causal masks start at ``prefix_len``. ``prefix_len``
-    stays a *python* int either way, so prefill takes the static-offset
-    (blockwise-flash) attention path, not the traced decode path — a
-    suffix row's math is bit-identical to the same row of a full prefill.
+    ``caches``/``prefix_len`` enable *resumed* prefill — prefix-share
+    suffixes and chunked-prefill chunks: ``caches`` already holds the K/V
+    of the first ``prefix_len`` positions (gathered from shared pages or
+    the request's own earlier chunks), ``tokens`` is only the tail, and
+    RoPE positions/causal masks start at ``prefix_len``. A python-int
+    ``prefix_len`` is jit-specialized (one compile per offset — the suffix
+    path); a traced int32 scalar rides into the mask/position arithmetic
+    instead (one compile per chunk-length bucket — the chunked path). Both
+    route multi-token tails through the SAME blockwise prefill attention,
+    so a resumed row's math is bit-identical to the same row of a full
+    prefill.
     """
     if caches is None:
         caches = init_caches(cfg, tokens.shape[0], max_len)
+    if not isinstance(prefix_len, jax.Array):
+        prefix_len = int(prefix_len)
     x, aux, caches = forward(cfg, params, tokens,
                              frontend_embeds=frontend_embeds,
-                             caches=caches, cache_len=int(prefix_len),
+                             caches=caches, cache_len=prefix_len,
                              remat=False, plans=plans)
     return x, caches
 

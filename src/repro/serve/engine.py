@@ -43,6 +43,7 @@ into every prefill/decode call — serving never re-plans per step.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import jax
@@ -62,6 +63,11 @@ class EngineConfig:
     right-pads slot prompts up to a multiple to bound prefill recompiles;
     it must stay ``None`` (exact-length prefill) for models with recurrent
     SSM layers, whose state would integrate the pad tokens.
+
+    ``phase_timing`` turns on the per-phase wall-clock breakdown
+    (prefill / insert / generate / drain) in ``last_stats`` — benchmark
+    mode only: each phase blocks on its device work, which serializes the
+    dispatch pipeline the serve loop otherwise overlaps.
     """
 
     max_len: int
@@ -70,6 +76,7 @@ class EngineConfig:
     sync_interval: int = 8
     pad_token: int = 0
     prompt_pad_multiple: Optional[int] = None
+    phase_timing: bool = False
 
 
 @jax.tree_util.register_dataclass
@@ -117,6 +124,11 @@ class Engine:
         self._admit = self._make_admit_fn()
         self._paged_admit_fns: Dict[Any, Any] = {}  # keyed by page geometry
         self._suffix_admit_fns: Dict[Any, Any] = {}  # + static prefix_len
+        # chunked prefill (DESIGN.md §Chunked prefill): jit variants keyed
+        # by POWER-OF-TWO padded chunk length (+ emit_first), never by the
+        # runtime cursor — O(log chunk_tokens) compiles total
+        self._chunk_prefill_fns: Dict[Any, Any] = {}        # paged
+        self._dense_chunk_prefill_fns: Dict[Any, Any] = {}  # dense
         self._tier_copy = None      # jitted layer-0 <-> layer-1 copy
         self.last_stats: Dict[str, Any] = {}
         if ecfg.prompt_pad_multiple and self._has_ssm():
@@ -135,6 +147,26 @@ class Engine:
         issued at batch-drain boundaries; counted for the regression test."""
         self.last_stats["host_syncs"] = self.last_stats.get("host_syncs", 0) + 1
         return jax.device_get(tree)
+
+    def _timed(self, phase: str, fn, *args):
+        """Run ``fn`` and, in ``phase_timing`` mode, charge its wall time
+        (blocked on device completion) to ``last_stats['phase_s'][phase]``.
+        Off by default: blocking per phase would serialize the dispatch
+        pipeline the serve loop overlaps."""
+        if not self.ecfg.phase_timing:
+            return fn(*args)
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        acc = self.last_stats.setdefault("phase_s", {})
+        acc[phase] = acc.get(phase, 0.0) + (time.perf_counter() - t0)
+        return out
+
+    @staticmethod
+    def _bucket_len(n: int, limit: int) -> int:
+        """Next power of two >= n, clamped so the chunk write stays inside
+        the cache depth — the static lengths chunk prefill compiles for."""
+        return min(1 << (int(n) - 1).bit_length(), limit)
 
     # ---------------------------------------------------------- one-shot
     def prefill(self, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
@@ -462,6 +494,163 @@ class Engine:
             jnp.asarray(slot, jnp.int32), jnp.asarray(read),
             jnp.asarray(write), pool)
 
+    # ------------------------------------------------- chunked prefill
+    def _make_chunk_prefill_fn(self, geom: sched_mod.PageGeometry,
+                               n_tok: int, emit_first: bool):
+        """Jitted partial-prefill step: run ONE chunk of a prompt and
+        scatter its K/V into the request's pages (DESIGN.md §Chunked
+        prefill).
+
+        The chunk cursor ``start`` and true length ``true_n`` are TRACED
+        int32 scalars — the jit cache is keyed only by the power-of-two
+        padded chunk length (plus ``emit_first``), never by where in the
+        prompt the chunk lands, so a 4k-token prompt compiles the same
+        O(log chunk_tokens) variants as a 64-token one. A traced cursor
+        rides the same resumed-prefill path as the static-offset suffix
+        admission: positions and causal masks continue at ``start``
+        (bit-identical rows), and the traced offset forces the jnp
+        reference attention (the Pallas kernel needs a static grid
+        offset). Non-final chunks only advance ``cache_len`` — the slot
+        stays done-masked, so the interleaved decode chunk freezes it for
+        free. The final chunk emits the first output token and arms the
+        slot exactly like an unchunked admission.
+        """
+        cfg, ecfg, plans = self.model.cfg, self.ecfg, self.plans
+        depth, pt = geom.depth, geom.page_tokens
+
+        def run(params, tokens, start, true_n, budget, slot, read_row,
+                write_row, pool: PoolState):
+            prefix = self.model.gather_row_paged(pool.state, read_row, pt)
+            last = (true_n - 1)[None]                   # (1,) gather
+            logits, row = self.model.prefill(
+                params, {"tokens": tokens}, depth, plans=plans, last_pos=last,
+                prefix_len=start, prefix_state=prefix)
+            state = self.model.slot_update_paged(pool.state, row, slot,
+                                                 write_row, pt)
+            new_len = start + true_n
+            if not emit_first:
+                # done=True is NOT redundant: a slot freed by preempting a
+                # mid-decode request still carries done=False on device —
+                # without the mask the interleaved decode chunk would
+                # decode the half-prefilled slot
+                return dataclasses.replace(
+                    pool, state=state,
+                    cache_len=pool.cache_len.at[slot].set(new_len),
+                    done=pool.done.at[slot].set(True),
+                ), jnp.zeros((), jnp.int32)
+            first = jnp.argmax(logits[0, -1, :cfg.vocab_size])
+            first = first.astype(jnp.int32)
+            done0 = ((first == ecfg.eos_token) | (budget <= 1)
+                     | (new_len >= ecfg.max_len))
+            return dataclasses.replace(
+                pool, state=state,
+                tok=pool.tok.at[slot].set(first),
+                cache_len=pool.cache_len.at[slot].set(new_len),
+                done=pool.done.at[slot].set(done0),
+                n_gen=pool.n_gen.at[slot].set(1),
+                budget=pool.budget.at[slot].set(budget)), first
+
+        return jax.jit(run)
+
+    def _exec_prefill_chunk(self, pool: PoolState, step: sched_mod.PrefillStep,
+                            geom: sched_mod.PageGeometry
+                            ) -> Tuple[PoolState, jax.Array]:
+        """Execute one planned :class:`~repro.serve.scheduler.PrefillStep`.
+
+        ``read_row`` maps every page holding KV the chunk attends over:
+        the request's own pages below the cursor — which are the SHARED
+        prefix pages for its leading entries — plus the copy-on-write
+        source when the first chunk starts at a mid-page prefix match.
+        ``write_row`` maps the pages the chunk's K/V lands in, from the
+        cursor's page on (whole-page scatter re-writes the frontier page's
+        earlier tokens with the very content just gathered, so a COW source
+        is copied private on the first chunk for free)."""
+        req = step.req
+        pt, p_max = geom.page_tokens, geom.max_pages_per_slot
+        n_pad = self._bucket_len(step.n_tokens, geom.depth)
+        if step.start + n_pad > geom.depth:
+            # slot-depth edge: exact length, or the traced-start cache
+            # write would clamp backwards over earlier chunks (rare tail
+            # variant; never hit while prompt + chunk fit the depth)
+            n_pad = step.n_tokens
+        tokens = np.full((n_pad,), self.ecfg.pad_token, np.int32)
+        tokens[:step.n_tokens] = np.asarray(req.prompt, np.int32)[
+            step.start:step.start + step.n_tokens]
+        f_r = -(-step.start // pt)              # pages covering [0, start)
+        read = np.zeros((p_max,), np.int32)
+        read[:f_r] = req.pages[:f_r]
+        if step.start == req.prefix_len and req.cow_src >= 0:
+            read[step.start // pt] = req.cow_src
+        f_w = step.start // pt                  # cursor's (frontier) page
+        end_pages = geom.pages_for(step.start + step.n_tokens)
+        write = np.zeros((p_max,), np.int32)
+        write[f_w:end_pages] = req.pages[f_w:end_pages]
+        key = (geom.depth, pt, n_pad, step.final)
+        if key not in self._chunk_prefill_fns:
+            self._chunk_prefill_fns[key] = self._make_chunk_prefill_fn(
+                geom, n_pad, step.final)
+        return self._chunk_prefill_fns[key](
+            self.params, tokens[None], jnp.asarray(step.start, jnp.int32),
+            jnp.asarray(step.n_tokens, jnp.int32),
+            jnp.asarray(req.max_new_tokens, jnp.int32),
+            jnp.asarray(step.slot, jnp.int32), jnp.asarray(read),
+            jnp.asarray(write), pool)
+
+    def _make_dense_chunk_prefill_fn(self, n_tok: int, emit_first: bool):
+        """Dense-pool analog of :meth:`_make_chunk_prefill_fn`: the chunk
+        attends over the slot's own slab (earlier chunks' K/V gathered by
+        :meth:`~repro.models.api.Model.gather_row`) and the whole updated
+        row is scattered back. Same traced cursor, same bucketed jit key."""
+        cfg, ecfg, plans = self.model.cfg, self.ecfg, self.plans
+
+        def run(params, tokens, start, true_n, budget, slot,
+                pool: PoolState):
+            prefix = self.model.gather_row(pool.state, slot)
+            last = (true_n - 1)[None]                   # (1,) gather
+            logits, row = self.model.prefill(
+                params, {"tokens": tokens}, ecfg.max_len, plans=plans,
+                last_pos=last, prefix_len=start, prefix_state=prefix)
+            state = self.model.slot_update(pool.state, row, slot)
+            new_len = start + true_n
+            if not emit_first:
+                return dataclasses.replace(
+                    pool, state=state,
+                    cache_len=pool.cache_len.at[slot].set(new_len),
+                    done=pool.done.at[slot].set(True),
+                ), jnp.zeros((), jnp.int32)
+            first = jnp.argmax(logits[0, -1, :cfg.vocab_size])
+            first = first.astype(jnp.int32)
+            done0 = ((first == ecfg.eos_token) | (budget <= 1)
+                     | (new_len >= ecfg.max_len))
+            return dataclasses.replace(
+                pool, state=state,
+                tok=pool.tok.at[slot].set(first),
+                cache_len=pool.cache_len.at[slot].set(new_len),
+                done=pool.done.at[slot].set(done0),
+                n_gen=pool.n_gen.at[slot].set(1),
+                budget=pool.budget.at[slot].set(budget)), first
+
+        return jax.jit(run)
+
+    def _exec_dense_chunk(self, pool: PoolState, step: sched_mod.PrefillStep
+                          ) -> Tuple[PoolState, jax.Array]:
+        req = step.req
+        n_pad = self._bucket_len(step.n_tokens, self.ecfg.max_len)
+        if step.start + n_pad > self.ecfg.max_len:
+            n_pad = step.n_tokens           # slab edge: exact tail length
+        tokens = np.full((n_pad,), self.ecfg.pad_token, np.int32)
+        tokens[:step.n_tokens] = np.asarray(req.prompt, np.int32)[
+            step.start:step.start + step.n_tokens]
+        key = (n_pad, step.final)
+        if key not in self._dense_chunk_prefill_fns:
+            self._dense_chunk_prefill_fns[key] = \
+                self._make_dense_chunk_prefill_fn(n_pad, step.final)
+        return self._dense_chunk_prefill_fns[key](
+            self.params, tokens[None], jnp.asarray(step.start, jnp.int32),
+            jnp.asarray(step.n_tokens, jnp.int32),
+            jnp.asarray(req.max_new_tokens, jnp.int32),
+            jnp.asarray(step.slot, jnp.int32), pool)
+
     def _tier_copy_fn(self):
         """ONE jitted layer-0 <-> layer-1 copy, shared by spill and restore
         (jit's shape-keyed cache traces each direction independently).
@@ -527,6 +716,17 @@ class Engine:
             self._pad_pages(act.src_pages, p_max),
             self._pad_pages(req.pages[:len(act.src_pages)], p_max))
         slot = act.slot
+        if req.status == sched_mod.PREFILLING:
+            # restored mid-chunked-prefill: no output token exists yet, so
+            # only the KV frontier is re-armed; done is FORCED True (the
+            # slot may have been freed by a mid-decode preemption, leaving
+            # done=False on device) so the slot stays masked until its
+            # final chunk lands, and the cursor resumes at the NEXT
+            # boundary's prefill phase (plan order contract)
+            return dataclasses.replace(
+                pool, state={**pool.state, "caches": caches},
+                cache_len=pool.cache_len.at[slot].set(req.cache_len),
+                done=pool.done.at[slot].set(True))
         return dataclasses.replace(
             pool, state={**pool.state, "caches": caches},
             tok=pool.tok.at[slot].set(int(req.tokens[-1])),
@@ -550,13 +750,20 @@ class Engine:
             raise ValueError(
                 "prefix sharing requires attention-only models: recurrent "
                 "SSM state is per-sequence, not per-page (docs/SERVING.md)")
+        if sch.chunk_prefill_tokens is not None and self._has_ssm():
+            raise ValueError(
+                "chunked prefill requires attention-only models: recurrent "
+                "SSM state has no resumable KV prefix (docs/SERVING.md)")
         self.last_stats = {"host_syncs": 0, "decode_steps": 0, "chunks": 0}
         pool, spill = self.init_paged_pool(sch)
         pending_first: List[Tuple[sched_mod.Request, jax.Array]] = []
+        boundary_wall: List[float] = []
+        boundary_tokens: List[int] = []
         step_clock = 0
         n = self.ecfg.sync_interval
         p_max = geom.max_pages_per_slot
         while sch.has_work():
+            t0 = time.perf_counter()
             plan = sch.plan_boundary(chunk_tokens=n,
                                      max_len=self.ecfg.max_len)
             for req in plan.rejects:
@@ -564,41 +771,69 @@ class Engine:
             # spills FIRST: they read layer-0 pages that restores/admits may
             # reuse later this boundary (functional arrays keep this exact)
             for act in plan.spills:
-                spill = self._exec_spill(pool, spill, act, p_max)
+                spill = self._timed("insert", self._exec_spill,
+                                    pool, spill, act, p_max)
             for act in plan.restores:
-                pool = self._exec_restore(pool, spill, act, p_max)
+                pool = self._timed("insert", self._exec_restore,
+                                   pool, spill, act, p_max)
             for slot, req in plan.admits:
                 req.admit_step = step_clock
+                if req.prefill_pos >= 0:
+                    continue    # chunked admission: runs via prefill_steps
                 if req.prefix_len:      # prefix-index hit: suffix-only prefill
-                    pool, first = self._shared_paged_admit(pool, slot, req,
-                                                           geom)
+                    pool, first = self._timed(
+                        "prefill", self._shared_paged_admit,
+                        pool, slot, req, geom)
                 else:
-                    pool, first = self._paged_admit(pool, slot, req, geom)
+                    pool, first = self._timed("prefill", self._paged_admit,
+                                              pool, slot, req, geom)
                 req.status = sched_mod.DECODING
+                req.first_step = step_clock
                 pending_first.append((req, first))
+            # chunk prefills AFTER every copy, in plan order (scheduler's
+            # ordering contract); a final chunk arms its slot like an admit
+            for step in plan.prefill_steps:
+                pool, first = self._timed("prefill", self._exec_prefill_chunk,
+                                          pool, step, geom)
+                if step.final:
+                    step.req.status = sched_mod.DECODING
+                    step.req.first_step = step_clock
+                    pending_first.append((step.req, first))
             # the boundary's page moves, as one host->device upload
             pool = dataclasses.replace(
                 pool, block_tables=jnp.asarray(sch.block_table()))
-            pool, toks, valid = self._pool_chunk(n)(self.params, pool)
+            pool, toks, valid = self._timed("generate", self._pool_chunk(n),
+                                            self.params, pool)
             step_clock += n
             self.last_stats["decode_steps"] += n
             self.last_stats["chunks"] += 1
             # ---- drain boundary: the single host sync of this iteration
-            toks_h, valid_h, done_h, firsts = self._fetch(
+            toks_h, valid_h, done_h, firsts = self._timed(
+                "drain", self._fetch,
                 (toks, valid, pool.done, [f for _, f in pending_first]))
+            emitted = len(firsts)
             for (req, _), f in zip(pending_first, firsts):
                 req.tokens.append(int(f))
             pending_first.clear()
             for slot in sorted(sch.active):
                 req = sch.active[slot]
+                before = len(req.tokens)
                 req.tokens.extend(
                     int(t) for t, v in zip(toks_h[:, slot], valid_h[:, slot])
                     if v)
-                if done_h[slot]:
+                emitted += len(req.tokens) - before
+                # a mid-prefill slot's device done flag is still the free
+                # marker from before its admission — only DECODING slots
+                # can drain
+                if done_h[slot] and req.status != sched_mod.PREFILLING:
                     req.finish_step = step_clock
                     sch.complete(slot)
+            boundary_wall.append(time.perf_counter() - t0)
+            boundary_tokens.append(emitted)
             if max_steps is not None and step_clock >= max_steps:
                 break
+        self.last_stats["boundary_wall_s"] = boundary_wall
+        self.last_stats["boundary_tokens"] = boundary_tokens
         stats = dict(self.last_stats)
         stats.update(sch.stats())
         return ServeReport(requests=(sch.drained + list(sch.active.values())
@@ -623,11 +858,19 @@ class Engine:
             sch.submit_request(req)
         if sch.pages is not None:        # paged two-tier pool
             return self._serve_paged(sch, max_steps)
+        chunked = sch.chunk_prefill_tokens is not None
+        if chunked and self._has_ssm():
+            raise ValueError(
+                "chunked prefill requires attention-only models: recurrent "
+                "SSM state has no resumable KV prefix (docs/SERVING.md)")
         self.last_stats = {"host_syncs": 0, "decode_steps": 0, "chunks": 0}
         pool = self.init_pool(sch.n_slots)
         pending_first: List[Tuple[sched_mod.Request, jax.Array]] = []
+        boundary_wall: List[float] = []
+        boundary_tokens: List[int] = []
         step_clock = 0
         while sch.has_work():
+            t0 = time.perf_counter()
             for slot, req in sch.admit():
                 req.admit_step = step_clock
                 if req.prompt_len > self.ecfg.max_len:
@@ -636,31 +879,54 @@ class Engine:
                     req.finish_step = step_clock
                     sch.complete(slot, status=sched_mod.REJECTED)
                     continue
-                pool, first = self.admit_into_slot(
+                if chunked:
+                    continue    # prefills by chunks via plan_prefill below
+                pool, first = self._timed(
+                    "prefill", self.admit_into_slot,
                     pool, slot, req.prompt, req.max_new_tokens)
                 req.status = sched_mod.DECODING
+                req.first_step = step_clock
                 pending_first.append((req, first))
+            if chunked:
+                for step in sch.plan_prefill():
+                    pool, first = self._timed(
+                        "prefill", self._exec_dense_chunk, pool, step)
+                    if step.final:
+                        step.req.status = sched_mod.DECODING
+                        step.req.first_step = step_clock
+                        pending_first.append((step.req, first))
             n = self.ecfg.sync_interval
-            pool, toks, valid = self._pool_chunk(n)(self.params, pool)
+            pool, toks, valid = self._timed("generate", self._pool_chunk(n),
+                                            self.params, pool)
             step_clock += n
             self.last_stats["decode_steps"] += n
             self.last_stats["chunks"] += 1
             # ---- drain boundary: the single host sync of this iteration
-            toks_h, valid_h, done_h, firsts = self._fetch(
+            toks_h, valid_h, done_h, firsts = self._timed(
+                "drain", self._fetch,
                 (toks, valid, pool.done, [f for _, f in pending_first]))
+            emitted = len(firsts)
             for (req, _), f in zip(pending_first, firsts):
                 req.tokens.append(int(f))
             pending_first.clear()
             for slot in sorted(sch.active):
                 req = sch.active[slot]
+                before = len(req.tokens)
                 req.tokens.extend(
                     int(t) for t, v in zip(toks_h[:, slot], valid_h[:, slot])
                     if v)
-                if done_h[slot]:
+                emitted += len(req.tokens) - before
+                # mid-prefill slots keep their stale free-marker done flag;
+                # only DECODING slots can drain
+                if done_h[slot] and req.status != sched_mod.PREFILLING:
                     req.finish_step = step_clock
                     sch.complete(slot)
+            boundary_wall.append(time.perf_counter() - t0)
+            boundary_tokens.append(emitted)
             if max_steps is not None and step_clock >= max_steps:
                 break
+        self.last_stats["boundary_wall_s"] = boundary_wall
+        self.last_stats["boundary_tokens"] = boundary_tokens
         stats = dict(self.last_stats)
         stats.update(sch.stats())
         return ServeReport(requests=sch.drained + list(sch.active.values()),

@@ -75,7 +75,13 @@ class Request:
     # lifecycle clocks, in decode steps of the serve loop (latency accounting)
     submit_step: int = 0
     admit_step: int = -1
+    first_step: int = -1                # first output token produced
     finish_step: int = -1
+    # chunked prefill (DESIGN.md §Chunked prefill): how many prompt tokens
+    # (including any shared prefix) have KV cached so far. -1 = unchunked
+    # admission, which prefills the whole prompt in one boundary. The cursor
+    # survives preemption: a restored request resumes its next chunk here.
+    prefill_pos: int = -1
     # paged mode: physical pages mapped to this request (layer 0 / layer 1)
     pages: List[int] = dataclasses.field(default_factory=list)
     spill_pages: List[int] = dataclasses.field(default_factory=list)
@@ -97,7 +103,11 @@ class Request:
     def cache_len(self) -> int:
         """Host-side mirror of the device ``cache_len``: the filled KV
         prefix. The last emitted token's K/V is written by the NEXT decode
-        step, so the frontier is one behind the emitted count."""
+        step, so the frontier is one behind the emitted count. Mid-chunked-
+        prefill (no tokens yet, cursor short of the prompt) the frontier is
+        the cursor itself."""
+        if not self.tokens and 0 <= self.prefill_pos < self.prompt_len:
+            return self.prefill_pos
         return self.prompt_len + max(len(self.tokens) - 1, 0)
 
 
@@ -181,6 +191,35 @@ def derive_n_slots(cfg: ModelConfig, max_len: int, *,
         resident_bytes_per_slot(cfg))
     n = part.budget_bytes // max(per_slot, 1)
     return int(max(1, min(n, max_slots)))
+
+
+def derive_prefill_chunk(cfg: ModelConfig, *,
+                         target: Optional[HardwareTarget] = None,
+                         fraction: float = 0.25, max_chunk: int = 512,
+                         cache_dtype_bytes: int = 2) -> int:
+    """Per-boundary prefill-token budget (DESIGN.md §Chunked prefill).
+
+    Priced through the SAME :class:`CapacityPartition` formula that prices
+    tiles, slots, and pages — here over the compute tier (the scratchpad
+    level): one prefill token streams its KV write row plus one activation
+    row, double-buffered like a kernel tile (``n_buffers=2``: the next
+    chunk stages while the current one computes). The budget is the
+    largest power of two whose streamed bytes fit ``fraction`` of the
+    level, so derived chunk lengths land exactly on the engine's bucketed
+    jit variants (O(log) compiled shapes).
+    """
+    target = target or get_target()
+    level = target.hierarchy.level(target.scratchpad_level)
+    assert level.capacity_bytes is not None, level.name
+    part = CapacityPartition(
+        capacity_bytes=level.capacity_bytes, fraction=fraction, n_buffers=2,
+        db_margin=0.0, align=target.tile_align, word_bytes=target.word_bytes)
+    per_tok = (kv_bytes_per_token(cfg, cache_dtype_bytes)
+               + target.word_bytes * cfg.d_model)
+    n = 1
+    while n * 2 <= max_chunk and part.fits(per_tok * n * 2):
+        n *= 2
+    return n
 
 
 # ---------------------------------------------------------------------------
@@ -449,6 +488,22 @@ class PrefixIndex:
 
 
 @dataclasses.dataclass
+class PrefillStep:
+    """One chunk of a request's prompt to prefill this boundary
+    (DESIGN.md §Chunked prefill): tokens ``[start, start + n_tokens)`` of
+    ``req.prompt``, written into the request's own pages (dense mode: its
+    slot slab). ``final`` marks the chunk that reaches the end of the
+    prompt — it emits the request's first output token and arms the slot
+    for decode, exactly like an unchunked admission."""
+
+    slot: int
+    req: Request
+    start: int
+    n_tokens: int
+    final: bool
+
+
+@dataclasses.dataclass
 class SpillAction:
     """One preemption: copy ``src_pages`` (layer 0) to ``dst_pages``
     (layer 1) and, for models with resident SSM state, slot row -> seat."""
@@ -483,6 +538,10 @@ class PagePlan:
     restores: List[RestoreAction] = dataclasses.field(default_factory=list)
     admits: List[Tuple[int, Request]] = dataclasses.field(default_factory=list)
     rejects: List[Request] = dataclasses.field(default_factory=list)
+    # chunked prefill only: executed AFTER spills/restores/admit bookkeeping,
+    # in list order (residents resume oldest-first before fresh admissions,
+    # so a canonical prefix finishes before a same-boundary matcher reads it)
+    prefill_steps: List[PrefillStep] = dataclasses.field(default_factory=list)
 
 
 def percentile(xs: Sequence[float], q: float) -> float:
@@ -598,12 +657,22 @@ class Scheduler:
 
     def __init__(self, n_slots: int, policy: str = "fcfs",
                  pages: Optional[PageGeometry] = None,
-                 prefix_share: bool = False):
+                 prefix_share: bool = False,
+                 chunk_prefill_tokens: Optional[int] = None):
         if policy not in self.POLICIES:
             raise ValueError(f"unknown policy {policy!r}; have {self.POLICIES}")
         if prefix_share and pages is None:
             raise ValueError("prefix_share requires the paged pool (pages=)")
+        if chunk_prefill_tokens is not None and chunk_prefill_tokens < 1:
+            raise ValueError(f"chunk_prefill_tokens must be >= 1, got "
+                             f"{chunk_prefill_tokens}")
         self.n_slots = n_slots
+        #: per-boundary prefill-token budget; None -> whole-prompt admission
+        self.chunk_prefill_tokens = chunk_prefill_tokens
+        self.prefill_chunks = 0
+        #: prefill tokens each boundary actually planned (admission stall
+        #: evidence: unchunked mode books a whole prompt in one entry)
+        self.boundary_prefill_tokens: List[int] = []
         self.policy = policy
         self.table = SlotTable(n_slots)
         self.queue: Deque[Request] = collections.deque()
@@ -644,9 +713,14 @@ class Scheduler:
                   layer1_fraction: Optional[float] = None,
                   layer0_bytes: Optional[int] = None,
                   layer1_bytes: Optional[int] = None,
-                  prefix_share: bool = False) -> "Scheduler":
+                  prefix_share: bool = False,
+                  chunk_prefill_tokens: Optional[int] = None) -> "Scheduler":
         """Size the slot table (and, when ``paged``, the two-tier page
-        pools) from the target's CapacityPartition budget."""
+        pools) from the target's CapacityPartition budget.
+
+        ``chunk_prefill_tokens=0`` derives the per-boundary prefill budget
+        from the same target via :func:`derive_prefill_chunk`; a positive
+        value pins it; None keeps whole-prompt admission."""
         pages = None
         if paged:
             pages = derive_page_geometry(
@@ -654,10 +728,13 @@ class Scheduler:
                 layer1_fraction=layer1_fraction, page_tokens=page_tokens,
                 max_slots=max_slots, layer0_bytes=layer0_bytes,
                 layer1_bytes=layer1_bytes)
+        if chunk_prefill_tokens == 0:
+            chunk_prefill_tokens = derive_prefill_chunk(cfg, target=target)
         return cls(derive_n_slots(cfg, max_len, target=target,
                                   fraction=fraction, max_slots=max_slots,
                                   pages=pages),
-                   policy=policy, pages=pages, prefix_share=prefix_share)
+                   policy=policy, pages=pages, prefix_share=prefix_share,
+                   chunk_prefill_tokens=chunk_prefill_tokens)
 
     # ------------------------------------------------------------- queue
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
@@ -705,7 +782,40 @@ class Scheduler:
             self.admit_order.append(req.rid)
             self._active_order.append(slot)
             placed.append((slot, req))
+        if self.chunk_prefill_tokens is None:
+            self.boundary_prefill_tokens.append(
+                sum(r.prompt_len for _, r in placed))
         return placed
+
+    def plan_prefill(self) -> List[PrefillStep]:
+        """Dense-mode chunked prefill: spend the per-boundary token budget
+        on in-prefill residents, oldest admission first (paged mode plans
+        its steps inside :meth:`plan_boundary` instead). Call after
+        :meth:`admit` each boundary; a freshly admitted request enters
+        in-prefill (``prefill_pos=0``) and takes its first chunk from
+        whatever budget remains."""
+        budget = self.chunk_prefill_tokens
+        assert budget is not None, "plan_prefill needs chunk_prefill_tokens"
+        steps: List[PrefillStep] = []
+        left = budget
+        for slot in list(self._active_order):
+            if left <= 0:
+                break
+            req = self.active[slot]
+            if req.prefill_pos < 0 and req.status == PREFILLING:
+                req.prefill_pos = 0               # fresh dense admission
+            if not 0 <= req.prefill_pos < req.prompt_len:
+                continue
+            n = min(left, req.prompt_len - req.prefill_pos)
+            final = req.prefill_pos + n == req.prompt_len
+            steps.append(PrefillStep(slot=slot, req=req,
+                                     start=req.prefill_pos, n_tokens=n,
+                                     final=final))
+            req.prefill_pos += n
+            left -= n
+            self.prefill_chunks += 1
+        self.boundary_prefill_tokens.append(budget - left)
+        return steps
 
     def complete(self, slot: int, status: str = DRAINED) -> Request:
         """Mark the slot's request drained (or rejected) and free the slot
@@ -796,19 +906,32 @@ class Scheduler:
            pick). Admission never preempts; only growth of already-resident
            sequences does.
 
+        With ``chunk_prefill_tokens`` set (DESIGN.md §Chunked prefill), a
+        phase runs between growth and restores/admissions: the per-boundary
+        prefill-token budget is spent on in-prefill residents oldest-first
+        (:meth:`_plan_prefill_chunk` — page growth with the same
+        youngest-first preemption), and fresh admissions reserve pages for
+        their FIRST chunk only, taking it from whatever budget remains.
+        Prefix-index registration is deferred to the final chunk.
+
         Ordering contract with the engine (DESIGN.md §Paged two-tier pool):
         spills are planned before restores/admissions so their device
         copies read layer-0 pages before anything reuses them; restored
         spill pages are freed only after this boundary's spills allocated
-        theirs, keeping read and write page ids disjoint.
+        theirs, keeping read and write page ids disjoint. Prefill chunks
+        execute after all copies, in plan order.
         """
         assert self.pages is not None, "plan_boundary is paged-mode only"
         geom = self.pages
         plan = PagePlan()
+        budget = self.chunk_prefill_tokens
+        left = budget if budget is not None else 0
         for slot in list(self._active_order):
             if slot not in self.active:
                 continue                 # preempted earlier this boundary
             req = self.active[slot]
+            if 0 <= req.prefill_pos < req.prompt_len:
+                continue                 # mid-prefill: grown by its chunk
             target_tokens = min(req.cache_len + chunk_tokens, max_len)
             while True:
                 need = geom.pages_for(target_tokens) - len(req.pages)
@@ -827,6 +950,22 @@ class Scheduler:
                 # an older sequence; its restore reallocates the full need
                 plan.spills.append(self._preempt(slot))
                 break
+        # ---- resume in-prefill residents (oldest first) under the budget;
+        # planned BEFORE restores/admissions so any preemption their page
+        # growth forces still precedes every layer-1 free of this boundary
+        # (the id-disjointness contract), and so a canonical prefix always
+        # finishes before a same-boundary matcher's suffix chunk reads it.
+        if budget is not None:
+            for slot in list(self._active_order):
+                if left <= 0:
+                    break
+                if slot not in self.active:
+                    continue
+                req = self.active[slot]
+                if not 0 <= req.prefill_pos < req.prompt_len:
+                    continue
+                left = self._plan_prefill_chunk(plan, slot, req, left,
+                                                chunk_tokens, max_len)
         while self.queue and self.table.free_slots():
             idx = self._admissible_index()
             req = self.queue[idx]
@@ -841,7 +980,12 @@ class Scheduler:
                 slot = self.table.allocate(req.rid)
                 src, seat = req.spill_pages, req.spill_seat
                 req.pages, req.spill_pages, req.spill_seat = got, [], -1
-                req.status = DECODING
+                # a request preempted mid-chunked-prefill resumes its
+                # cursor at the NEXT boundary (this one's chunk budget was
+                # committed before the restore was planned)
+                req.status = (PREFILLING
+                              if 0 <= req.prefill_pos < req.prompt_len
+                              else DECODING)
                 self.active[slot] = req
                 self.admit_order.append(req.rid)
                 self._active_order.append(slot)
@@ -859,8 +1003,18 @@ class Scheduler:
                 self.drained.append(req)
                 plan.rejects.append(req)
                 continue
+            if budget is not None and left <= 0:
+                break                     # no budget to start its first chunk
             shared, prefix_len, cow_src = self._match_prefix(req)
-            need = geom.pages_for(min(req.prompt_len + chunk_tokens, max_len))
+            if budget is not None:
+                first_end = prefix_len + min(left,
+                                             req.prompt_len - prefix_len)
+                cover = (min(first_end + chunk_tokens, max_len)
+                         if first_end == req.prompt_len else first_end)
+                need = geom.pages_for(cover)
+            else:
+                need = geom.pages_for(
+                    min(req.prompt_len + chunk_tokens, max_len))
             got = self.page_pool.alloc(need - len(shared))
             if got is None:
                 break
@@ -878,13 +1032,65 @@ class Scheduler:
                     self.cow_copies += cow_src >= 0
                 else:
                     self.prefix_misses += 1
-                self.prefix_index.register(req.prompt, req.pages)
+                if budget is None:
+                    self.prefix_index.register(req.prompt, req.pages)
             req.status = PREFILLING
             self.active[slot] = req
             self.admit_order.append(req.rid)
             self._active_order.append(slot)
             plan.admits.append((slot, req))
+            if budget is not None:
+                # first chunk rides this boundary's remaining budget; the
+                # pages above already cover it, so this never preempts
+                req.prefill_pos = prefix_len
+                left = self._plan_prefill_chunk(plan, slot, req, left,
+                                                chunk_tokens, max_len)
+        if budget is not None:
+            self.boundary_prefill_tokens.append(budget - left)
+        else:
+            self.boundary_prefill_tokens.append(sum(
+                r.prompt_len - r.prefix_len for _, r in plan.admits))
         return plan
+
+    def _plan_prefill_chunk(self, plan: PagePlan, slot: int, req: Request,
+                            left: int, chunk_tokens: int,
+                            max_len: int) -> int:
+        """Plan one prompt chunk for an in-prefill resident: grow its pages
+        to cover the chunk (a final chunk also covers the next decode
+        chunk), preempting youngest-first exactly like decode growth, then
+        append the :class:`PrefillStep` and advance the cursor. Returns
+        the remaining token budget. A resident that had to spill ITSELF
+        (it was the youngest) consumes no budget; its cursor survives the
+        preemption and resumes a boundary after its restore."""
+        geom = self.pages
+        n = min(left, req.prompt_len - req.prefill_pos)
+        end = req.prefill_pos + n
+        final = end == req.prompt_len
+        cover = min(end + chunk_tokens, max_len) if final else end
+        while True:
+            need = geom.pages_for(cover) - len(req.pages)
+            if need <= 0:
+                break
+            got = self.page_pool.alloc(need)
+            if got is not None:
+                req.pages.extend(got)
+                break
+            if self._active_order[-1] != slot:
+                plan.spills.append(self._preempt(self._active_order[-1]))
+                continue
+            plan.spills.append(self._preempt(slot))
+            return left
+        plan.prefill_steps.append(PrefillStep(
+            slot=slot, req=req, start=req.prefill_pos, n_tokens=n,
+            final=final))
+        req.prefill_pos = end
+        self.prefill_chunks += 1
+        if final and self.prefix_index is not None:
+            # deferred from admission: a chunked request's pages hold real
+            # content only once the last chunk lands — registering earlier
+            # could hand a concurrent admission pages still being filled
+            self.prefix_index.register(req.prompt, req.pages)
+        return left - n
 
     def _match_prefix(self, req: Request) -> Tuple[List[int], int, int]:
         """Prefix-index lookup for a fresh admission.
@@ -936,13 +1142,25 @@ class Scheduler:
             "slot_allocations": list(allocs),
             "max_slot_reuse": max(allocs) if allocs else 0,
             # per-request latency, in decode-step clock units: time to first
-            # token (admission wait) and end-to-end (submit -> drain)
+            # token (admission wait) and end-to-end (submit -> drain).
+            # ttft_emit_steps counts to the FIRST OUTPUT TOKEN — under
+            # chunked prefill that is the final chunk's boundary, later
+            # than the admission the slot-wait ttft_steps measures.
             "ttft_steps": [r.admit_step - r.submit_step for r in done],
+            "ttft_emit_steps": [
+                (r.first_step if r.first_step >= 0 else r.admit_step)
+                - r.submit_step for r in done],
             "e2e_steps": [r.finish_step - r.submit_step for r in done
                           if r.finish_step >= 0],
             "preemptions": self.preemptions,
             "spilled_pages": self.spilled_pages,
             "restores": self.restores,
+            # chunked prefill (DESIGN.md §Chunked prefill)
+            "chunk_prefill_tokens": self.chunk_prefill_tokens,
+            "prefill_chunks": self.prefill_chunks,
+            "max_boundary_prefill_tokens": (
+                max(self.boundary_prefill_tokens)
+                if self.boundary_prefill_tokens else 0),
         }
         if self.pages is not None:
             geom = self.pages

@@ -1,0 +1,215 @@
+"""Chunked prefill (DESIGN.md §Chunked prefill): bit-identity with
+one-shot admission across attention families, budget/cursor invariants,
+composition with preemption and copy-on-write, bounded jit compile cache,
+and rejection of recurrent-state families."""
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.serve import scheduler as sm
+from repro.serve.engine import Engine, EngineConfig
+
+TINY = ModelConfig(
+    name="tiny-chunk", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=128,
+)
+TINY_WINDOW = dataclasses.replace(TINY, name="tiny-chunk-win", n_layers=3,
+                                  window=8, local_global_ratio=2)
+TINY_MLA = dataclasses.replace(TINY, name="tiny-chunk-mla", n_kv_heads=4,
+                               use_mla=True, kv_lora_rank=16,
+                               qk_nope_head_dim=16, qk_rope_head_dim=8,
+                               v_head_dim=16)
+TINY_HYBRID = dataclasses.replace(TINY, name="tiny-chunk-hyb",
+                                  family="hybrid", n_layers=4, ssm_d_state=8,
+                                  ssm_conv=4, attn_period=2, attn_offset=1)
+MAX_LEN = 64
+PT = 8
+
+
+def _geometry(cfg, n_layer0=40, n_layer1=64):
+    pb = sm.kv_bytes_per_token(cfg) * PT
+    return sm.PageGeometry(page_tokens=PT, n_pages=n_layer0 + 1,
+                           n_spill_pages=n_layer1 + 1,
+                           max_pages_per_slot=-(-MAX_LEN // PT),
+                           page_bytes=pb)
+
+
+def _mixed_stream(n=6, system_len=16, vocab=128, seed=7):
+    """Shared-prefix shorts plus one long prompt spanning many chunks."""
+    rng = np.random.RandomState(seed)
+    system = rng.randint(2, vocab, size=system_len).astype(np.int32)
+    out = []
+    for _ in range(n):
+        tail = rng.randint(2, vocab,
+                           size=int(rng.randint(2, 9))).astype(np.int32)
+        out.append((np.concatenate([system, tail]), int(rng.randint(2, 7))))
+    out.append((rng.randint(2, vocab, size=48).astype(np.int32), 5))
+    return out
+
+
+@pytest.fixture(scope="module")
+def engines():
+    cache = {}
+
+    def get(cfg):
+        if cfg.name not in cache:
+            model = build_model(cfg)
+            cache[cfg.name] = Engine(
+                model, model.init(jax.random.PRNGKey(0)),
+                EngineConfig(max_len=MAX_LEN, sync_interval=4))
+        return cache[cfg.name]
+
+    return get
+
+
+def _serve(engine, reqs, *, chunk, share=False, paged=True, n_layer0=40):
+    geom = _geometry(engine.model.cfg, n_layer0) if paged else None
+    sch = sm.Scheduler(3, pages=geom, prefix_share=share,
+                       chunk_prefill_tokens=chunk)
+    for p, g in reqs:
+        sch.submit(p, g)
+    with jax.transfer_guard_device_to_host("disallow"):
+        rep = engine.serve(scheduler=sch)
+    return {r.rid: r.tokens for r in rep.requests}, rep.stats, sch
+
+
+# ------------------------------------------------------------ bit-identity
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_WINDOW, TINY_MLA],
+                         ids=lambda c: c.name)
+@pytest.mark.parametrize("share", [False, True], ids=["plain", "share"])
+def test_chunked_matches_one_shot_paged(engines, cfg, share):
+    """Chunked admission must be bit-identical to whole-prompt admission
+    for every attention family, with sharing on or off, and keep the
+    one-host-sync-per-boundary contract (enforced by the transfer guard
+    around the serve loop)."""
+    eng = engines(cfg)
+    reqs = _mixed_stream()
+    base, _, _ = _serve(eng, reqs, chunk=None, share=False)
+    out, st, _ = _serve(eng, reqs, chunk=6, share=share)
+    assert out == base
+    assert st["prefill_chunks"] > len(reqs)   # the long prompt split
+    assert st["host_syncs"] == st["chunks"]
+
+
+def test_chunked_matches_one_shot_dense(engines):
+    eng = engines(TINY)
+    reqs = _mixed_stream(seed=11)
+    base, _, _ = _serve(eng, reqs, chunk=None, paged=False)
+    out, st, _ = _serve(eng, reqs, chunk=6, paged=False)
+    assert out == base
+    assert st["prefill_chunks"] > len(reqs)
+    assert st["host_syncs"] == st["chunks"]
+
+
+def test_chunked_survives_preemption_and_cow(engines):
+    """A tight layer-0 pool forces mid-prefill preemption (the cursor must
+    survive spill/restore) and identical page-aligned prompts force
+    copy-on-write admissions — outputs must still match the roomy-pool
+    one-shot run."""
+    eng = engines(TINY)
+    rng = np.random.RandomState(13)
+    p24 = rng.randint(2, 128, size=24).astype(np.int32)
+    reqs = [(p24.copy(), 16), (p24.copy(), 16), (p24.copy(), 16),
+            (rng.randint(2, 128, size=44).astype(np.int32), 12),
+            (p24.copy(), 10)]
+    base, _, _ = _serve(eng, reqs, chunk=None, share=False, n_layer0=24)
+    hit_preempt = hit_cow = False
+    for share in (False, True):
+        out, st, _ = _serve(eng, reqs, chunk=5, share=share, n_layer0=9)
+        assert out == base, share
+        hit_preempt |= st["preemptions"] > 0
+        hit_cow |= st.get("cow_copies", 0) > 0
+    assert hit_preempt, "tight pool never preempted a mid-prefill request"
+    assert hit_cow, "identical prompts never took the COW path"
+
+
+# --------------------------------------------------- scheduler invariants
+
+def test_boundary_budget_caps_prefill_and_decode_interleaves(engines):
+    """The deterministic stall regression: with chunking, no boundary
+    prefills more than the budget (one-shot admission puts the whole long
+    prompt into a single boundary), and decode tokens keep flowing at
+    boundaries that also carry prefill chunks."""
+    eng = engines(TINY)
+    reqs = _mixed_stream(seed=5)
+    _, st_one, sch_one = _serve(eng, reqs, chunk=None)
+    _, st_chunk, sch_chunk = _serve(eng, reqs, chunk=8)
+    assert st_one["max_boundary_prefill_tokens"] >= 48   # the admission stall
+    assert 0 < st_chunk["max_boundary_prefill_tokens"] <= 8
+    emitted = eng.last_stats["boundary_tokens"]
+    prefilled = sch_chunk.boundary_prefill_tokens
+    assert len(emitted) == len(prefilled)
+    overlap = [t for p, t in zip(prefilled, emitted) if p > 0 and t > 0]
+    assert overlap, "no boundary interleaved prefill chunks with decode"
+
+
+def test_dense_plan_prefill_budget_sharing():
+    """Oldest-first budget split: a boundary's budget flows to the oldest
+    in-prefill request first; the remainder starts the next one."""
+    sch = sm.Scheduler(2, chunk_prefill_tokens=4)
+    sch.submit(np.arange(2, 12, dtype=np.int32), 4)     # 10 tokens
+    sch.submit(np.arange(2, 5, dtype=np.int32), 4)      # 3 tokens
+    assert len(sch.admit()) == 2
+    got = []
+    for _ in range(5):
+        got.extend((s.req.rid, s.start, s.n_tokens, s.final)
+                   for s in sch.plan_prefill())
+    # request 0 consumes whole boundaries until its final 2-token chunk
+    # leaves budget for request 1 to start within the same boundary
+    assert got == [(0, 0, 4, False), (0, 4, 4, False),
+                   (0, 8, 2, True), (1, 0, 2, False), (1, 2, 1, True)]
+    assert sch.active[0].prefill_pos == 10
+    assert sch.active[1].prefill_pos == 3
+
+
+def test_derive_prefill_chunk_power_of_two():
+    chunk = sm.derive_prefill_chunk(TINY)
+    assert chunk >= 1 and chunk & (chunk - 1) == 0
+    assert chunk <= 512
+    assert sm.derive_prefill_chunk(TINY, max_chunk=64) <= 64
+
+
+# ------------------------------------------------------- jit cache bounds
+
+def test_compile_cache_stays_logarithmic(engines):
+    """Chunk lengths are bucketed to powers of two, so the jitted
+    chunk-prefill variants stay O(log max_len) x {final, non-final} even
+    after serving many distinct prompt lengths."""
+    eng = engines(TINY)
+    rng = np.random.RandomState(3)
+    reqs = [(rng.randint(2, 128, size=n).astype(np.int32), 3)
+            for n in (3, 5, 9, 13, 17, 23, 31, 41, 47)]
+    _serve(eng, reqs, chunk=16)
+    _serve(eng, reqs, chunk=16, paged=False)
+    bound = 2 * (int(math.log2(MAX_LEN)) + 1)
+    assert 0 < len(eng._chunk_prefill_fns) <= bound
+    assert 0 < len(eng._dense_chunk_prefill_fns) <= bound
+    for (_, _, n_pad, _) in eng._chunk_prefill_fns:
+        assert n_pad & (n_pad - 1) == 0 or n_pad == MAX_LEN
+    for (n_pad, _) in eng._dense_chunk_prefill_fns:
+        assert n_pad & (n_pad - 1) == 0 or n_pad == MAX_LEN
+
+
+# ------------------------------------------------------------- family gate
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_recurrent_families_rejected(paged):
+    """SSM/hybrid models have no resumable KV prefix: chunked serving must
+    refuse loudly instead of silently corrupting recurrent state."""
+    model = build_model(TINY_HYBRID)
+    eng = Engine(model, model.init(jax.random.PRNGKey(0)),
+                 EngineConfig(max_len=MAX_LEN, sync_interval=4))
+    geom = _geometry(TINY_HYBRID) if paged else None
+    sch = sm.Scheduler(2, pages=geom, chunk_prefill_tokens=4)
+    sch.submit(np.arange(2, 10, dtype=np.int32), 3)
+    with pytest.raises(ValueError, match="chunked prefill requires"
+                                         " attention-only"):
+        eng.serve(scheduler=sch)

@@ -1,0 +1,93 @@
+"""Cross-PR benchmark diff: compare the flat metric files
+``BENCH_<n>.json`` that ``benchmarks/serve_bench.py --emit-bench`` writes
+at the repo root.
+
+Each file carries a ``metrics`` dict of plain numbers keyed
+``<run>.<metric>`` (plus top-level ratios). This tool diffs the two most
+recent files by ``bench_id`` — the current PR's against the previous
+PR's — and prints per-key deltas. It is informational by design: CI runs
+it on every push, and the FIRST PR to emit a bench file has nothing to
+diff against, so a missing counterpart exits 0 with a note instead of
+failing the build.
+
+    python tools/diff_bench.py [old.json new.json]
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+import sys
+from typing import Dict, List, Optional, Tuple
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_BENCH_RE = re.compile(r"BENCH_(\d+)\.json$")
+
+
+def find_bench_files(root: str = _ROOT) -> List[Tuple[int, str]]:
+    """All root-level bench files as (bench_id, path), oldest first."""
+    out = []
+    for path in glob.glob(os.path.join(root, "BENCH_*.json")):
+        m = _BENCH_RE.search(os.path.basename(path))
+        if m:
+            out.append((int(m.group(1)), path))
+    return sorted(out)
+
+
+def load_metrics(path: str) -> Dict[str, float]:
+    with open(path, encoding="utf-8") as f:
+        payload = json.load(f)
+    metrics = payload.get("metrics", {})
+    return {k: v for k, v in metrics.items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)}
+
+
+def diff(old: Dict[str, float], new: Dict[str, float]) -> List[str]:
+    lines = []
+    for key in sorted(set(old) | set(new)):
+        if key not in old:
+            lines.append(f"  + {key:44s} {new[key]:>12.4g}  (new metric)")
+        elif key not in new:
+            lines.append(f"  - {key:44s} {old[key]:>12.4g}  (dropped)")
+        else:
+            o, n = old[key], new[key]
+            rel = f"{(n - o) / o:+.1%}" if o else "   n/a"
+            lines.append(f"    {key:44s} {o:>12.4g} -> {n:>12.4g}  {rel}")
+    return lines
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    if len(args) == 2:
+        old_path, new_path = args
+        if not os.path.exists(old_path):
+            print(f"diff_bench: no previous bench file at {old_path} — "
+                  "nothing to diff (first bench of this sequence)")
+            return 0
+    elif args:
+        print(__doc__)
+        return 2
+    else:
+        found = find_bench_files()
+        if not found:
+            print("diff_bench: no BENCH_*.json at the repo root — "
+                  "nothing to diff")
+            return 0
+        if len(found) == 1:
+            bench_id, path = found[0]
+            print(f"diff_bench: only BENCH_{bench_id}.json exists — "
+                  "nothing to diff against (first bench of this sequence)")
+            return 0
+        (_, old_path), (_, new_path) = found[-2], found[-1]
+    old, new = load_metrics(old_path), load_metrics(new_path)
+    print(f"bench diff: {os.path.basename(old_path)} -> "
+          f"{os.path.basename(new_path)} ({len(new)} metrics)")
+    for line in diff(old, new):
+        print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
