@@ -5,11 +5,13 @@ Target selection by name is the registry contract (DESIGN.md
 §HardwareTarget); the serve benchmark's ``--paged`` / tier-budget flags are
 the contract for the dense-vs-paged capacity comparison (DESIGN.md §Paged
 two-tier pool), and its ``--chunked-prefill`` family is the contract for
-the admission-stall head-to-head (DESIGN.md §Chunked prefill). The stream
-driver ``repro.launch.serve`` is checked too: it must expose
-``--chunk-prefill-tokens`` so the serving knob documented in
-docs/SERVING.md stays wired. Runs each script's ``--help`` in-process and
-greps the usage text.
+the admission-stall head-to-head (DESIGN.md §Chunked prefill), and its
+``--speculate`` family is the contract for the speculative-decoding
+head-to-head (DESIGN.md §Speculative decoding). The stream driver
+``repro.launch.serve`` is checked too: it must expose
+``--chunk-prefill-tokens`` and ``--speculate-tokens`` so the serving
+knobs documented in docs/SERVING.md stay wired. Runs each script's
+``--help`` in-process and greps the usage text.
 
     PYTHONPATH=src python -m benchmarks.check_cli
 """
@@ -34,14 +36,16 @@ EXTRA_FLAGS = {
                        "--chunked-prefill", "--chunk-prefill-tokens",
                        "--long-prompt-len", "--sync-interval",
                        "--require-flat-p99", "--flat-p99-tol", "--repeats",
-                       "--emit-bench"),
+                       "--speculate", "--speculate-tokens",
+                       "--require-speculate-win", "--emit-bench"),
 }
 
 #: non-benchmark CLI entry points checked for specific flags only (no
 #: --target requirement): (path relative to repo root, required flags)
 EXTRA_CLIS = (
     (os.path.join("src", "repro", "launch", "serve.py"),
-     ("--chunk-prefill-tokens", "--paged", "--prefix-share")),
+     ("--chunk-prefill-tokens", "--paged", "--prefix-share",
+      "--speculate-tokens")),
 )
 
 

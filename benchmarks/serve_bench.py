@@ -22,6 +22,18 @@ Engine in up to four modes:
     percentiles, physical vs *mapped* pages (the concurrent-residency
     win), plus a bit-identical output check between the two runs.
 
+A third head-to-head, ``--speculate``, measures self-drafting speculative
+decoding (DESIGN.md §Speculative decoding): the repetitive (motif-tiled)
+stream runs through the paged pool twice in the SAME layer-0 byte budget,
+speculation off vs on. The decode win is reported as **tokens per decode
+forward**: on the modeled memory-bound target every decode forward
+streams the slot pool's entire resident KV through layer 0, so tokens per
+full-pool sweep IS decode throughput — host wall-clock on the CPU test
+backend is FLOP-bound (a width-(k+1) verify costs ~k× a single-token
+step there) and is reported honestly alongside, not gated on.
+``--require-speculate-win`` gates on >=1.5x tokens-per-forward and
+bit-identical outputs vs the non-speculative run.
+
 A separate head-to-head, ``--chunked-prefill``, measures the admission
 stall chunked prefill exists to kill (DESIGN.md §Chunked prefill). Three
 runs over the same short-request stream: **baseline** (no long prompt),
@@ -38,7 +50,7 @@ A phase-timed pass adds the prefill/insert/generate/drain breakdown.
 Every record carries pool bytes and pages-in-use next to throughput, so the
 dense-vs-paged comparison shows capacity, not just speed. Emits
 ``benchmarks/artifacts/serve_bench.json``; ``--emit-bench`` additionally
-writes the flat cross-PR metric file ``BENCH_6.json`` at the repo root
+writes the flat cross-PR metric file ``BENCH_7.json`` at the repo root
 (diffed by ``tools/diff_bench.py``).
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--target NAME] [--paged]
@@ -46,7 +58,8 @@ writes the flat cross-PR metric file ``BENCH_6.json`` at the repo root
         [--require-spill] [--prefix-share] [--system-len N]
         [--require-share-win] [--chunked-prefill] [--long-prompt-len N]
         [--chunk-prefill-tokens N] [--sync-interval N] [--require-flat-p99]
-        [--flat-p99-tol F] [--emit-bench] [...]
+        [--flat-p99-tol F] [--speculate] [--speculate-tokens K]
+        [--require-speculate-win] [--emit-bench] [...]
 """
 
 from __future__ import annotations
@@ -59,7 +72,7 @@ from typing import Dict, List, Optional
 from benchmarks.common import add_target_arg, fmt_table, save_artifact, \
     target_scope
 
-BENCH_ID = 6
+BENCH_ID = 7
 
 
 def _emit_bench_json(meta: Dict, metrics: Dict) -> str:
@@ -538,6 +551,154 @@ def run_chunked(target_name=None, arch: str = "qwen2.5-3b",
     return "\n".join(lines)
 
 
+def run_speculate(target_name=None, arch: str = "qwen2.5-3b",
+                  n_requests: int = 24, prompt_len: int = 48,
+                  gen_len: int = 32, n_slots: int = None, seed: int = 0,
+                  page_tokens: int = 8,
+                  layer0_bytes: Optional[int] = None,
+                  layer1_bytes: Optional[int] = None, max_slots: int = 32,
+                  speculate_tokens: int = 0,
+                  sync_interval: Optional[int] = None,
+                  require_speculate_win: bool = False,
+                  emit_bench: bool = False) -> str:
+    """Speculative-decoding head-to-head: the repetitive stream through
+    the paged pool in the SAME layer-0 byte budget, speculation off vs on.
+
+    The gated metric is decode **tokens per forward**: each decode forward
+    sweeps the pool's entire resident KV through layer 0 — the dominant
+    cost on the modeled memory-bound target — so emitted tokens per sweep
+    IS decode throughput there. Host wall tok/s is reported alongside but
+    NOT gated: the CPU test backend is FLOP-bound, where a width-(k+1)
+    verify forward genuinely costs ~k× a single-token step.
+    """
+    import jax
+    from repro.configs import get_reduced
+    from repro.core.target import get_target
+    from repro.models import build_model
+    from repro.serve.engine import Engine, EngineConfig
+    from repro.serve.scheduler import (Scheduler, derive_n_slots,
+                                       derive_page_geometry,
+                                       derive_speculate_tokens,
+                                       kv_bytes_per_token, percentile,
+                                       repetitive_stream)
+
+    with target_scope(target_name):
+        target = get_target()
+        cfg = get_reduced(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        k = speculate_tokens or derive_speculate_tokens(cfg) or 4
+        stream = repetitive_stream(n_requests, prompt_len, gen_len,
+                                   cfg.vocab_size, seed)
+        max_len = prompt_len + gen_len
+        n_slots = n_slots or derive_n_slots(cfg, max_len, max_slots=8)
+        dense_bytes = n_slots * kv_bytes_per_token(cfg) * max_len
+        geom = derive_page_geometry(
+            cfg, max_len, page_tokens=page_tokens, max_slots=max_slots,
+            layer0_bytes=(layer0_bytes if layer0_bytes is not None
+                          else dense_bytes),
+            layer1_bytes=layer1_bytes)
+        slots = derive_n_slots(cfg, max_len, pages=geom,
+                               max_slots=max_slots)
+        engine = Engine(model, params,
+                        EngineConfig(max_len=max_len,
+                                     sync_interval=sync_interval or 4,
+                                     speculate_tokens=k))
+
+        def one(spec_k: int) -> Dict:
+            engine.ecfg.speculate_tokens = spec_k
+            sch = Scheduler(n_slots=slots, pages=geom)
+            for spec in stream:
+                sch.submit(spec["prompt"], spec["max_new_tokens"])
+            t0 = time.monotonic()
+            rep = engine.serve(scheduler=sch)
+            dt = time.monotonic() - t0
+            st = rep.stats
+            n_tokens = sum(len(r.tokens) for r in rep.requests)
+            rec = {
+                "mode": "speculate" if spec_k else "baseline",
+                "speculate_tokens": spec_k,
+                "wall_s": dt,
+                "n_tokens": n_tokens,
+                "tok_per_s": n_tokens / dt if dt else 0.0,
+                "decode_steps": st["decode_steps"],
+                "host_syncs": st["host_syncs"],
+                "completed": st["drained"],
+                "n_slots": slots,
+                "pool_bytes": st["pool_bytes"],
+                "preemptions": st["preemptions"],
+                # the gated metric: emitted tokens per full-pool KV sweep
+                "tok_per_forward": (n_tokens / st["decode_steps"]
+                                    if st["decode_steps"] else 0.0),
+                "ttft_steps_p50": percentile(st["ttft_steps"], 50),
+                "ttft_steps_p95": percentile(st["ttft_steps"], 95),
+                "outputs": {r.rid: list(r.tokens) for r in rep.requests},
+            }
+            if spec_k:
+                rec.update({key: st[key] for key in (
+                    "spec_proposed", "spec_accepted", "spec_rejected",
+                    "spec_acceptance_rate")})
+            return rec
+
+        for s in (0, k):        # warmup: compile both variants' chunks
+            one(s)
+        off, on = one(0), one(k)
+
+    outputs = (off.pop("outputs"), on.pop("outputs"))
+    identical = outputs[0] == outputs[1]
+    ratio = (on["tok_per_forward"] / off["tok_per_forward"]
+             if off["tok_per_forward"] else 0.0)
+    artifact = {
+        "arch": cfg.name, "target": target.name, "n_requests": n_requests,
+        "prompt_len": prompt_len, "gen_len": gen_len,
+        "speculate_tokens": k, "layer0_bytes": off["pool_bytes"],
+        "baseline": off, "speculate": on,
+        "tok_per_forward_ratio": ratio,
+        "speculate_outputs_bit_identical": identical,
+    }
+    save_artifact("serve_speculate.json", artifact)
+    lines = [
+        f"speculative decoding (k={k}, {on['pool_bytes']} layer-0 bytes, "
+        f"acceptance {on['spec_acceptance_rate']:.2f}: "
+        f"{on['spec_accepted']}/{on['spec_proposed']} drafts): "
+        f"{on['tok_per_forward']:.2f} vs {off['tok_per_forward']:.2f} "
+        f"decode tokens/forward ({ratio:.2f}x), wall "
+        f"{on['tok_per_s']:.1f} vs {off['tok_per_s']:.1f} tok/s, outputs "
+        f"{'bit-identical' if identical else 'DIFFER'}"]
+    if emit_bench:
+        metrics = {"tok_per_forward_ratio": ratio,
+                   "acceptance_rate": on["spec_acceptance_rate"]}
+        for r in (off, on):
+            metrics.update({f"{r['mode']}.{key}": v
+                            for key, v in r.items()})
+        path = _emit_bench_json(
+            {"mode": "speculate", "arch": cfg.name, "target": target.name,
+             "n_requests": n_requests, "speculate_tokens": k}, metrics)
+        lines.append(f"bench metrics -> {path}")
+    if not identical:
+        raise SystemExit(
+            "serve_bench --speculate: speculative outputs differ from the "
+            "non-speculative run — greedy speculation must be bit-exact")
+    if require_speculate_win and ratio < 1.5:
+        raise SystemExit(
+            "serve_bench --require-speculate-win: expected >=1.5x decode "
+            f"tokens-per-forward with speculation on; got {ratio:.2f}x "
+            f"(acceptance {on['spec_acceptance_rate']:.2f}) — lengthen the "
+            "stream's repetition or raise --speculate-tokens")
+    rows = [[r["mode"], f"{r['tok_per_forward']:.2f}",
+             f"{r['tok_per_s']:.1f}", r["n_tokens"], r["decode_steps"],
+             r["host_syncs"],
+             f"{r['ttft_steps_p50']:.0f}/{r['ttft_steps_p95']:.0f}",
+             f"{r.get('spec_acceptance_rate', 0.0):.2f}",
+             f"{r['wall_s']*1e3:.0f} ms"] for r in (off, on)]
+    table = fmt_table(
+        ["mode", "tok/fwd", "tok/s", "tokens", "forwards", "syncs",
+         "ttft p50/95", "accept", "wall"],
+        rows, title=f"Speculative decode bench — {cfg.name}, "
+                    f"{n_requests} requests, k={k} ({target.name})")
+    return "\n".join([table] + lines)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen2.5-3b")
@@ -596,11 +757,35 @@ def main(argv=None) -> int:
     ap.add_argument("--repeats", type=int, default=3,
                     help="measured passes per run in --chunked-prefill "
                          "mode; the median-p99 pass is reported")
+    ap.add_argument("--speculate", action="store_true",
+                    help="run the speculative-decoding head-to-head "
+                         "instead of the mode comparison: the repetitive "
+                         "stream through the paged pool, speculation off "
+                         "vs on in the same layer-0 bytes")
+    ap.add_argument("--speculate-tokens", type=int, default=0, metavar="K",
+                    help="draft tokens per slot per boundary for "
+                         "--speculate (0: derive from the target's "
+                         "CapacityPartition)")
+    ap.add_argument("--require-speculate-win", action="store_true",
+                    help="fail unless speculation shows >=1.5x decode "
+                         "tokens-per-forward with bit-identical outputs")
     ap.add_argument("--emit-bench", action="store_true",
                     help="write the flat cross-PR metric file "
                          "BENCH_%d.json at the repo root" % BENCH_ID)
     add_target_arg(ap)
     args = ap.parse_args(argv)
+    if args.speculate:
+        print(run_speculate(
+            args.target, args.arch, args.requests,
+            args.prompt_len, args.gen_len,
+            args.slots, args.seed, page_tokens=args.page_tokens,
+            layer0_bytes=args.layer0_bytes,
+            layer1_bytes=args.layer1_bytes, max_slots=args.max_slots,
+            speculate_tokens=args.speculate_tokens,
+            sync_interval=args.sync_interval,
+            require_speculate_win=args.require_speculate_win,
+            emit_bench=args.emit_bench))
+        return 0
     if args.chunked_prefill:
         print(run_chunked(
             args.target, args.arch, args.requests, args.prompt_len,

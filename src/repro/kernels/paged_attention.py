@@ -228,9 +228,18 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     bit-identical to the dense slot-slab path, which serving relies on for
     paged == dense equivalence (tolerances only enter with the Pallas
     kernel's online softmax, validated in tests/test_kernels.py).
+
+    ``q`` may carry more than one query position per slot: the speculative
+    verify chunk (DESIGN.md §Speculative decoding) scores k+1 candidate
+    tokens at positions ``cache_len + j`` in one forward. The Pallas page
+    walk is single-token, so ``impl="auto"`` routes multi-position queries
+    through the gather + oracle path (whose masks already handle
+    ``qpos = cache_len + arange(s)``); an explicit ``impl="pallas"`` still
+    asserts.
     """
     on_tpu = jax.default_backend() == "tpu"
-    use_pallas = (impl == "pallas") or (impl == "auto" and on_tpu)
+    single = q.shape[2] == 1
+    use_pallas = (impl == "pallas") or (impl == "auto" and on_tpu and single)
     if use_pallas and causal:
         return paged_flash_decode(q, k_pages, v_pages, block_tables,
                                   cache_len, window=window,

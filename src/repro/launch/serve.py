@@ -24,6 +24,15 @@ Two modes through the same Engine (pooled KV cache):
     requests; ``0`` derives the budget from the target
     (``derive_prefill_chunk``). Chunk counters (chunks, max boundary
     prefill tokens) join the report (DESIGN.md §Chunked prefill).
+  * ``--speculate-tokens K`` (any stream mode) — self-drafting speculative
+    decoding: each drain boundary proposes up to K draft tokens per live
+    slot by prompt lookup and scores them all in ONE batched verify
+    forward, emitting the accepted prefix + 1 (greedy bit-exact); ``0``
+    derives K from the target (``derive_speculate_tokens``). Without
+    ``--prefix-share`` the stream becomes the repetitive (motif-tiled)
+    workload the proposer is built for; proposed/accepted/rejected and
+    acceptance-rate counters join the report (DESIGN.md §Speculative
+    decoding).
 
 Hardware target selection: ``--target <name>`` (or ``REPRO_TARGET``) — the
 slot/page budgets are derived from that target's CapacityPartition
@@ -48,8 +57,10 @@ from repro.models import build_model
 from repro.serve.engine import Engine, EngineConfig
 from repro.serve.scheduler import (DRAINED, Scheduler, derive_n_slots,
                                    derive_page_geometry,
-                                   derive_prefill_chunk, percentile,
-                                   shared_prefix_stream, synthetic_stream)
+                                   derive_prefill_chunk,
+                                   derive_speculate_tokens, percentile,
+                                   repetitive_stream, shared_prefix_stream,
+                                   synthetic_stream)
 
 
 def run_stream(engine: Engine, scheduler: Scheduler, stream: list) -> dict:
@@ -95,6 +106,10 @@ def run_stream(engine: Engine, scheduler: Scheduler, stream: list) -> dict:
         "prefill_chunks": stats["prefill_chunks"],
         "max_boundary_prefill_tokens": stats["max_boundary_prefill_tokens"],
     }
+    if stats.get("speculate_tokens"):
+        rec.update({k: stats[k] for k in (
+            "speculate_tokens", "spec_proposed", "spec_accepted",
+            "spec_rejected", "spec_acceptance_rate")})
     if stats.get("paged"):
         rec.update({k: stats[k] for k in (
             "page_tokens", "n_pages", "n_spill_pages", "pages_high_water",
@@ -141,7 +156,16 @@ def main(argv=None) -> int:
                          "per drain boundary, interleaved with decode "
                          "(0: derive N from the target's CapacityPartition; "
                          "default: whole-prompt admission)")
+    ap.add_argument("--speculate-tokens", type=int, default=None,
+                    metavar="K",
+                    help="self-drafting speculative decoding: propose up to "
+                         "K draft tokens per slot per drain boundary and "
+                         "verify them in one batched forward "
+                         "(0: derive K from the target's CapacityPartition; "
+                         "default: off)")
     args = ap.parse_args(argv)
+    if args.speculate_tokens is not None and not args.stream:
+        ap.error("--speculate-tokens applies to --stream serving")
     if args.paged and not args.stream:
         ap.error("--paged applies to --stream serving")
     if args.prefix_share and not args.paged:
@@ -160,9 +184,13 @@ def main(argv=None) -> int:
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
         max_len = args.prompt_len + args.gen_len + cfg.frontend_len
+        spec_k = args.speculate_tokens
+        if spec_k == 0:
+            spec_k = derive_speculate_tokens(cfg)
         engine = Engine(model, params,
                         EngineConfig(max_len=max_len,
-                                     sync_interval=args.sync_interval))
+                                     sync_interval=args.sync_interval,
+                                     speculate_tokens=spec_k or 0))
 
         if args.stream:
             pages = None
@@ -188,6 +216,11 @@ def main(argv=None) -> int:
                 stream = shared_prefix_stream(
                     args.stream, system_len, args.prompt_len - system_len,
                     args.gen_len, cfg.vocab_size)
+            elif spec_k:
+                # the motif-tiled workload the prompt-lookup proposer is
+                # built for — what serve_bench --speculate measures
+                stream = repetitive_stream(args.stream, args.prompt_len,
+                                           args.gen_len, cfg.vocab_size)
             else:
                 stream = synthetic_stream(args.stream, args.prompt_len,
                                           args.gen_len, cfg.vocab_size)
@@ -215,6 +248,14 @@ def main(argv=None) -> int:
                       f"ttft-to-first-token p50/p95 "
                       f"{rec['ttft_emit_steps_p50']:.0f}/"
                       f"{rec['ttft_emit_steps_p95']:.0f}")
+            if spec_k:
+                print(f"speculative decoding: k={rec['speculate_tokens']}, "
+                      f"{rec['spec_proposed']} proposed -> "
+                      f"{rec['spec_accepted']} accepted / "
+                      f"{rec['spec_rejected']} rejected "
+                      f"(acceptance {rec['spec_acceptance_rate']:.2f}); "
+                      f"{rec['n_tokens']} tokens over "
+                      f"{rec['decode_steps_total']} verify forwards")
             if args.paged:
                 print(f"pages: {rec['pages_high_water']}/{rec['n_pages']} "
                       f"layer-0 high water ({rec['pool_bytes']} B), "

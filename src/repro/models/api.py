@@ -187,6 +187,45 @@ class Model:
                                                  block_tables=block_tables)
         return logits, {**state, "caches": caches}
 
+    def verify_step(self, params, tokens: jax.Array, state: Dict[str, Any],
+                    cache_len: jax.Array, *,
+                    plans: Optional[KernelPlans] = None,
+                    block_tables: Optional[jax.Array] = None):
+        """Score k draft tokens per slot in ONE batched forward — the
+        verify half of speculative decoding (DESIGN.md §Speculative
+        decoding).
+
+        ``tokens`` is ``(B, k+1)``: each slot's last emitted token followed
+        by its k proposed drafts. ``cache_len`` is the per-slot ``(B,)``
+        frontier vector. Returns ``(logits (B, k+1, Vpad), state)`` where
+        logits column ``j`` is what single-token :meth:`decode_step` would
+        produce after feeding ``tokens[:, :j+1]`` — greedy acceptance over
+        these columns is bit-exact with the one-token-per-step path by
+        construction. All k+1 K/V rows are written at ``cache_len + j``
+        (dense slab or paged pool via ``block_tables``); the engine rolls
+        back rejected suffixes by NOT advancing ``cache_len`` past the
+        accepted prefix. Attention-only decoder families: recurrent SSM
+        state integrates every token it sees and cannot roll back a
+        rejected suffix.
+        """
+        cfg = self.cfg
+        if cfg.family == "encdec" or cfg.frontend_len:
+            raise NotImplementedError(
+                "speculative verify targets decoder-only token-prompt "
+                "models; others go through one-shot generate()")
+        for group in cfg.layer_groups():
+            for kind in group.pattern:
+                if kind.attn == "mamba":
+                    raise ValueError(
+                        "speculative decoding requires attention-only "
+                        "models: recurrent SSM state cannot roll back "
+                        "rejected draft tokens (docs/SERVING.md)")
+        logits, caches = transformer.verify_step(cfg, params, tokens,
+                                                 state["caches"], cache_len,
+                                                 plans=plans,
+                                                 block_tables=block_tables)
+        return logits, {**state, "caches": caches}
+
     def slot_update(self, pool_state: Dict[str, Any],
                     row_state: Dict[str, Any], slot: jax.Array
                     ) -> Dict[str, Any]:

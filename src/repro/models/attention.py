@@ -53,15 +53,27 @@ def _cache_write(cache_arr: jax.Array, new: jax.Array, cache_len,
     ``cache_len`` may be a scalar (every row at the same offset — one-shot
     generate) or a per-row vector ``(B,)`` (continuous batching: each KV
     slot has its own filled length). The vector case broadcasts against the
-    batch axis (axis 0 of every cache array).
+    batch axis (axis 0 of every cache array) and also accepts multi-token
+    ``new`` — the speculative verify chunk appends k+1 candidate rows at
+    ``cache_len + j`` per slot (DESIGN.md §Speculative decoding); rejected
+    rows stay behind the rolled-back frontier, masked like any stale K/V.
     """
     new = new.astype(cache_arr.dtype)
-    if isinstance(cache_len, jax.Array) and new.shape[axis] == 1:
+    s = new.shape[axis]
+    if isinstance(cache_len, jax.Array) and (s == 1 or cache_len.ndim == 1):
         iota = jax.lax.broadcasted_iota(jnp.int32, cache_arr.shape, axis)
         if cache_len.ndim == 1:      # per-slot lengths: (B,) over batch axis 0
             cache_len = cache_len.reshape(
                 (-1,) + (1,) * (cache_arr.ndim - 1))
-        return jnp.where(iota == cache_len, new, cache_arr)
+        if s == 1:
+            return jnp.where(iota == cache_len, new, cache_arr)
+        # multi-token per-slot append: position cache_len + j takes row j of
+        # ``new`` — a masked gather-select, so each slot writes at its own
+        # offset without a (replicating) per-row DUS
+        idx = jnp.clip(iota - cache_len, 0, s - 1)
+        gathered = jnp.take_along_axis(new, idx, axis=axis)
+        return jnp.where((iota >= cache_len) & (iota < cache_len + s),
+                         gathered, cache_arr)
     return jax.lax.dynamic_update_slice_in_dim(cache_arr, new,
                                                cache_len, axis)
 
@@ -69,32 +81,40 @@ def _cache_write(cache_arr: jax.Array, new: jax.Array, cache_len,
 def _paged_cache_write(pages: jax.Array, new: jax.Array,
                        cache_len: jax.Array, block_tables: jax.Array,
                        axis: int) -> jax.Array:
-    """Block-table-aware single-token append into the paged pool.
+    """Block-table-aware token append into the paged pool.
 
     ``pages`` is ``(n_pages, *page_shape)`` with the token axis at ``axis``
-    inside a page (GQA: 1, MLA: 0); ``new`` is the dense single-token write
-    ``(B, ..., 1, ...)``. Each row's ``cache_len`` resolves to
-    ``(physical page, in-page offset)`` through its block-table row. Rows
-    whose frontier is at or past the mapped depth (a drained slot's frozen
-    decode) are routed to the reserved null page 0 — the paged analogue of
-    the dense iota-select writing nowhere.
+    inside a page (GQA: 1, MLA: 0); ``new`` is the dense write
+    ``(B, ..., s, ...)`` — ``s == 1`` for ordinary decode, ``s == k+1`` for
+    a speculative verify chunk. Each row's token ``j`` resolves
+    ``cache_len + j -> (physical page, in-page offset)`` through its
+    block-table row, so a verify chunk's writes cross page boundaries
+    correctly. Rows whose frontier is at or past the mapped depth (a
+    drained slot's frozen decode) are routed to the reserved null page 0 —
+    the paged analogue of the dense iota-select writing nowhere.
 
-    With prefix sharing, the page this write resolves to is private to the
-    row BY SCHEDULER INVARIANT: shared (ref-counted) pages sit strictly
+    With prefix sharing, the pages these writes resolve to are private to
+    the row BY SCHEDULER INVARIANT: shared (ref-counted) pages sit strictly
     behind the frontier and the copy-on-write rule gives every request its
     own frontier page at admission (DESIGN.md §Prefix sharing &
     copy-on-write) — so no guard is needed here.
     """
     pt = pages.shape[1 + axis]
     p_max = block_tables.shape[1]
-    logical = jnp.minimum(cache_len // pt, p_max - 1)
-    phys = jnp.take_along_axis(block_tables, logical[:, None], axis=1)[:, 0]
-    phys = jnp.where(cache_len < p_max * pt, phys, 0)
-    off = cache_len % pt
+    s = new.shape[1 + axis]
     new = new.astype(pages.dtype)
-    if axis == 0:
-        return pages.at[phys, off].set(new[:, 0])
-    return pages.at[phys, :, off].set(new[:, :, 0])
+    for j in range(s):
+        pos = cache_len + j
+        logical = jnp.minimum(pos // pt, p_max - 1)
+        phys = jnp.take_along_axis(block_tables, logical[:, None],
+                                   axis=1)[:, 0]
+        phys = jnp.where(pos < p_max * pt, phys, 0)
+        off = pos % pt
+        if axis == 0:
+            pages = pages.at[phys, off].set(new[:, j])
+        else:
+            pages = pages.at[phys, :, off].set(new[:, :, j])
+    return pages
 
 
 # ---------------------------------------------------------------------- GQA
@@ -147,8 +167,8 @@ def gqa_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
     S is the new-token count, cache_len the filled prefix length);
     cross-attention (cross_kv given: precomputed encoder K/V, no cache write).
     With ``block_tables`` the cache is the paged page pool instead of a
-    per-slot slab: single-token decode only, write + attention both walk
-    the table.
+    per-slot slab: write + attention both walk the table (S == 1 for
+    ordinary decode; S == k+1 for a speculative verify chunk).
     """
     b, s, _ = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -209,8 +229,12 @@ def gqa_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
         k = shard(k, BATCH, "model", None, None)
         v = shard(v, BATCH, "model", None, None)
 
-    if cache is not None and isinstance(q_offset, jax.Array) and s == 1:
-        # decode with traced offset: direct masked attention over the cache
+    if cache is not None and isinstance(q_offset, jax.Array) and (
+            s == 1 or q_offset.ndim == 1):
+        # decode with traced offset: direct masked attention over the cache.
+        # s > 1 with per-slot offsets is the speculative verify chunk — the
+        # same oracle scores every candidate with causal-within-chunk masks
+        # at qpos = cache_len + arange(s) (DESIGN.md §Speculative decoding)
         out = _decode_attention(q, k, v, q_offset, window=kind.window,
                                 causal=causal)
     else:
@@ -322,7 +346,8 @@ def mla_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
 
     scale = (nope + rope_d) ** -0.5
 
-    if cache is not None and isinstance(q_offset, jax.Array) and s == 1:
+    if cache is not None and isinstance(q_offset, jax.Array) and (
+            s == 1 or q_offset.ndim == 1):
         # ---- ABSORBED (latent-space) decode: never materialize per-head
         # K/V. q_nope is folded through wkv_b's K half so scores/values are
         # computed directly against the 576-dim latent cache — O(T*(l+r))

@@ -334,3 +334,26 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                                block_tables=block_tables)
     logits = layers.unembed_logits(params["tok"], x)
     return logits, new_caches
+
+
+def verify_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                caches, cache_len: jax.Array,
+                plans: Optional[KernelPlans] = None,
+                block_tables: Optional[jax.Array] = None):
+    """Multi-position decode for speculative verify (DESIGN.md
+    §Speculative decoding).
+
+    ``tokens`` is ``(B, k+1)`` — each slot's last emitted token followed by
+    its k draft tokens — and ``cache_len`` the per-slot ``(B,)`` frontier
+    vector. Column ``j`` runs at RoPE position ``cache_len + j`` with a
+    causal-within-chunk mask over the (dense or paged) cache, and its K/V
+    is appended at ``cache_len + j``; logits column ``j`` therefore scores
+    the token AFTER ``tokens[:, :j+1]`` exactly as ``j`` successive
+    single-token :func:`decode_step` calls would — greedy acceptance is
+    bit-exact by construction. Rejected suffix K/V stays behind the
+    rolled-back frontier: masked like any stale row, overwritten as decode
+    advances. This is :func:`decode_step` at S == k+1; the wrapper exists
+    so the verify contract is named at every layer it threads through.
+    """
+    return decode_step(cfg, params, tokens, caches, cache_len, plans=plans,
+                       block_tables=block_tables)

@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.models.api import Model
 from repro.serve import scheduler as sched_mod
+from repro.serve import speculate as spec_mod
 
 
 @dataclasses.dataclass
@@ -63,6 +64,16 @@ class EngineConfig:
     right-pads slot prompts up to a multiple to bound prefill recompiles;
     it must stay ``None`` (exact-length prefill) for models with recurrent
     SSM layers, whose state would integrate the pad tokens.
+
+    ``speculate_tokens`` (k) turns on self-drafting speculative decoding in
+    the serve loops (DESIGN.md §Speculative decoding): each drain boundary
+    proposes up to k draft tokens per live slot from the slot's own
+    emitted+prompt history and scores them all in ONE width-(k+1) verify
+    forward, emitting accepted-prefix + 1 tokens per slot per boundary.
+    Greedy outputs are bit-exact with ``speculate_tokens=0``. Requires
+    attention-only models (recurrent SSM state cannot roll back rejected
+    draft tokens); size k with
+    :func:`repro.serve.scheduler.derive_speculate_tokens`.
 
     ``phase_timing`` turns on the per-phase wall-clock breakdown
     (prefill / insert / generate / drain) in ``last_stats`` — benchmark
@@ -76,6 +87,7 @@ class EngineConfig:
     sync_interval: int = 8
     pad_token: int = 0
     prompt_pad_multiple: Optional[int] = None
+    speculate_tokens: int = 0
     phase_timing: bool = False
 
 
@@ -121,6 +133,7 @@ class Engine:
         self.plans = model.kernel_plans(ecfg.max_len, ecfg.max_len)
         self._chunk_fns: Dict[int, Any] = {}        # one-shot decode chunks
         self._pool_chunk_fns: Dict[int, Any] = {}   # pooled decode chunks
+        self._verify_fns: Dict[int, Any] = {}       # speculative verify, by k
         self._admit = self._make_admit_fn()
         self._paged_admit_fns: Dict[Any, Any] = {}  # keyed by page geometry
         self._suffix_admit_fns: Dict[Any, Any] = {}  # + static prefix_len
@@ -135,6 +148,11 @@ class Engine:
             raise ValueError(
                 "prompt_pad_multiple requires attention-only models: SSM "
                 "recurrences integrate pad tokens (see EngineConfig)")
+        if ecfg.speculate_tokens and self._has_ssm():
+            raise ValueError(
+                "speculative decoding requires attention-only models: "
+                "recurrent SSM state cannot roll back rejected draft "
+                "tokens (docs/SERVING.md)")
 
     def _has_ssm(self) -> bool:
         return any(kind.attn == "mamba"
@@ -341,6 +359,71 @@ class Engine:
 
             self._pool_chunk_fns[n] = jax.jit(run)
         return self._pool_chunk_fns[n]
+
+    # ------------------------------------------- speculative verify chunk
+    def _verify_fn(self, k: int):
+        """Jitted speculative boundary: ONE width-(k+1) verify forward over
+        ALL slots, folded into the pool's done-masked updates (DESIGN.md
+        §Speculative decoding).
+
+        Each slot's verify row is its last emitted token followed by its k
+        host-proposed drafts, so the forward's argmax column j is exactly
+        what the j-th sequential :meth:`_pool_chunk` step would have
+        produced — :func:`repro.serve.speculate.fold_acceptance` then
+        emits the longest agreeing prefix plus one correction token and
+        rolls ``cache_len`` back over the rejected suffix. Output shape
+        matches :meth:`_pool_chunk`'s ``(steps, S)`` tokens/valid pair
+        (steps = k+1 candidate positions), so the drain loop is unchanged.
+        Done slots emit nothing; their junk K/V writes land in their own
+        slab/pages (or the null page) exactly like the single-token path's
+        frozen decode.
+        """
+        if k not in self._verify_fns:
+            cfg, ecfg, plans = self.model.cfg, self.ecfg, self.plans
+
+            def run(params, pool: PoolState, drafts, dlen):
+                tokens = jnp.concatenate([pool.tok[:, None], drafts], axis=1)
+                logits, state = self.model.verify_step(
+                    params, tokens, pool.state, pool.cache_len, plans=plans,
+                    block_tables=pool.block_tables)
+                targets = jnp.argmax(logits[:, :, :cfg.vocab_size],
+                                     axis=-1).astype(jnp.int32)   # (S, k+1)
+                fold = spec_mod.fold_acceptance(
+                    targets, drafts, dlen, done=pool.done, n_gen=pool.n_gen,
+                    budget=pool.budget, cache_len=pool.cache_len,
+                    max_len=ecfg.max_len, eos_token=ecfg.eos_token)
+                toks = jnp.where(fold.valid, targets, ecfg.eos_token)
+                new = PoolState(state=state, tok=fold.tok,
+                                cache_len=fold.cache_len, done=fold.done,
+                                n_gen=fold.n_gen, budget=pool.budget,
+                                block_tables=pool.block_tables)
+                return new, toks.astype(jnp.int32).T, fold.valid.T
+
+            self._verify_fns[k] = jax.jit(run)
+        return self._verify_fns[k]
+
+    def _build_drafts(self, sch: sched_mod.Scheduler, k: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-side draft proposal for every live slot (drain boundary).
+
+        Proposes from the slot's host-mirrored prompt+emitted context via
+        :func:`repro.serve.speculate.propose_ngram`. Slots without a
+        proposable context — free, mid-chunked-prefill, or admitted this
+        very boundary (first token still on device in ``pending_first``) —
+        get ``dlen = 0``, which the fold degrades to an ordinary
+        single-token step.
+        """
+        drafts = np.zeros((sch.n_slots, k), np.int32)
+        dlen = np.zeros((sch.n_slots,), np.int32)
+        for slot, req in sch.active.items():
+            if req.status != sched_mod.DECODING or not req.tokens:
+                continue
+            ctx = np.concatenate([np.asarray(req.prompt, np.int32),
+                                  np.asarray(req.tokens, np.int32)])
+            d = spec_mod.propose_ngram(ctx, k)
+            drafts[slot, :d.shape[0]] = d
+            dlen[slot] = d.shape[0]
+        return drafts, dlen
 
     # ------------------------------------------------- paged two-tier pool
     def init_paged_pool(self, sch: sched_mod.Scheduler
@@ -755,6 +838,10 @@ class Engine:
                 "chunked prefill requires attention-only models: recurrent "
                 "SSM state has no resumable KV prefix (docs/SERVING.md)")
         self.last_stats = {"host_syncs": 0, "decode_steps": 0, "chunks": 0}
+        spec_k = self.ecfg.speculate_tokens
+        if spec_k:
+            self.last_stats.update(speculate_tokens=spec_k,
+                                   spec_proposed=0, spec_accepted=0)
         pool, spill = self.init_paged_pool(sch)
         pending_first: List[Tuple[sched_mod.Request, jax.Array]] = []
         boundary_wall: List[float] = []
@@ -764,8 +851,11 @@ class Engine:
         p_max = geom.max_pages_per_slot
         while sch.has_work():
             t0 = time.perf_counter()
-            plan = sch.plan_boundary(chunk_tokens=n,
-                                     max_len=self.ecfg.max_len)
+            # a speculative boundary advances a slot by up to k+1 tokens in
+            # its one verify forward, so page growth is planned for k+1
+            plan = sch.plan_boundary(
+                chunk_tokens=(spec_k + 1 if spec_k else n),
+                max_len=self.ecfg.max_len)
             for req in plan.rejects:
                 req.finish_step = step_clock
             # spills FIRST: they read layer-0 pages that restores/admits may
@@ -802,10 +892,21 @@ class Engine:
             # the boundary's page moves, as one host->device upload
             pool = dataclasses.replace(
                 pool, block_tables=jnp.asarray(sch.block_table()))
-            pool, toks, valid = self._timed("generate", self._pool_chunk(n),
-                                            self.params, pool)
-            step_clock += n
-            self.last_stats["decode_steps"] += n
+            if spec_k:
+                # one verify forward replaces the sync_interval-step scan;
+                # the boundary still costs exactly one host sync below
+                drafts, dlen = self._build_drafts(sch, spec_k)
+                pool, toks, valid = self._timed(
+                    "generate", self._verify_fn(spec_k), self.params, pool,
+                    jnp.asarray(drafts), jnp.asarray(dlen))
+                step_clock += 1
+                self.last_stats["decode_steps"] += 1
+                self.last_stats["spec_proposed"] += int(dlen.sum())
+            else:
+                pool, toks, valid = self._timed(
+                    "generate", self._pool_chunk(n), self.params, pool)
+                step_clock += n
+                self.last_stats["decode_steps"] += n
             self.last_stats["chunks"] += 1
             # ---- drain boundary: the single host sync of this iteration
             toks_h, valid_h, done_h, firsts = self._timed(
@@ -821,7 +922,13 @@ class Engine:
                 req.tokens.extend(
                     int(t) for t, v in zip(toks_h[:, slot], valid_h[:, slot])
                     if v)
-                emitted += len(req.tokens) - before
+                got = len(req.tokens) - before
+                emitted += got
+                if spec_k:
+                    # a live slot's boundary emission is accepted drafts + 1
+                    # correction token; just-admitted slots (dlen=0) emit
+                    # exactly 1 and contribute 0 accepted
+                    self.last_stats["spec_accepted"] += max(got - 1, 0)
                 # a mid-prefill slot's device done flag is still the free
                 # marker from before its admission — only DECODING slots
                 # can drain
@@ -834,11 +941,22 @@ class Engine:
                 break
         self.last_stats["boundary_wall_s"] = boundary_wall
         self.last_stats["boundary_tokens"] = boundary_tokens
+        self._finish_spec_stats()
         stats = dict(self.last_stats)
         stats.update(sch.stats())
         return ServeReport(requests=(sch.drained + list(sch.active.values())
                                      + list(sch.queue)),
                            stats=stats)
+
+    def _finish_spec_stats(self) -> None:
+        """Derive the acceptance summary counters once a serve run ends."""
+        if "spec_proposed" not in self.last_stats:
+            return
+        prop = self.last_stats["spec_proposed"]
+        acc = self.last_stats["spec_accepted"]
+        self.last_stats["spec_rejected"] = prop - acc
+        self.last_stats["spec_acceptance_rate"] = (
+            acc / prop if prop else 0.0)
 
     # ------------------------------------------------------------ stream
     def serve(self, requests: Iterable[sched_mod.Request] = (),
@@ -864,6 +982,10 @@ class Engine:
                 "chunked prefill requires attention-only models: recurrent "
                 "SSM state has no resumable KV prefix (docs/SERVING.md)")
         self.last_stats = {"host_syncs": 0, "decode_steps": 0, "chunks": 0}
+        spec_k = self.ecfg.speculate_tokens
+        if spec_k:
+            self.last_stats.update(speculate_tokens=spec_k,
+                                   spec_proposed=0, spec_accepted=0)
         pool = self.init_pool(sch.n_slots)
         pending_first: List[Tuple[sched_mod.Request, jax.Array]] = []
         boundary_wall: List[float] = []
@@ -895,11 +1017,22 @@ class Engine:
                         step.req.status = sched_mod.DECODING
                         step.req.first_step = step_clock
                         pending_first.append((step.req, first))
-            n = self.ecfg.sync_interval
-            pool, toks, valid = self._timed("generate", self._pool_chunk(n),
-                                            self.params, pool)
-            step_clock += n
-            self.last_stats["decode_steps"] += n
+            if spec_k:
+                # one verify forward replaces the sync_interval-step scan;
+                # the boundary still costs exactly one host sync below
+                drafts, dlen = self._build_drafts(sch, spec_k)
+                pool, toks, valid = self._timed(
+                    "generate", self._verify_fn(spec_k), self.params, pool,
+                    jnp.asarray(drafts), jnp.asarray(dlen))
+                step_clock += 1
+                self.last_stats["decode_steps"] += 1
+                self.last_stats["spec_proposed"] += int(dlen.sum())
+            else:
+                n = self.ecfg.sync_interval
+                pool, toks, valid = self._timed(
+                    "generate", self._pool_chunk(n), self.params, pool)
+                step_clock += n
+                self.last_stats["decode_steps"] += n
             self.last_stats["chunks"] += 1
             # ---- drain boundary: the single host sync of this iteration
             toks_h, valid_h, done_h, firsts = self._timed(
@@ -915,7 +1048,13 @@ class Engine:
                 req.tokens.extend(
                     int(t) for t, v in zip(toks_h[:, slot], valid_h[:, slot])
                     if v)
-                emitted += len(req.tokens) - before
+                got = len(req.tokens) - before
+                emitted += got
+                if spec_k:
+                    # a live slot's boundary emission is accepted drafts + 1
+                    # correction token; just-admitted slots (dlen=0) emit
+                    # exactly 1 and contribute 0 accepted
+                    self.last_stats["spec_accepted"] += max(got - 1, 0)
                 # mid-prefill slots keep their stale free-marker done flag;
                 # only DECODING slots can drain
                 if done_h[slot] and req.status != sched_mod.PREFILLING:
@@ -927,6 +1066,7 @@ class Engine:
                 break
         self.last_stats["boundary_wall_s"] = boundary_wall
         self.last_stats["boundary_tokens"] = boundary_tokens
+        self._finish_spec_stats()
         stats = dict(self.last_stats)
         stats.update(sch.stats())
         return ServeReport(requests=sch.drained + list(sch.active.values()),

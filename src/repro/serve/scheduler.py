@@ -222,6 +222,39 @@ def derive_prefill_chunk(cfg: ModelConfig, *,
     return n
 
 
+def derive_speculate_tokens(cfg: ModelConfig, *,
+                            target: Optional[HardwareTarget] = None,
+                            fraction: float = 0.0625, max_tokens: int = 8,
+                            cache_dtype_bytes: int = 2) -> int:
+    """Per-boundary draft budget k (DESIGN.md §Speculative decoding).
+
+    The verify forward is a width-(k+1) decode chunk, so k is priced
+    exactly like :func:`derive_prefill_chunk` — each speculated position
+    streams a KV write row plus an activation row through the compute
+    tier, double-buffered — just against a much smaller ``fraction`` of
+    the scratchpad level: the verify chunk rides alongside decode's
+    full-pool KV sweep instead of owning the boundary the way a prefill
+    chunk does. The budget is the largest power of two that fits, so
+    verify-chunk widths (k+1) land on a handful of compiled shapes; k=0
+    on a target too small to fit even one draft token disables
+    speculation rather than thrashing the scratchpad.
+    """
+    target = target or get_target()
+    level = target.hierarchy.level(target.scratchpad_level)
+    assert level.capacity_bytes is not None, level.name
+    part = CapacityPartition(
+        capacity_bytes=level.capacity_bytes, fraction=fraction, n_buffers=2,
+        db_margin=0.0, align=target.tile_align, word_bytes=target.word_bytes)
+    per_tok = (kv_bytes_per_token(cfg, cache_dtype_bytes)
+               + target.word_bytes * cfg.d_model)
+    if not part.fits(per_tok):
+        return 0
+    n = 1
+    while n * 2 <= max_tokens and part.fits(per_tok * n * 2):
+        n *= 2
+    return n
+
+
 # ---------------------------------------------------------------------------
 # Paged two-tier pool — PageGeometry, tiers, and the page allocator
 # ---------------------------------------------------------------------------
@@ -586,6 +619,29 @@ def shared_prefix_stream(n_requests: int, system_len: int, suffix_len: int,
         tail = rng.randint(2, vocab, size=slen).astype(np.int32)
         out.append({"prompt": np.concatenate([system, tail]),
                     "max_new_tokens": glen})
+    return out
+
+
+def repetitive_stream(n_requests: int, prompt_len: int, gen_len: int,
+                      vocab: int, seed: int = 0,
+                      motif_len: int = 8) -> List[Dict[str, Any]]:
+    """The self-similar workload speculative decoding is built for: each
+    prompt tiles a per-request random ``motif_len``-token motif out to its
+    length, so the n-gram proposer's prompt lookup keeps finding the
+    trailing pattern earlier in the context (templated agent turns, code,
+    looping greedy continuations). Shared by the stream driver and
+    ``serve_bench --speculate`` so the benchmark's acceptance-rate and
+    decode-throughput datapoints measure exactly what ``--stream``
+    drives."""
+    rng = np.random.RandomState(seed)
+    out = []
+    for _ in range(n_requests):
+        plen = int(rng.randint(max(motif_len, prompt_len // 2),
+                               prompt_len + 1))
+        glen = int(rng.randint(max(1, gen_len // 2), gen_len + 1))
+        motif = rng.randint(2, vocab, size=motif_len).astype(np.int32)
+        prompt = np.tile(motif, -(-plen // motif_len))[:plen]
+        out.append({"prompt": prompt, "max_new_tokens": glen})
     return out
 
 

@@ -1,0 +1,131 @@
+"""Self-drafting speculative decoding: proposer + acceptance folding.
+
+Decode is memory-bound — each emitted token streams a slot's ENTIRE
+resident KV through layer 0 (the paged pool reads every mapped page per
+step). Speculative decoding amortizes that sweep: per drain boundary the
+host proposes up to k draft tokens per live slot from the slot's own
+emitted+prompt history (n-gram / prompt lookup — no second model), the
+engine scores all k in ONE batched verify forward
+(:meth:`repro.models.api.Model.verify_step`), and the fold below converts
+per-slot greedy agreement into the engine's existing done-masked pool
+updates. Greedy outputs are bit-exact with the single-token path by
+construction: logits column ``j`` of the verify forward equals what the
+``j``-th sequential decode step would have produced, so every emitted
+token is the argmax given its true prefix (DESIGN.md §Speculative
+decoding).
+
+Host/device split: :func:`propose_ngram` is pure numpy and runs at drain
+boundaries (where the host already owns a sync); :func:`fold_acceptance`
+is pure jnp and runs inside the jitted verify chunk — the
+one-host-sync-per-chunk discipline is untouched.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def propose_ngram(context: np.ndarray, k: int, *, max_ngram: int = 3,
+                  min_ngram: int = 1) -> np.ndarray:
+    """Prompt-lookup draft proposal: continue the most recent repeat.
+
+    Finds the latest earlier occurrence of the context's trailing n-gram
+    (longest ``max_ngram``..``min_ngram`` first) and proposes the up-to-k
+    tokens that followed it. Repetitive/self-similar streams — templated
+    agent turns, code, looping greedy continuations — make this proposer
+    nearly oracle; on non-repeating text it simply finds no match and the
+    boundary degrades to an ordinary single-token step. Proposals are
+    GUESSES only: acceptance is decided by the verify forward, so a bad
+    draft can never corrupt output, only waste the speculated positions.
+    """
+    ctx = np.asarray(context, np.int32)
+    n = int(ctx.shape[0])
+    if k <= 0 or n < min_ngram + 1:
+        return np.zeros((0,), np.int32)
+    for g in range(min(max_ngram, n - 1), min_ngram - 1, -1):
+        tail = ctx[n - g:]
+        windows = np.lib.stride_tricks.sliding_window_view(ctx, g)
+        # candidate starts strictly before the trailing occurrence, so a
+        # continuation of at least one token exists
+        hits = np.nonzero((windows[:n - g] == tail).all(axis=1))[0]
+        if hits.size:
+            # most recent hit whose continuation supplies all k tokens —
+            # on a short-period cycle the very latest hits sit so close to
+            # the end that their continuation is truncated by it, which
+            # would cap every proposal at the cycle period
+            full = hits[hits + g + k <= n]
+            start = int(full[-1] if full.size else hits[-1]) + g
+            return ctx[start:start + k].copy()
+    return np.zeros((0,), np.int32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FoldResult:
+    """On-device result of folding verify targets against drafts."""
+
+    valid: jax.Array       # (S, k+1) bool — token j of this slot is emitted
+    emitted: jax.Array     # (S,) int32 — tokens emitted = accepted + 1
+    tok: jax.Array         # (S,) int32 — new last-emitted token per slot
+    done: jax.Array        # (S,) bool — done mask after the fold
+    n_gen: jax.Array       # (S,) int32
+    cache_len: jax.Array   # (S,) int32 — rolled-back frontier
+
+
+def fold_acceptance(targets: jax.Array, drafts: jax.Array,
+                    draft_len: jax.Array, *, done: jax.Array,
+                    n_gen: jax.Array, budget: jax.Array,
+                    cache_len: jax.Array, max_len: int,
+                    eos_token: int) -> FoldResult:
+    """Fold greedy verify targets into the pool's done-masked updates.
+
+    ``targets[:, j]`` is the argmax after feeding token ``j`` of the verify
+    chunk (slot's last token, then its drafts); ``drafts`` is ``(S, k)``
+    with ``draft_len`` proposed entries per slot. The accepted prefix is
+    the LONGEST exact match of drafts against targets; the slot then emits
+    those accepted drafts plus one correction/bonus token — ``targets`` at
+    the first mismatch — replicating exactly what ``emitted`` sequential
+    single-token steps would have produced, including every stop rule:
+
+      * nothing is emitted past the first rejection,
+      * nothing is emitted past an emitted EOS / exhausted ``budget`` /
+        full ``max_len`` slot (``stop`` below mirrors the single-token
+        loop's done update, applied mid-chunk),
+      * rollback: ``cache_len`` advances by exactly ``emitted`` — i.e. to
+        pre-verify length + accepted + 1 — so the rejected suffix's K/V
+        sits at-or-past the frontier where every attention mask already
+        hides it, and ordinary decode overwrites it as it advances.
+
+    Pure jnp; runs inside the jitted verify chunk (no host sync).
+    """
+    k = drafts.shape[1]
+    idx = jnp.arange(k + 1, dtype=jnp.int32)[None, :]       # (1, k+1)
+    match = ((targets[:, :k] == drafts)
+             & (jnp.arange(k, dtype=jnp.int32)[None, :] < draft_len[:, None]))
+    accepted = jnp.cumprod(match.astype(jnp.int32), axis=1).sum(axis=1)
+    # stop[:, j]: emitting token j makes the slot done (same predicate the
+    # single-token loop applies after its j-th step)
+    stop = ((targets == eos_token)
+            | (n_gen[:, None] + idx + 1 >= budget[:, None])
+            | (cache_len[:, None] + idx + 1 >= max_len))
+    stops_before = (jnp.cumsum(stop.astype(jnp.int32), axis=1)
+                    - stop.astype(jnp.int32))
+    valid = ((~done[:, None]) & (idx <= accepted[:, None])
+             & (stops_before == 0))
+    emitted = valid.sum(axis=1).astype(jnp.int32)           # (S,)
+    last = jnp.maximum(emitted - 1, 0)
+    last_tok = jnp.take_along_axis(targets, last[:, None], axis=1)[:, 0]
+    tok = jnp.where(emitted > 0, last_tok, eos_token).astype(jnp.int32)
+    stop_last = jnp.take_along_axis(stop, last[:, None], axis=1)[:, 0]
+    return FoldResult(
+        valid=valid,
+        emitted=emitted,
+        tok=tok,
+        done=done | ((emitted > 0) & stop_last),
+        n_gen=n_gen + emitted,
+        cache_len=cache_len + emitted,
+    )

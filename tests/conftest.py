@@ -22,6 +22,32 @@ def rng():
     return jax.random.PRNGKey(0)
 
 
+@pytest.fixture(autouse=True)
+def _restore_target_registry():
+    """Snapshot/restore the active HardwareTarget state around every test.
+
+    ``register_target``/``set_target``/``$REPRO_TARGET`` are process-global;
+    a test that registers a custom target or switches the current one must
+    not leak that choice into the rest of the suite (capacity-derived knobs
+    like prefill chunks and speculative-draft budgets all price against the
+    active target)."""
+    from repro.core import target as target_mod
+
+    registry = dict(target_mod._REGISTRY)
+    current = target_mod._CURRENT
+    env = os.environ.get("REPRO_TARGET")
+    try:
+        yield
+    finally:
+        target_mod._REGISTRY.clear()
+        target_mod._REGISTRY.update(registry)
+        target_mod.set_target(current)
+        if env is None:
+            os.environ.pop("REPRO_TARGET", None)
+        else:
+            os.environ["REPRO_TARGET"] = env
+
+
 def tree_allfinite(tree) -> bool:
     return all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(tree)
                if jnp.issubdtype(x.dtype, jnp.floating))

@@ -1,0 +1,296 @@
+"""Self-drafting speculative decoding (DESIGN.md §Speculative decoding):
+proposer behavior, acceptance folding vs the sequential single-token
+reference, the CapacityPartition draft budget, engine counters,
+composition with preemption/spill, and the recurrent-family gate."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.serve import scheduler as sm
+from repro.serve import speculate as sp
+from repro.serve.engine import Engine, EngineConfig
+
+TINY = ModelConfig(
+    name="tiny-spec", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=128,
+)
+TINY_HYBRID = dataclasses.replace(TINY, name="tiny-spec-hyb",
+                                  family="hybrid", n_layers=4, ssm_d_state=8,
+                                  ssm_conv=4, attn_period=2, attn_offset=1)
+MAX_LEN = 64
+PT = 8
+
+
+# ------------------------------------------------------------- proposer
+
+def test_propose_ngram_continues_constant_run():
+    ctx = np.asarray([5, 9, 3] + [7] * 20, np.int32)
+    d = sp.propose_ngram(ctx, 6)
+    np.testing.assert_array_equal(d, [7] * 6)
+
+
+def test_propose_ngram_continues_cycle():
+    """A short-period cycle must yield full-k proposals of the cycle, not
+    proposals truncated at the end of the context."""
+    ctx = np.asarray([1, 2] + [8, 9, 4] * 6, np.int32)
+    d = sp.propose_ngram(ctx, 7)
+    np.testing.assert_array_equal(d, [8, 9, 4, 8, 9, 4, 8])
+
+
+def test_propose_ngram_prefers_most_recent_match():
+    # trailing [3, 4] occurs twice; the most recent full-window hit wins
+    ctx = np.asarray([3, 4, 10, 11, 12, 3, 4, 20, 21, 22, 3, 4], np.int32)
+    np.testing.assert_array_equal(sp.propose_ngram(ctx, 2), [20, 21])
+
+
+def test_propose_ngram_no_match_and_degenerate():
+    assert sp.propose_ngram(np.arange(2, 30, dtype=np.int32), 4).size == 0
+    assert sp.propose_ngram(np.asarray([5], np.int32), 4).size == 0
+    assert sp.propose_ngram(np.asarray([], np.int32), 4).size == 0
+    assert sp.propose_ngram(np.asarray([7] * 9, np.int32), 0).size == 0
+
+
+def test_propose_ngram_caps_at_k():
+    ctx = np.asarray([7] * 30, np.int32)
+    assert sp.propose_ngram(ctx, 4).shape == (4,)
+
+
+# ---------------------------------------------------- acceptance folding
+
+def ref_fold(targets, drafts, dlen, done, n_gen, budget, cache_len,
+             max_len, eos):
+    """The sequential single-token reference: what ``emitted`` ordinary
+    decode steps would have produced for each slot (same done/stop rules
+    as the engine's ``_pool_chunk`` scan, applied token by token)."""
+    S, k1 = targets.shape
+    out = []
+    for s in range(S):
+        toks = []
+        d, ng, cl = bool(done[s]), int(n_gen[s]), int(cache_len[s])
+        if not d:
+            for j in range(k1):
+                t = int(targets[s, j])
+                toks.append(t)
+                ng += 1
+                cl += 1
+                if t == eos or ng >= int(budget[s]) or cl >= max_len:
+                    d = True
+                    break
+                if j < k1 - 1 and j < int(dlen[s]) \
+                        and int(drafts[s, j]) == t:
+                    continue
+                break
+        out.append({"toks": toks, "tok": toks[-1] if toks else eos,
+                    "done": d, "n_gen": ng, "cache_len": cl})
+    return out
+
+
+def assert_fold_matches_ref(targets, drafts, dlen, done, n_gen, budget,
+                            cache_len, max_len=MAX_LEN, eos=1):
+    import jax.numpy as jnp
+    fold = sp.fold_acceptance(
+        jnp.asarray(targets), jnp.asarray(drafts), jnp.asarray(dlen),
+        done=jnp.asarray(done), n_gen=jnp.asarray(n_gen),
+        budget=jnp.asarray(budget), cache_len=jnp.asarray(cache_len),
+        max_len=max_len, eos_token=eos)
+    ref = ref_fold(targets, drafts, dlen, done, n_gen, budget, cache_len,
+                   max_len, eos)
+    valid = np.asarray(fold.valid)
+    for s, r in enumerate(ref):
+        m = int(np.asarray(fold.emitted)[s])
+        assert m == len(r["toks"]), (s, m, r)
+        got = [int(t) for t, v in zip(np.asarray(targets)[s], valid[s]) if v]
+        assert got == r["toks"], (s, got, r)
+        # emitted positions are a contiguous prefix of the verify chunk
+        assert valid[s, :m].all() and not valid[s, m:].any()
+        assert int(np.asarray(fold.tok)[s]) == r["tok"]
+        assert bool(np.asarray(fold.done)[s]) == r["done"]
+        assert int(np.asarray(fold.n_gen)[s]) == r["n_gen"]
+        assert int(np.asarray(fold.cache_len)[s]) == r["cache_len"]
+
+
+def test_fold_hand_cases():
+    k = 4
+    targets = np.asarray([
+        [10, 11, 12, 13, 14],   # full accept: all 4 drafts match
+        [10, 99, 12, 13, 14],   # reject at draft 1 -> emit 2 tokens
+        [10, 11, 12, 13, 14],   # done slot: emits nothing
+        [20, 21, 22, 23, 24],   # dlen=0 (fresh admission): emits 1
+        [10, 1, 12, 13, 14],    # EOS at position 1 stops mid-chunk
+        [30, 31, 32, 33, 34],   # budget allows only 2 more tokens
+        [40, 41, 42, 43, 44],   # max_len wall after 3 tokens
+    ], np.int32)
+    drafts = np.asarray([
+        [10, 11, 12, 13], [10, 11, 12, 13], [10, 11, 12, 13],
+        [0, 0, 0, 0], [10, 1, 12, 13], [30, 31, 32, 33],
+        [40, 41, 42, 43],
+    ], np.int32)
+    dlen = np.asarray([4, 4, 4, 0, 4, 4, 4], np.int32)
+    done = np.asarray([0, 0, 1, 0, 0, 0, 0], bool)
+    n_gen = np.asarray([3, 3, 3, 1, 3, 3, 3], np.int32)
+    budget = np.asarray([20, 20, 20, 20, 20, 5, 20], np.int32)
+    cache_len = np.asarray([10, 10, 10, 10, 10, 10, MAX_LEN - 3], np.int32)
+    assert_fold_matches_ref(targets, drafts, dlen, done, n_gen, budget,
+                            cache_len)
+
+
+def test_fold_reduces_to_single_step_at_dlen_zero():
+    """With no drafts anywhere, the fold must be exactly one done-masked
+    decode step: 1 token per live slot, argmax column 0."""
+    S, k = 5, 3
+    rng = np.random.RandomState(0)
+    targets = rng.randint(2, 90, size=(S, k + 1)).astype(np.int32)
+    drafts = rng.randint(2, 90, size=(S, k)).astype(np.int32)
+    dlen = np.zeros((S,), np.int32)
+    done = np.asarray([0, 1, 0, 1, 0], bool)
+    assert_fold_matches_ref(targets, drafts, dlen, done,
+                            np.full((S,), 2, np.int32),
+                            np.full((S,), 30, np.int32),
+                            np.full((S,), 9, np.int32))
+
+
+# ------------------------------------------------------------ k budget
+
+def test_derive_speculate_tokens_power_of_two_and_capped():
+    k = sm.derive_speculate_tokens(TINY)
+    assert k >= 1 and (k & (k - 1)) == 0
+    assert k <= 8
+    assert sm.derive_speculate_tokens(TINY, max_tokens=2) <= 2
+    # a larger fraction of the compute tier can only raise the budget
+    assert sm.derive_speculate_tokens(TINY, fraction=0.25) >= k
+
+
+def test_derive_speculate_tokens_zero_when_nothing_fits():
+    # fraction so small not even one draft token's streamed bytes fit
+    assert sm.derive_speculate_tokens(TINY, fraction=1e-12) == 0
+
+
+def test_repetitive_stream_shape():
+    stream = sm.repetitive_stream(5, 24, 16, 128, seed=3, motif_len=6)
+    assert len(stream) == 5
+    for s in stream:
+        p = s["prompt"]
+        assert 6 <= p.shape[0] <= 24
+        assert 1 <= s["max_new_tokens"] <= 16
+        # the prompt tiles its leading motif
+        motif = p[:6]
+        for i in range(p.shape[0]):
+            assert p[i] == motif[i % 6]
+
+
+# ------------------------------------------------------- engine behavior
+
+def _geometry(cfg, n_layer0=40, n_layer1=64):
+    pb = sm.kv_bytes_per_token(cfg) * PT
+    return sm.PageGeometry(page_tokens=PT, n_pages=n_layer0 + 1,
+                           n_spill_pages=n_layer1 + 1,
+                           max_pages_per_slot=-(-MAX_LEN // PT),
+                           page_bytes=pb)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    return Engine(model, params,
+                  EngineConfig(max_len=MAX_LEN, sync_interval=4,
+                               speculate_tokens=4))
+
+
+def _stream(seed=0, n=6):
+    return sm.repetitive_stream(n, 24, 20, TINY.vocab_size, seed=seed)
+
+
+def _serve(engine, stream, *, spec, paged=False, n_layer0=40):
+    prev = engine.ecfg.speculate_tokens
+    engine.ecfg.speculate_tokens = spec
+    try:
+        sch = sm.Scheduler(3, pages=_geometry(TINY, n_layer0)
+                           if paged else None)
+        for s in stream:
+            sch.submit(s["prompt"], s["max_new_tokens"])
+        with jax.transfer_guard_device_to_host("disallow"):
+            rep = engine.serve(scheduler=sch)
+        return rep
+    finally:
+        engine.ecfg.speculate_tokens = prev
+
+
+def test_spec_counters_and_sync_discipline(engine):
+    base = _serve(engine, _stream(), spec=0)
+    rep = _serve(engine, _stream(), spec=4)
+    assert rep.outputs == base.outputs
+    st = rep.stats
+    assert st["speculate_tokens"] == 4
+    assert st["spec_proposed"] > 0
+    assert 0 <= st["spec_accepted"] <= st["spec_proposed"]
+    assert st["spec_rejected"] == st["spec_proposed"] - st["spec_accepted"]
+    assert 0.0 <= st["spec_acceptance_rate"] <= 1.0
+    # one verify forward AND one host sync per drain boundary
+    assert st["decode_steps"] == st["chunks"] == st["host_syncs"]
+    # speculation must emit the stream in fewer forwards than sequential
+    assert st["decode_steps"] < base.stats["decode_steps"]
+    assert "spec_proposed" not in base.stats
+
+
+def test_spec_survives_preemption_and_spill(engine):
+    """A tight layer-0 pool forces preempt/spill/restore mid-speculation;
+    outputs must still match the roomy-pool non-speculative run."""
+    base = _serve(engine, _stream(7), spec=0, paged=True)
+    rep = _serve(engine, _stream(7), spec=4, paged=True, n_layer0=12)
+    assert rep.stats["preemptions"] >= 1
+    assert rep.stats["restores"] >= 1
+    assert rep.outputs == base.outputs
+
+
+def test_spec_composes_with_share_and_chunked(engine):
+    """Speculation + prefix sharing + chunked prefill in one stream stays
+    bit-exact; shared pages are never written by verify chunks (a
+    corruption would surface in the later matcher's tokens)."""
+    rng = np.random.RandomState(5)
+    base_prompt = rng.randint(2, TINY.vocab_size, size=16).astype(np.int32)
+    tails = [rng.randint(2, TINY.vocab_size, size=n).astype(np.int32)
+             for n in (5, 9)]
+    reqs = [(np.concatenate([base_prompt, tails[0]]), 12),
+            (np.concatenate([base_prompt, tails[1]]), 10),
+            (np.tile(rng.randint(2, TINY.vocab_size, size=6), 4)
+             .astype(np.int32), 14)]
+
+    def serve(spec, share, chunk):
+        prev = engine.ecfg.speculate_tokens
+        engine.ecfg.speculate_tokens = spec
+        try:
+            sch = sm.Scheduler(3, pages=_geometry(TINY), prefix_share=share,
+                               chunk_prefill_tokens=chunk)
+            for p, g in reqs:
+                sch.submit(p, g)
+            with jax.transfer_guard_device_to_host("disallow"):
+                return engine.serve(scheduler=sch)
+        finally:
+            engine.ecfg.speculate_tokens = prev
+
+    base = serve(0, False, None)
+    rep = serve(4, True, 6)
+    assert rep.outputs == base.outputs
+    assert rep.stats["prefix_hits"] >= 1
+
+
+def test_speculate_rejects_recurrent_families():
+    model = build_model(TINY_HYBRID)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="roll back"):
+        Engine(model, params,
+               EngineConfig(max_len=MAX_LEN, speculate_tokens=4))
+    # the model-level contract refuses too, independent of the engine
+    import jax.numpy as jnp
+    eng = Engine(model, params, EngineConfig(max_len=MAX_LEN))
+    pool = eng.init_pool(2)
+    with pytest.raises(ValueError, match="attention-only"):
+        model.verify_step(params, jnp.zeros((2, 3), jnp.int32),
+                          pool.state, pool.cache_len)

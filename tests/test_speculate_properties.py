@@ -1,0 +1,112 @@
+"""Property test for speculative acceptance folding (ISSUE 7 satellite).
+
+:func:`repro.serve.speculate.fold_acceptance` must agree with a literal
+sequential simulator of the single-token decode loop on EVERY input, and
+its invariants must hold unconditionally:
+
+  * the accepted prefix is the longest exact match of drafts vs targets,
+  * no token is emitted past the first rejection (emitted <= accepted+1),
+  * the rolled-back ``cache_len`` is pre-verify + emitted — equivalently
+    pre + accepted + 1 whenever no stop rule truncated the chunk,
+  * emitted positions form a contiguous prefix of the verify chunk.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.serve import speculate as sp
+
+pytestmark = pytest.mark.properties
+
+MAX_LEN = 16
+EOS = 1
+
+
+def _sequential(targets, drafts, dlen, done, n_gen, budget, cache_len):
+    """Token-by-token replay of the engine's single-token stop rules."""
+    toks, d, ng, cl = [], bool(done), int(n_gen), int(cache_len)
+    if not d:
+        for j in range(targets.shape[0]):
+            t = int(targets[j])
+            toks.append(t)
+            ng += 1
+            cl += 1
+            if t == EOS or ng >= budget or cl >= MAX_LEN:
+                d = True
+                break
+            if j < dlen and int(drafts[j]) == t:
+                continue
+            break
+    return toks, d, ng, cl
+
+
+@st.composite
+def fold_case(draw):
+    S = draw(st.integers(1, 5))
+    k = draw(st.integers(1, 5))
+    # tiny vocab (EOS included) so matches, rejections, and EOS all occur
+    tok = st.integers(0, 6)
+    targets = np.asarray(draw(st.lists(st.lists(tok, min_size=k + 1,
+                                                max_size=k + 1),
+                                       min_size=S, max_size=S)), np.int32)
+    drafts = np.asarray(draw(st.lists(st.lists(tok, min_size=k,
+                                               max_size=k),
+                                      min_size=S, max_size=S)), np.int32)
+    dlen = np.asarray(draw(st.lists(st.integers(0, k), min_size=S,
+                                    max_size=S)), np.int32)
+    done = np.asarray(draw(st.lists(st.booleans(), min_size=S,
+                                    max_size=S)))
+    n_gen = np.asarray(draw(st.lists(st.integers(0, 10), min_size=S,
+                                     max_size=S)), np.int32)
+    budget = np.asarray(draw(st.lists(st.integers(1, 12), min_size=S,
+                                      max_size=S)), np.int32)
+    cache_len = np.asarray(draw(st.lists(st.integers(0, MAX_LEN - 1),
+                                         min_size=S, max_size=S)), np.int32)
+    return targets, drafts, dlen, done, n_gen, budget, cache_len
+
+
+@hypothesis.given(fold_case())
+@hypothesis.settings(max_examples=120, deadline=None)
+def test_fold_matches_sequential_replay(case):
+    targets, drafts, dlen, done, n_gen, budget, cache_len = case
+    S, k1 = targets.shape
+    k = k1 - 1
+    fold = sp.fold_acceptance(
+        jnp.asarray(targets), jnp.asarray(drafts), jnp.asarray(dlen),
+        done=jnp.asarray(done), n_gen=jnp.asarray(n_gen),
+        budget=jnp.asarray(budget), cache_len=jnp.asarray(cache_len),
+        max_len=MAX_LEN, eos_token=EOS)
+    valid = np.asarray(fold.valid)
+    emitted = np.asarray(fold.emitted)
+    for s in range(S):
+        toks, d, ng, cl = _sequential(targets[s], drafts[s], int(dlen[s]),
+                                      done[s], n_gen[s], budget[s],
+                                      cache_len[s])
+        m = int(emitted[s])
+        # the fold replays the sequential loop exactly
+        assert m == len(toks)
+        assert [int(targets[s, j]) for j in range(k1) if valid[s, j]] == toks
+        assert int(np.asarray(fold.tok)[s]) == (toks[-1] if toks else EOS)
+        assert bool(np.asarray(fold.done)[s]) == d
+        assert int(np.asarray(fold.n_gen)[s]) == ng
+
+        # invariants, stated independently of the simulator
+        assert valid[s, :m].all() and not valid[s, m:].any()
+        longest = 0
+        while (longest < min(k, int(dlen[s]))
+               and int(drafts[s, longest]) == int(targets[s, longest])):
+            longest += 1
+        assert m <= longest + 1          # nothing past the first rejection
+        assert int(np.asarray(fold.cache_len)[s]) == int(cache_len[s]) + m
+        stopped = any(int(targets[s, j]) == EOS
+                      or int(n_gen[s]) + j + 1 >= int(budget[s])
+                      or int(cache_len[s]) + j + 1 >= MAX_LEN
+                      for j in range(m))
+        if not done[s] and not stopped:
+            # the pure-rejection case: rollback lands exactly at
+            # pre-verify + accepted + 1
+            assert m == longest + 1
