@@ -7,10 +7,12 @@ the contract for the dense-vs-paged capacity comparison (DESIGN.md §Paged
 two-tier pool), and its ``--chunked-prefill`` family is the contract for
 the admission-stall head-to-head (DESIGN.md §Chunked prefill), and its
 ``--speculate`` family is the contract for the speculative-decoding
-head-to-head (DESIGN.md §Speculative decoding). The stream driver
-``repro.launch.serve`` is checked too: it must expose
-``--chunk-prefill-tokens`` and ``--speculate-tokens`` so the serving
-knobs documented in docs/SERVING.md stay wired. Runs each script's
+head-to-head (DESIGN.md §Speculative decoding), and its ``--mesh``
+family is the contract for the mesh-sharded scaling head-to-head
+(DESIGN.md §Sharded serving). The stream driver ``repro.launch.serve``
+is checked too: it must expose ``--chunk-prefill-tokens``,
+``--speculate-tokens`` and ``--mesh`` so the serving knobs documented
+in docs/SERVING.md stay wired. Runs each script's
 ``--help`` in-process and greps the usage text.
 
     PYTHONPATH=src python -m benchmarks.check_cli
@@ -37,7 +39,8 @@ EXTRA_FLAGS = {
                        "--long-prompt-len", "--sync-interval",
                        "--require-flat-p99", "--flat-p99-tol", "--repeats",
                        "--speculate", "--speculate-tokens",
-                       "--require-speculate-win", "--emit-bench"),
+                       "--require-speculate-win", "--mesh", "--mesh-axes",
+                       "--require-scaling", "--emit-bench"),
 }
 
 #: non-benchmark CLI entry points checked for specific flags only (no
@@ -45,7 +48,7 @@ EXTRA_FLAGS = {
 EXTRA_CLIS = (
     (os.path.join("src", "repro", "launch", "serve.py"),
      ("--chunk-prefill-tokens", "--paged", "--prefix-share",
-      "--speculate-tokens")),
+      "--speculate-tokens", "--mesh", "--mesh-axes")),
 )
 
 

@@ -47,10 +47,24 @@ boundary contributes one sample of that boundary's wall / sync_interval.
 and the chunked outputs must be bit-identical to the one-shot outputs.
 A phase-timed pass adds the prefill/insert/generate/drain breakdown.
 
+``--mesh N`` (N > 1) runs the mesh-sharded head-to-head (DESIGN.md
+§Sharded serving): the same paged stream served single-device and under
+an N-way mesh with tensor-parallel weights, head-axis KV page placement
+and per-shard pool budgets. The gated metric is **modeled decode
+scaling**: emitted tokens per decode forward divided by the per-shard
+resident-KV bytes that forward sweeps — on the modeled memory-bound
+target the sweep IS the forward's cost, so the ratio is decode
+throughput scaling. Host wall tok/s is reported alongside but not gated
+(the CPU test backend is FLOP-bound and re-runs the full FLOPs on every
+host device). ``--require-scaling`` gates on >=1.7x modeled scaling,
+outputs bit-exact against the same engine's one-shot rollout, and one
+host sync per drain boundary on BOTH sides — sharding must not add
+sync points.
+
 Every record carries pool bytes and pages-in-use next to throughput, so the
 dense-vs-paged comparison shows capacity, not just speed. Emits
 ``benchmarks/artifacts/serve_bench.json``; ``--emit-bench`` additionally
-writes the flat cross-PR metric file ``BENCH_7.json`` at the repo root
+writes the flat cross-PR metric file ``BENCH_8.json`` at the repo root
 (diffed by ``tools/diff_bench.py``).
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--target NAME] [--paged]
@@ -59,7 +73,8 @@ writes the flat cross-PR metric file ``BENCH_7.json`` at the repo root
         [--require-share-win] [--chunked-prefill] [--long-prompt-len N]
         [--chunk-prefill-tokens N] [--sync-interval N] [--require-flat-p99]
         [--flat-p99-tol F] [--speculate] [--speculate-tokens K]
-        [--require-speculate-win] [--emit-bench] [...]
+        [--require-speculate-win] [--mesh SPEC] [--mesh-axes NAMES]
+        [--require-scaling] [--emit-bench] [...]
 """
 
 from __future__ import annotations
@@ -72,7 +87,7 @@ from typing import Dict, List, Optional
 from benchmarks.common import add_target_arg, fmt_table, save_artifact, \
     target_scope
 
-BENCH_ID = 7
+BENCH_ID = 8
 
 
 def _emit_bench_json(meta: Dict, metrics: Dict) -> str:
@@ -117,6 +132,8 @@ def _run_mode(engine, stream: List[Dict], n_slots: int, mode: str,
     dt = time.monotonic() - t0
     n_tokens = sum(len(r.tokens) for rep in reports for r in rep.requests)
     ttft = [t for rep in reports for t in rep.stats["ttft_steps"]]
+    ttft_emit = [t for rep in reports
+                 for t in rep.stats["ttft_emit_steps"]]
     last = reports[-1].stats
     rec = {
         "mode": mode,
@@ -140,6 +157,13 @@ def _run_mode(engine, stream: List[Dict], n_slots: int, mode: str,
                            else percentile(ttft, 50)),
         "ttft_steps_p95": (None if mode == "static"
                            else percentile(ttft, 95)),
+        # first-token EMISSION boundary in step-clock units — the real
+        # TTFT (admission-wait alone reads 0 whenever the stream admits
+        # at the first boundary, which is what BENCH_7 reported)
+        "ttft_emit_p50": (None if mode == "static"
+                          else percentile(ttft_emit, 50)),
+        "ttft_emit_p95": (None if mode == "static"
+                          else percentile(ttft_emit, 95)),
         # rid -> tokens, for cross-mode bit-identity checks (single-report
         # modes only: static restarts rids per batch)
         "outputs": ({r.rid: list(r.tokens) for r in reports[0].requests}
@@ -632,6 +656,10 @@ def run_speculate(target_name=None, arch: str = "qwen2.5-3b",
                                     if st["decode_steps"] else 0.0),
                 "ttft_steps_p50": percentile(st["ttft_steps"], 50),
                 "ttft_steps_p95": percentile(st["ttft_steps"], 95),
+                # emission-boundary TTFT: non-zero even when every slot
+                # admits at the first boundary (see _run_mode)
+                "ttft_emit_p50": percentile(st["ttft_emit_steps"], 50),
+                "ttft_emit_p95": percentile(st["ttft_emit_steps"], 95),
                 "outputs": {r.rid: list(r.tokens) for r in rep.requests},
             }
             if spec_k:
@@ -696,6 +724,208 @@ def run_speculate(target_name=None, arch: str = "qwen2.5-3b",
          "ttft p50/95", "accept", "wall"],
         rows, title=f"Speculative decode bench — {cfg.name}, "
                     f"{n_requests} requests, k={k} ({target.name})")
+    return "\n".join([table] + lines)
+
+
+def run_mesh(target_name=None, arch: str = "qwen2.5-3b",
+             n_requests: int = 32, prompt_len: int = 16,
+             gen_len: int = 12, seed: int = 0, page_tokens: int = 8,
+             layer0_bytes: Optional[int] = None,
+             layer1_bytes: Optional[int] = None, max_slots: int = 32,
+             mesh_spec: str = "2", mesh_axes: str = "data,model",
+             sync_interval: Optional[int] = None,
+             require_scaling: bool = False,
+             emit_bench: bool = False) -> str:
+    """Mesh-sharded serving head-to-head: the same paged stream served
+    single-device and under the ``--mesh`` mesh, same per-shard layer-0
+    byte budget (the mesh exposes ``kv_shards`` x the aggregate pool).
+
+    The gated metric is **modeled decode scaling**: tokens per decode
+    forward over the per-shard resident-KV bytes that forward sweeps.
+    Head-axis page placement keeps per-shard sweep bytes flat while the
+    scaled budget admits ``kv_shards`` x the slots, so tokens per sweep
+    — decode throughput on the modeled memory-bound target — scales with
+    the mesh. Host wall tok/s is reported but NOT gated: every forced
+    host-platform device re-runs the full FLOPs, so wall time cannot
+    show the memory-side win. Sync discipline is asserted, not gated:
+    one host sync per drain boundary on both sides.
+
+    Bit-exactness is asserted per mesh size, against the SAME engine's
+    one-shot rollout: tensor-parallel row-sharded matmuls reassociate
+    the contraction sum across shards (the all-reduce adds partials the
+    single device accumulated inside one dot), so a near-tie greedy
+    argmax may legitimately flip ACROSS mesh sizes — but within one mesh
+    size, continuous batching, paging and head-axis placement must not
+    move a single bit.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_reduced
+    from repro.core.target import get_target
+    from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_cli_mesh
+    from repro.models import build_model
+    from repro.serve.engine import Engine, EngineConfig
+    from repro.serve.scheduler import (Scheduler, derive_n_slots,
+                                       derive_page_geometry,
+                                       kv_bytes_per_token, kv_shards,
+                                       percentile, synthetic_stream)
+
+    with target_scope(target_name):
+        target = get_target()
+        cfg = get_reduced(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        stream = synthetic_stream(n_requests, prompt_len, gen_len,
+                                  cfg.vocab_size, seed)
+        max_len = prompt_len + gen_len
+        base_slots = derive_n_slots(cfg, max_len, max_slots=8)
+        l0 = (layer0_bytes if layer0_bytes is not None
+              else base_slots * kv_bytes_per_token(cfg) * max_len)
+        mesh = make_cli_mesh(mesh_spec, mesh_axes)
+        model_shards = shd.axis_size(mesh, shd.MODEL_AXIS)
+        data_shards = shd.axis_size(mesh, shd.DATA_AXIS)
+        shards = kv_shards(cfg, model_shards) * max(1, data_shards)
+
+        def one(meshed: bool) -> Dict:
+            ms = model_shards if meshed else 1
+            ds = data_shards if meshed else 1
+            ks = shards if meshed else 1
+            geom = derive_page_geometry(
+                cfg, max_len, page_tokens=page_tokens,
+                max_slots=max_slots, layer0_bytes=l0,
+                layer1_bytes=layer1_bytes, model_shards=ms)
+            slots = derive_n_slots(cfg, max_len, pages=geom,
+                                   max_slots=max_slots, model_shards=ms,
+                                   data_shards=ds)
+            engine = Engine(model, params,
+                            EngineConfig(max_len=max_len,
+                                         sync_interval=sync_interval or 4,
+                                         mesh=mesh if meshed else None))
+            # this engine's own ground truth: one-shot greedy rollouts
+            refs = []
+            for spec in stream:
+                toks, _ = engine.generate(
+                    {"tokens": jnp.asarray(spec["prompt"])[None]},
+                    n_steps=spec["max_new_tokens"])
+                refs.append([int(t) for t in np.asarray(toks)[0]])
+
+            def serve_once():
+                sch = Scheduler(n_slots=slots, pages=geom)
+                rids = [sch.submit(s["prompt"], s["max_new_tokens"]).rid
+                        for s in stream]
+                t0 = time.monotonic()
+                rep = engine.serve(scheduler=sch)
+                return rids, rep, time.monotonic() - t0
+
+            serve_once()                      # warmup: compile
+            rids, rep, dt = serve_once()
+            for rid, ref in zip(rids, refs):
+                got = rep.outputs[rid]
+                if not got or got != ref[:len(got)]:
+                    raise SystemExit(
+                        f"serve_bench --mesh: {'mesh' if meshed else 'base'}"
+                        " continuous outputs are not a prefix of the same "
+                        "engine's one-shot rollout — sharded serving must "
+                        "be bit-exact against its own reference")
+            st = rep.stats
+            n_tokens = sum(len(r.tokens) for r in rep.requests)
+            page_bytes = st["pool_bytes"] // max(st["n_pages"], 1)
+            return {
+                "mode": f"mesh={ms * ds}" if meshed else "mesh=1",
+                "wall_s": dt,
+                "n_tokens": n_tokens,
+                "tok_per_s": n_tokens / dt if dt else 0.0,
+                "decode_steps": st["decode_steps"],
+                "host_syncs": st["host_syncs"],
+                "boundaries": len(st["boundary_wall_s"]),
+                "completed": st["drained"],
+                "n_slots": slots,
+                "kv_shards": ks,
+                "pool_bytes": st["pool_bytes"],
+                "per_shard_pool_bytes": st["pool_bytes"] // ks,
+                "n_pages": st["n_pages"],
+                "pages_high_water": st["pages_high_water"],
+                "per_shard_pages_high_water":
+                    -(-st["pages_high_water"] // ks),
+                # per-shard resident-KV bytes one decode forward sweeps:
+                # the forward's modeled cost on the memory-bound target
+                "per_shard_sweep_bytes":
+                    st["pages_high_water"] * page_bytes // ks,
+                "tok_per_forward": (n_tokens / st["decode_steps"]
+                                    if st["decode_steps"] else 0.0),
+                "ttft_emit_p50": percentile(st["ttft_emit_steps"], 50),
+                "ttft_emit_p95": percentile(st["ttft_emit_steps"], 95),
+            }
+
+        base = one(False)
+        on_mesh = one(True)
+
+    for rec in (base, on_mesh):
+        if rec["host_syncs"] != rec["boundaries"]:
+            raise SystemExit(
+                f"serve_bench --mesh: {rec['mode']} made "
+                f"{rec['host_syncs']} host syncs over {rec['boundaries']} "
+                "drain boundaries — sharding must not add sync points")
+
+    def modeled(rec):
+        return rec["tok_per_forward"] / max(rec["per_shard_sweep_bytes"], 1)
+
+    scaling = modeled(on_mesh) / modeled(base) if modeled(base) else 0.0
+    wall_scaling = (on_mesh["tok_per_s"] / base["tok_per_s"]
+                    if base["tok_per_s"] else 0.0)
+    artifact = {
+        "arch": cfg.name, "target": target.name, "n_requests": n_requests,
+        "prompt_len": prompt_len, "gen_len": gen_len,
+        "mesh": mesh_spec, "mesh_axes": mesh_axes,
+        "model_shards": model_shards, "data_shards": data_shards,
+        "layer0_bytes": l0,
+        "scaling_modeled": scaling, "scaling_wall": wall_scaling,
+        "outputs_prefix_of_one_shot": True,
+        "base": base, "mesh_run": on_mesh,
+    }
+    save_artifact("serve_mesh_bench.json", artifact)
+    lines = [
+        f"mesh scaling ({data_shards}x{model_shards} data x model, "
+        f"{on_mesh['kv_shards']}x kv pool, per-shard "
+        f"{on_mesh['per_shard_pool_bytes']} layer-0 bytes): modeled decode "
+        f"x{scaling:.2f} ({on_mesh['tok_per_forward']:.2f} vs "
+        f"{base['tok_per_forward']:.2f} tok/fwd at flat per-shard sweep), "
+        f"wall x{wall_scaling:.2f} (not gated: host devices re-run full "
+        f"FLOPs), syncs/boundary {on_mesh['host_syncs']}/"
+        f"{on_mesh['boundaries']} vs {base['host_syncs']}/"
+        f"{base['boundaries']}, outputs one-shot-exact"]
+    if emit_bench:
+        metrics = {"scaling_modeled": scaling,
+                   "scaling_wall": wall_scaling}
+        for key, rec in (("base", base), ("mesh", on_mesh)):
+            metrics.update({f"{key}.{k}": v for k, v in rec.items()})
+        path = _emit_bench_json(
+            {"mode": "mesh", "arch": cfg.name, "target": target.name,
+             "n_requests": n_requests, "mesh": mesh_spec,
+             "mesh_axes": mesh_axes}, metrics)
+        lines.append(f"bench metrics -> {path}")
+    if require_scaling and scaling < 1.7:
+        raise SystemExit(
+            "serve_bench --require-scaling: expected >=1.7x modeled decode "
+            f"scaling at mesh {mesh_spec}; got x{scaling:.2f} — the pool "
+            "budget did not scale (check kv_shards: MLA-latent and SSM "
+            "caches replicate) or slots were capped by --max-slots")
+    rows = [[r["mode"], f"{r['tok_per_forward']:.2f}",
+             f"{r['tok_per_s']:.1f}", r["n_tokens"], r["n_slots"],
+             r["kv_shards"], r["per_shard_pool_bytes"],
+             r["pages_high_water"], r["per_shard_pages_high_water"],
+             f"{r['host_syncs']}/{r['boundaries']}",
+             f"{r['ttft_emit_p50']:.0f}/{r['ttft_emit_p95']:.0f}",
+             f"{r['wall_s']*1e3:.0f} ms"] for r in (base, on_mesh)]
+    table = fmt_table(
+        ["mode", "tok/fwd", "tok/s", "tokens", "slots", "kv shards",
+         "shard bytes", "pages hw", "shard hw", "syncs/bnd",
+         "ttft emit 50/95", "wall"],
+        rows, title=f"Mesh-sharded serve bench — {cfg.name}, "
+                    f"{n_requests} requests, mesh {mesh_spec} "
+                    f"({target.name})")
     return "\n".join([table] + lines)
 
 
@@ -769,11 +999,39 @@ def main(argv=None) -> int:
     ap.add_argument("--require-speculate-win", action="store_true",
                     help="fail unless speculation shows >=1.5x decode "
                          "tokens-per-forward with bit-identical outputs")
+    ap.add_argument("--mesh", default="1",
+                    help="device mesh sizes, 'DxM' (matching --mesh-axes) "
+                         "or one int (model-parallel shorthand: '2' = "
+                         "1x2); any size > 1 runs the mesh-sharded "
+                         "head-to-head instead of the mode comparison")
+    ap.add_argument("--mesh-axes", default="data,model",
+                    help="comma-separated axis names for --mesh")
+    ap.add_argument("--require-scaling", action="store_true",
+                    help="fail unless the --mesh run shows >=1.7x modeled "
+                         "decode scaling with one-shot-exact outputs and "
+                         "one host sync per drain boundary")
     ap.add_argument("--emit-bench", action="store_true",
                     help="write the flat cross-PR metric file "
                          "BENCH_%d.json at the repo root" % BENCH_ID)
     add_target_arg(ap)
     args = ap.parse_args(argv)
+    try:
+        mesh_n = 1
+        for part in args.mesh.split("x"):
+            mesh_n *= int(part)
+    except ValueError:
+        mesh_n = 0      # malformed: let parse_mesh raise the real error
+    if mesh_n != 1 or args.require_scaling:
+        print(run_mesh(
+            args.target, args.arch, args.requests,
+            args.prompt_len, args.gen_len, args.seed,
+            page_tokens=args.page_tokens, layer0_bytes=args.layer0_bytes,
+            layer1_bytes=args.layer1_bytes, max_slots=args.max_slots,
+            mesh_spec=args.mesh, mesh_axes=args.mesh_axes,
+            sync_interval=args.sync_interval,
+            require_scaling=args.require_scaling,
+            emit_bench=args.emit_bench))
+        return 0
     if args.speculate:
         print(run_speculate(
             args.target, args.arch, args.requests,

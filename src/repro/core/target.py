@@ -132,6 +132,19 @@ class CapacityPartition:
     def with_buffers(self, n_buffers: int) -> "CapacityPartition":
         return dataclasses.replace(self, n_buffers=n_buffers)
 
+    def scaled(self, shards: int) -> "CapacityPartition":
+        """The aggregate partition a ``shards``-way mesh exposes: each shard
+        contributes its own copy of this level, so the pool the planner
+        prices against grows linearly — the paper's more-dies-more-capacity
+        argument applied across chips instead of across bonded layers.
+        ``shards=1`` is the identity (single-device budgets unchanged)."""
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if shards == 1:
+            return self
+        return dataclasses.replace(
+            self, capacity_bytes=self.capacity_bytes * shards)
+
     def stacked(self, layer1_fraction: float) -> "TieredPartition":
         """Stack a second memory layer on this partition (the paper's 3D
         move): layer 0 keeps this budget, layer 1 adds
@@ -170,6 +183,14 @@ class TieredPartition:
 
     def tier_budgets(self) -> Tuple[int, int]:
         return (self.layer0.budget_bytes, self.layer1.budget_bytes)
+
+    def scaled(self, shards: int) -> "TieredPartition":
+        """Scale both stacked layers by the mesh shard count (see
+        :meth:`CapacityPartition.scaled`)."""
+        if shards == 1:
+            return self
+        return TieredPartition(layer0=self.layer0.scaled(shards),
+                               layer1=self.layer1.scaled(shards))
 
     def units_per_tier(self, unit_bytes: int,
                        resident_bytes: int = 0) -> Tuple[int, int]:

@@ -175,6 +175,28 @@ def fix_spec_for(mesh, spec: P, shape: Tuple[int, ...]) -> P:
     return P(*_fix_spec(tuple(spec), shape, mesh))
 
 
+def model_axis_size(mesh=None) -> int:
+    """Size of the `model` axis on ``mesh`` (ambient if None); 1 without one."""
+    if mesh is None:
+        mesh = ambient_mesh()
+    if mesh is None or not getattr(mesh, "axis_names", ()):
+        return 1
+    return axis_size(mesh, MODEL_AXIS)
+
+
+def heads_divide(n_heads: int, mesh=None) -> bool:
+    """True iff the (ambient) model axis is > 1 and divides ``n_heads``.
+
+    The gate for head-axis KV placement: the head dim of attention is
+    batch-like (softmax and PV reduce over the *sequence* dim, which stays
+    local), so a head-sharded cache computes exactly what a replicated one
+    does, shard by shard — each mesh shard holds the pages its own heads
+    read and never sees the others'. When heads do not divide, callers fall
+    back to the seq-sharded (flash-decoding) layout."""
+    m = model_axis_size(mesh)
+    return m > 1 and n_heads % m == 0
+
+
 # ---------------------------------------------------------------------------
 # Parameter partitioning rules (by pytree path name patterns).
 # ---------------------------------------------------------------------------
@@ -219,6 +241,34 @@ _RULES: Tuple[Tuple[str, P], ...] = (
 )
 
 
+#: KV-cache leaves carrying a head axis at rank-3 *from the right* — true in
+#: BOTH layouts the serving engine uses: the dense slab ``(B, hkv, max_len,
+#: hd)`` / stacked ``(r, B, hkv, max_len, hd)`` AND the paged pool
+#: ``(n_pages, hkv, page_tokens, hd)`` / stacked ``(r, n_pages, hkv, pt,
+#: hd)``. The page-indexed leading axis replicates (block tables address any
+#: page from any shard's table row); only the head axis shards.
+_CACHE_HEAD_LEAVES = frozenset({"k", "v"})
+
+#: Cache leaves with no head axis: the MLA latent (shared across heads) and
+#: recurrent SSM state (per-sequence). These replicate over `model` — which
+#: is why MLA pool capacity does NOT scale with model shards (see
+#: repro.serve.scheduler.kv_shards).
+_CACHE_STATE_LEAVES = frozenset({"ckv", "krope", "conv", "ssm"})
+
+
+def spec_for_cache(path: str, shape: Tuple[int, ...], mesh) -> Optional[P]:
+    """PartitionSpec for a KV-cache / paged-pool leaf, or None if ``path``
+    does not name one. Matches by final path component (exact leaf names,
+    not substrings — ``wkv_a`` must not match ``k``)."""
+    leaf = path.rsplit("/", 1)[-1]
+    if leaf in _CACHE_HEAD_LEAVES and len(shape) >= 3:
+        base = (None,) * (len(shape) - 3) + (MODEL_AXIS, None, None)
+        return P(*_fix_spec(base, shape, mesh))
+    if leaf in _CACHE_STATE_LEAVES:
+        return P(*(None,) * len(shape))
+    return None
+
+
 def spec_for_param(path: str, shape: Tuple[int, ...], mesh) -> P:
     """PartitionSpec for one parameter, by name pattern + divisibility.
 
@@ -228,6 +278,9 @@ def spec_for_param(path: str, shape: Tuple[int, ...], mesh) -> P:
     gather-at-use traffic would dwarf the activations. Expert weights stay
     2D-sharded — too big to replicate — and the MoE layer gathers the
     *tokens* to the weights instead (repro.models.moe partial-K path)."""
+    cache_spec = spec_for_cache(path, shape, mesh)
+    if cache_spec is not None:
+        return cache_spec
     for pat, spec in _RULES:
         if pat in path:
             base = tuple(spec)

@@ -43,6 +43,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.distributed.sharding import BATCH, MODEL_AXIS, heads_divide, shard
+
 _NEG_INF = float("-inf")
 _STATS_LANES = 128   # stats scratch is (group, 128) for TPU lane alignment
 
@@ -246,5 +248,13 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                                   interpret=not on_tpu)
     k = gather_kv_pages(k_pages, block_tables, seq_axis=1)
     v = gather_kv_pages(v_pages, block_tables, seq_axis=1)
+    if heads_divide(k_pages.shape[1]):
+        # pin the gathered per-slot view to the head shards that own the
+        # pages: the block-table gather indexes the (replicated-looking)
+        # page axis, and without the constraint GSPMD may resolve it by
+        # all-gathering the head-sharded pool first.
+        q = shard(q, BATCH, MODEL_AXIS, None, None)
+        k = shard(k, BATCH, MODEL_AXIS, None, None)
+        v = shard(v, BATCH, MODEL_AXIS, None, None)
     return decode_attention_masked(q, k, v, cache_len,
                                    window=window, causal=causal)

@@ -36,3 +36,41 @@ def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     n = data * model
     devices = jax.devices()[:n]
     return make_mesh((data, model), ("data", "model"), devices=devices)
+
+
+def parse_mesh(spec: str, axes: str = "data,model"):
+    """Parse the serving CLIs' ``--mesh`` / ``--mesh-axes`` flags.
+
+    ``spec`` is either one int — model-parallel shorthand, ``"2"`` means
+    ``1x2`` — or ``"DxM[xP...]"`` sizes matching ``axes`` (comma-separated
+    axis names, default ``"data,model"``). Returns ``(sizes, names)``.
+    """
+    names = tuple(a.strip() for a in axes.split(",") if a.strip())
+    if not names:
+        raise ValueError(f"--mesh-axes names no axes: {axes!r}")
+    if "x" in spec:
+        sizes = tuple(int(x) for x in spec.split("x"))
+    else:
+        sizes = (1,) * (len(names) - 1) + (int(spec),)
+    if len(sizes) != len(names):
+        raise ValueError(
+            f"--mesh {spec!r} has {len(sizes)} sizes but --mesh-axes "
+            f"names {len(names)} axes ({', '.join(names)})")
+    if any(s < 1 for s in sizes):
+        raise ValueError(f"--mesh sizes must be >= 1, got {spec!r}")
+    return sizes, names
+
+
+def make_cli_mesh(spec: str, axes: str = "data,model") -> jax.sharding.Mesh:
+    """Mesh for the serving CLIs, with guidance when devices are missing."""
+    sizes, names = parse_mesh(spec, axes)
+    n = 1
+    for s in sizes:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"--mesh {spec} needs {n} devices, have {len(devices)}; on a "
+            f"CPU host, export XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={n} before starting python")
+    return make_mesh(sizes, names, devices=devices[:n])

@@ -52,15 +52,15 @@ import jax.numpy as jnp
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.core.target import available_targets, use_target
 from repro.distributed import sharding as shd
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_cli_mesh
 from repro.models import build_model
 from repro.serve.engine import Engine, EngineConfig
 from repro.serve.scheduler import (DRAINED, Scheduler, derive_n_slots,
                                    derive_page_geometry,
                                    derive_prefill_chunk,
-                                   derive_speculate_tokens, percentile,
-                                   repetitive_stream, shared_prefix_stream,
-                                   synthetic_stream)
+                                   derive_speculate_tokens, kv_shards,
+                                   percentile, repetitive_stream,
+                                   shared_prefix_stream, synthetic_stream)
 
 
 def run_stream(engine: Engine, scheduler: Scheduler, stream: list) -> dict:
@@ -128,7 +128,13 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
-    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--mesh", default="1",
+                    help="device mesh: one int (model-parallel shorthand, "
+                         "2 = 1x2) or DxM sizes matching --mesh-axes; "
+                         "default 1 = today's single-device path")
+    ap.add_argument("--mesh-axes", default="data,model",
+                    help="comma-separated axis names the --mesh sizes "
+                         "bind to (default data,model)")
     ap.add_argument("--target", default=None, metavar="NAME",
                     help=f"hardware target ({', '.join(available_targets())})")
     ap.add_argument("--stream", type=int, default=0, metavar="N",
@@ -176,8 +182,9 @@ def main(argv=None) -> int:
     if args.stream and (cfg.family == "encdec" or cfg.frontend_len):
         ap.error(f"--stream serves decoder-only token-prompt models; "
                  f"{cfg.name} ({cfg.family}) goes through one-shot mode")
-    d_mesh, m_mesh = (int(x) for x in args.mesh.split("x"))
-    mesh = make_host_mesh(d_mesh, m_mesh)
+    mesh = make_cli_mesh(args.mesh, args.mesh_axes)
+    data_shards = shd.axis_size(mesh, shd.DATA_AXIS)
+    model_shards = shd.axis_size(mesh, shd.MODEL_AXIS)
 
     tgt_ctx = use_target(args.target) if args.target else contextlib.nullcontext()
     with tgt_ctx, shd.use_mesh(mesh):
@@ -190,7 +197,8 @@ def main(argv=None) -> int:
         engine = Engine(model, params,
                         EngineConfig(max_len=max_len,
                                      sync_interval=args.sync_interval,
-                                     speculate_tokens=spec_k or 0))
+                                     speculate_tokens=spec_k or 0,
+                                     mesh=mesh))
 
         if args.stream:
             pages = None
@@ -199,9 +207,11 @@ def main(argv=None) -> int:
                     cfg, max_len, page_tokens=args.page_tokens,
                     max_slots=max(2, args.batch),
                     layer0_bytes=args.layer0_bytes,
-                    layer1_bytes=args.layer1_bytes)
+                    layer1_bytes=args.layer1_bytes,
+                    model_shards=model_shards)
             n_slots = args.slots or derive_n_slots(
-                cfg, max_len, max_slots=max(2, args.batch), pages=pages)
+                cfg, max_len, max_slots=max(2, args.batch), pages=pages,
+                model_shards=model_shards, data_shards=data_shards)
             chunk = args.chunk_prefill_tokens
             if chunk == 0:
                 chunk = derive_prefill_chunk(cfg)
@@ -229,6 +239,13 @@ def main(argv=None) -> int:
                     else "paged" if args.paged else "dense")
             print(f"arch={cfg.name} stream={args.stream} mode={mode} "
                   f"slots={rec['n_slots']} (max reuse {rec['max_slot_reuse']})")
+            if data_shards * model_shards > 1:
+                shards = kv_shards(cfg, model_shards)
+                line = (f"mesh: {data_shards}x{model_shards} (data x model), "
+                        f"kv pool sharded {shards}x")
+                if args.paged:
+                    line += f"; per-shard pool {rec['pool_bytes'] // shards} B"
+                print(line)
             print(f"completed {rec['completed']}/{rec['n_requests']} "
                   f"({rec['n_tokens']} tokens) in {rec['wall_s']*1e3:.0f} ms "
                   f"-> {rec['tok_per_s']:.1f} tok/s")

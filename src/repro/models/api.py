@@ -264,6 +264,12 @@ class Model:
         slot's block-table row; unmapped tail entries point at null page 0,
         so their junk lands in memory no sequence reads). Recurrent SSM
         state keeps the dense per-slot scatter at ``slot``.
+
+        Layout-preserving under head-axis page placement (DESIGN.md
+        §Sharded serving): both the pool and the cut row carry the head
+        dim, so a head-sharded scatter writes each shard's own head
+        slice locally — the page-indexed ``at[:, block_row]`` update
+        never moves bytes across shards.
         """
         p_max = block_row.shape[0]
 

@@ -1,9 +1,13 @@
 """Attention variants: GQA (+ sliding window, RoPE/M-RoPE), MLA (DeepSeek-V2),
 with functional KV caches for decode.
 
-Pooled-memory decode (the MemPool idea at pod scale): KV caches are sharded on
-the *sequence* dimension across the `model` axis (and `data` too when batch
-cannot shard, e.g. long_500k's batch=1). The attention math below is written
+Pooled-memory decode (the MemPool idea at pod scale): when the KV head count
+divides the `model` axis, decode caches are placed on the *head* axis — each
+mesh shard holds exactly the cache (or page) slice its own heads read, which
+is bit-exact with the replicated layout because softmax/PV reduce over the
+local seq dim (DESIGN.md §Sharded serving). Otherwise KV caches fall back to
+*sequence*-dimension sharding across `model` (and `data` too when batch
+cannot shard, e.g. long_500k's batch=1), where the attention math is written
 so GSPMD turns the softmax reductions into partial max/sum + psum over the
 cache shards — flash-decoding across chips, i.e. remote "banks" at the group
 level of the hierarchy.
@@ -30,7 +34,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tiling
-from repro.distributed.sharding import BATCH, shard
+from repro.distributed.sharding import (BATCH, MODEL_AXIS, heads_divide,
+                                        shard)
 from repro.kernels import ops
 from repro.kernels.paged_attention import (decode_attention_masked,
                                            gather_kv_pages,
@@ -188,17 +193,30 @@ def gqa_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
         k, v = cross_kv
 
     if cache is not None and block_tables is not None:
-        # paged two-tier pool: block-table write, page-walk attention. The
-        # page axis takes the seq shards' role (pages spread over `model`);
-        # q replicates exactly as in the dense pooled-decode layout.
+        # paged two-tier pool: block-table write, page-walk attention.
         k_pages = _paged_cache_write(cache["k"], k, cache_len, block_tables,
                                      axis=1)
         v_pages = _paged_cache_write(cache["v"], v, cache_len, block_tables,
                                      axis=1)
         new_cache = {"k": k_pages, "v": v_pages}
-        q = shard(q, BATCH, None, None, None)
-        k_pages = shard(k_pages, "model", None, None, None)
-        v_pages = shard(v_pages, "model", None, None, None)
+        if heads_divide(hkv):
+            # head-axis page placement: each mesh shard holds the page slice
+            # its own KV heads read (q heads follow by GQA grouping), so the
+            # page walk is shard-local — softmax/PV reduce over the seq dim,
+            # which never crosses shards, making this bit-exact with the
+            # replicated layout. Per-shard pool bytes drop by the model-axis
+            # size; the geometry prices against the scaled aggregate
+            # (DESIGN.md §Sharded serving).
+            q = shard(q, BATCH, MODEL_AXIS, None, None)
+            k_pages = shard(k_pages, None, MODEL_AXIS, None, None)
+            v_pages = shard(v_pages, None, MODEL_AXIS, None, None)
+        else:
+            # heads don't divide: the page axis takes the seq shards' role
+            # (pages spread over `model`); q replicates exactly as in the
+            # dense pooled-decode layout.
+            q = shard(q, BATCH, None, None, None)
+            k_pages = shard(k_pages, MODEL_AXIS, None, None, None)
+            v_pages = shard(v_pages, MODEL_AXIS, None, None, None)
         out = paged_decode_attention(q, k_pages, v_pages, block_tables,
                                      cache_len, window=kind.window,
                                      causal=causal)
@@ -215,7 +233,16 @@ def gqa_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
         k, v = k_all, v_all
         q_offset = cache_len
 
-    if cache is not None:
+    if cache is not None and heads_divide(hkv):
+        # dense slab, heads divide the model axis: same head-axis placement
+        # as the paged pool above, so dense and paged serve paths (and the
+        # one-shot reference) stay bit-identical at any mesh size — a
+        # seq-sharded softmax here would reassociate the reduction
+        # (partial-stat psums) and break the equivalence matrix.
+        q = shard(q, BATCH, MODEL_AXIS, None, None)
+        k = shard(k, BATCH, MODEL_AXIS, None, None)
+        v = shard(v, BATCH, MODEL_AXIS, None, None)
+    elif cache is not None:
         # pooled KV: sequence dim spread over the model axis (flash-decoding).
         # q heads REPLICATE here — a head-sharded q against seq-sharded KV
         # forces GSPMD into replicate-and-reslice copies of the whole cache
@@ -353,11 +380,22 @@ def mla_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
         # computed directly against the 576-dim latent cache — O(T*(l+r))
         # per query instead of O(T*h*(d_k+d_v)) decompression, and the
         # seq-sharded latent never reshards (§Perf, deepseek/h1).
-        ckv = shard(ckv, BATCH, "model", None)          # pooled latent
-        k_rope = shard(k_rope, BATCH, "model", None)
+        if heads_divide(h):
+            # heads divide: replicate the latent (it has no head axis to
+            # place) and shard the folded-q heads instead — each shard scores
+            # its own heads against the whole local latent, bit-exact with
+            # the replicated layout. MLA pool capacity therefore does NOT
+            # scale with model shards (repro.serve.scheduler.kv_shards).
+            ckv = shard(ckv, BATCH, None, None)
+            k_rope = shard(k_rope, BATCH, None, None)
+        else:
+            ckv = shard(ckv, BATCH, "model", None)      # pooled latent
+            k_rope = shard(k_rope, BATCH, "model", None)
         w = cast(p["wkv_b"]).reshape(cfg.kv_lora_rank, h, nope + vdim)
         wk, wv = w[..., :nope], w[..., nope:]           # (l, h, n) / (l, h, v)
         qf = q_nope.astype(jnp.float32)                 # (B, H, S, n)
+        if heads_divide(h):
+            qf = shard(qf, BATCH, MODEL_AXIS, None, None)
         q_lat = jnp.einsum("bhsn,lhn->bhsl", qf, wk.astype(jnp.float32))
         ckv_f = ckv.astype(jnp.float32)                 # (B, T, l)
         kr_f = k_rope.astype(jnp.float32)               # (B, T, r)

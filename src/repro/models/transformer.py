@@ -240,6 +240,16 @@ def lm_loss(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int,
                 dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Per-layer decode caches, grouped ``{group: {posN: {leaf: array}}}``.
+
+    The leaf names are a sharding contract, not just labels:
+    ``repro.distributed.sharding.spec_for_cache`` matches ``k``/``v``
+    (head axis at rank-3 from the right -> sharded over `model` under a
+    mesh) and ``ckv``/``krope``/``conv``/``ssm`` (no head axis ->
+    replicated) by exact final path component. Renaming a leaf silently
+    demotes that cache to replicated placement and desyncs the
+    per-shard pool budgets in ``repro.serve.scheduler.kv_shards``.
+    """
     caches: Dict[str, Any] = {}
     for group in cfg.layer_groups():
         g: Dict[str, Any] = {}

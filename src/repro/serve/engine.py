@@ -42,6 +42,7 @@ into every prefill/decode call — serving never re-plans per step.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Dict, Iterable, List, Optional, Tuple
@@ -50,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed import sharding as shd
 from repro.models.api import Model
 from repro.serve import scheduler as sched_mod
 from repro.serve import speculate as spec_mod
@@ -79,6 +81,19 @@ class EngineConfig:
     (prefill / insert / generate / drain) in ``last_stats`` — benchmark
     mode only: each phase blocks on its device work, which serializes the
     dispatch pipeline the serve loop otherwise overlaps.
+
+    ``mesh`` (a ``jax.sharding.Mesh``, e.g. from
+    :func:`repro.launch.mesh.make_host_mesh`) runs every jitted engine
+    function under that mesh: model weights are placed tensor-parallel
+    (``repro.distributed.sharding.named_shardings``), KV pools/pages are
+    placed on the head axis when the model's heads divide the `model` axis
+    (DESIGN.md §Sharded serving), and GSPMD partitions the admission /
+    decode / verify computations. ``None`` (default) is today's
+    single-device path, bit-identical by construction; a 1x1 mesh is also
+    bit-identical (every constraint resolves to replication). The
+    one-host-sync-per-drain-boundary discipline is mesh-invariant: the
+    block-table upload (host->device) and the drain fetch are the only
+    host <-> device edges per boundary, regardless of mesh size.
     """
 
     max_len: int
@@ -89,6 +104,7 @@ class EngineConfig:
     prompt_pad_multiple: Optional[int] = None
     speculate_tokens: int = 0
     phase_timing: bool = False
+    mesh: Optional[Any] = None
 
 
 @jax.tree_util.register_dataclass
@@ -127,6 +143,12 @@ class ServeReport:
 class Engine:
     def __init__(self, model: Model, params: Any, ecfg: EngineConfig):
         self.model = model
+        self.mesh = ecfg.mesh
+        if self.mesh is not None:
+            # tensor-parallel weight placement; cache pools are placed by
+            # _place at init and the jitted fns run under _mesh_scope
+            params = jax.device_put(
+                params, shd.named_shardings(params, self.mesh))
         self.params = params
         self.ecfg = ecfg
         # one capacity-partitioned plan set for the whole engine lifetime
@@ -158,6 +180,27 @@ class Engine:
         return any(kind.attn == "mamba"
                    for group in self.model.cfg.layer_groups()
                    for kind in group.pattern)
+
+    # -------------------------------------------------------------- mesh
+    def _mesh_scope(self):
+        """Ambient-mesh context for every traced/jitted engine call.
+
+        With ``EngineConfig(mesh=...)`` set, entering the scope makes the
+        ``repro.distributed.sharding.shard`` constraints inside the model
+        live (head-axis KV placement, batch sharding); without one it is a
+        null context and every constraint no-ops — the single-device path
+        is untouched."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return shd.use_mesh(self.mesh)
+
+    def _place(self, tree):
+        """Commit a cache/pool tree to its mesh shardings (identity without
+        a mesh): head-axis placement for GQA caches/pages, replication for
+        latent/SSM state and scalars (``spec_for_cache``)."""
+        if self.mesh is None:
+            return tree
+        return jax.device_put(tree, shd.named_shardings(tree, self.mesh))
 
     # ------------------------------------------------------------ host IO
     def _fetch(self, tree):
@@ -224,6 +267,11 @@ class Engine:
         the done mask once per ``sync_interval`` chunk and stops early at
         that granularity — never per token.
         """
+        with self._mesh_scope():
+            return self._generate_impl(batch, n_steps)
+
+    def _generate_impl(self, batch: Dict[str, jax.Array], n_steps: int,
+                       ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
         self.last_stats = {"host_syncs": 0, "decode_steps": 0}
         cfg = self.model.cfg
         logits, state = self.prefill(batch)
@@ -263,12 +311,12 @@ class Engine:
         state = {"caches": transformer.init_caches(cfg, n_slots,
                                                    self.ecfg.max_len)}
         zeros = jnp.zeros((n_slots,), jnp.int32)
-        return PoolState(state=state,
-                         tok=jnp.full((n_slots,), self.ecfg.pad_token,
-                                      jnp.int32),
-                         cache_len=zeros,
-                         done=jnp.ones((n_slots,), bool),
-                         n_gen=zeros, budget=zeros)
+        return self._place(PoolState(
+            state=state,
+            tok=jnp.full((n_slots,), self.ecfg.pad_token, jnp.int32),
+            cache_len=zeros,
+            done=jnp.ones((n_slots,), bool),
+            n_gen=zeros, budget=zeros))
 
     def _pad_prompt(self, prompt: np.ndarray) -> Tuple[np.ndarray, int]:
         true_len = int(prompt.shape[0])
@@ -456,7 +504,7 @@ class Engine:
             n_gen=zeros, budget=zeros,
             block_tables=jnp.zeros((n_slots, geom.max_pages_per_slot),
                                    jnp.int32))
-        return pool, spill
+        return self._place(pool), self._place(spill)
 
     def _make_paged_admit_fn(self, geom: sched_mod.PageGeometry):
         """Jitted paged admission: prefill one prompt row at the pool's
@@ -878,7 +926,6 @@ class Engine:
                     pool, first = self._timed("prefill", self._paged_admit,
                                               pool, slot, req, geom)
                 req.status = sched_mod.DECODING
-                req.first_step = step_clock
                 pending_first.append((req, first))
             # chunk prefills AFTER every copy, in plan order (scheduler's
             # ordering contract); a final chunk arms its slot like an admit
@@ -887,7 +934,6 @@ class Engine:
                                           pool, step, geom)
                 if step.final:
                     step.req.status = sched_mod.DECODING
-                    step.req.first_step = step_clock
                     pending_first.append((step.req, first))
             # the boundary's page moves, as one host->device upload
             pool = dataclasses.replace(
@@ -915,6 +961,12 @@ class Engine:
             emitted = len(firsts)
             for (req, _), f in zip(pending_first, firsts):
                 req.tokens.append(int(f))
+                # the first token becomes real only at THIS drain — the
+                # boundary clock has already advanced past the decode/verify
+                # work, so ttft_emit_steps measures true first-token
+                # availability instead of the admission-time clock (which is
+                # 0 for anything admitted at the first boundary)
+                req.first_step = step_clock
             pending_first.clear()
             for slot in sorted(sch.active):
                 req = sch.active[slot]
@@ -970,6 +1022,12 @@ class Engine:
         ONE host sync to read the chunk's tokens + done mask, then frees
         drained slots so the next iteration refills them.
         """
+        with self._mesh_scope():
+            return self._serve_impl(requests, scheduler, max_steps=max_steps)
+
+    def _serve_impl(self, requests: Iterable[sched_mod.Request] = (),
+                    scheduler: Optional[sched_mod.Scheduler] = None, *,
+                    max_steps: Optional[int] = None) -> ServeReport:
         sch = scheduler or sched_mod.Scheduler.for_model(
             self.model.cfg, self.ecfg.max_len)
         for req in requests:
@@ -1007,7 +1065,6 @@ class Engine:
                     "prefill", self.admit_into_slot,
                     pool, slot, req.prompt, req.max_new_tokens)
                 req.status = sched_mod.DECODING
-                req.first_step = step_clock
                 pending_first.append((req, first))
             if chunked:
                 for step in sch.plan_prefill():
@@ -1015,7 +1072,6 @@ class Engine:
                         "prefill", self._exec_dense_chunk, pool, step)
                     if step.final:
                         step.req.status = sched_mod.DECODING
-                        step.req.first_step = step_clock
                         pending_first.append((step.req, first))
             if spec_k:
                 # one verify forward replaces the sync_interval-step scan;
@@ -1041,6 +1097,12 @@ class Engine:
             emitted = len(firsts)
             for (req, _), f in zip(pending_first, firsts):
                 req.tokens.append(int(f))
+                # the first token becomes real only at THIS drain — the
+                # boundary clock has already advanced past the decode/verify
+                # work, so ttft_emit_steps measures true first-token
+                # availability instead of the admission-time clock (which is
+                # 0 for anything admitted at the first boundary)
+                req.first_step = step_clock
             pending_first.clear()
             for slot in sorted(sch.active):
                 req = sch.active[slot]

@@ -136,6 +136,32 @@ def kv_bytes_per_token(cfg: ModelConfig, cache_dtype_bytes: int = 2) -> int:
     return total
 
 
+def kv_shards(cfg: ModelConfig, model_shards: int = 1) -> int:
+    """How many ways the KV pool actually shards over the `model` axis.
+
+    Head-axis page placement (DESIGN.md §Sharded serving) only scales pool
+    capacity when EVERY seq-scaling cache in the model carries a head axis
+    the mesh divides: GQA caches shard ``n_kv_heads`` ways at best; the MLA
+    latent and recurrent SSM state have no head axis and replicate. Mirrors
+    the divisibility gate in ``repro.models.attention`` (heads_divide) — a
+    pool priced ``m``-ways-bigger than the arrays actually shard would
+    OOM layer 0, so this is deliberately all-or-nothing.
+    """
+    if model_shards <= 1:
+        return 1
+    saw_attention = False
+    for group in cfg.layer_groups():
+        for kind in group.pattern:
+            if kind.attn == "mamba":
+                continue                      # per-slot state, replicated
+            if kind.attn == "mla":
+                return 1                      # latent pages replicate
+            if cfg.n_kv_heads % model_shards != 0:
+                return 1
+            saw_attention = True
+    return model_shards if saw_attention else 1
+
+
 def resident_bytes_per_slot(cfg: ModelConfig, state_dtype_bytes: int = 4) -> int:
     """Sequence-length-independent per-slot state (conv + SSM recurrences)."""
     total = 0
@@ -174,7 +200,8 @@ def derive_n_slots(cfg: ModelConfig, max_len: int, *,
                    target: Optional[HardwareTarget] = None,
                    fraction: float = 0.8, max_slots: int = 64,
                    cache_dtype_bytes: int = 2,
-                   pages: Optional["PageGeometry"] = None) -> int:
+                   pages: Optional["PageGeometry"] = None,
+                   model_shards: int = 1, data_shards: int = 1) -> int:
     """How many KV slots the pool sustains.
 
     Dense (``pages=None``): every slot reserves a full ``max_len`` KV slab,
@@ -182,15 +209,24 @@ def derive_n_slots(cfg: ModelConfig, max_len: int, *,
     be resident, so the same byte budget carries ``n_data_pages`` slots in
     the best case — the two-tier pool's capacity win. Admission by pages
     keeps actual residency honest.
+
+    Mesh shards scale the budget, not the per-slot price: a ``model_shards``
+    mesh holds ``kv_shards`` pool slices (head-axis placement), a
+    ``data_shards`` mesh splits the batch axis, so the aggregate is
+    ``device_count * per_device`` slots (the MaxText decode-microbenchmark
+    shape) — with ``max_slots`` scaled the same way so a single shard's cap
+    stays what it was. Both default to 1 = single-device budgets unchanged.
     """
+    scale = kv_shards(cfg, model_shards) * max(1, data_shards)
+    cap = max_slots * scale
     if pages is not None:
-        return int(max(1, min(pages.n_data_pages, max_slots)))
-    part = pool_partition(target, fraction=fraction)
+        return int(max(1, min(pages.n_data_pages, cap)))
+    part = pool_partition(target, fraction=fraction).scaled(scale)
     per_slot = part.required_bytes(
         kv_bytes_per_token(cfg, cache_dtype_bytes) * max_len,
         resident_bytes_per_slot(cfg))
     n = part.budget_bytes // max(per_slot, 1)
-    return int(max(1, min(n, max_slots)))
+    return int(max(1, min(n, cap)))
 
 
 def derive_prefill_chunk(cfg: ModelConfig, *,
@@ -329,7 +365,8 @@ def derive_page_geometry(cfg: ModelConfig, max_len: int, *,
                          page_tokens: int = 16, max_slots: int = 64,
                          cache_dtype_bytes: int = 2,
                          layer0_bytes: Optional[int] = None,
-                         layer1_bytes: Optional[int] = None) -> PageGeometry:
+                         layer1_bytes: Optional[int] = None,
+                         model_shards: int = 1) -> PageGeometry:
     """Page count, page size, and spill budget from the two-tier partition.
 
     ``layer0_bytes``/``layer1_bytes`` override the derived tier budgets —
@@ -337,19 +374,28 @@ def derive_page_geometry(cfg: ModelConfig, max_len: int, *,
     layer-0 byte budget, and to force the spill tier into play on small
     smoke runs. Page counts are capped at ``max_slots`` full-depth
     sequences so host-scale targets do not allocate absurd pools.
+
+    ``model_shards > 1`` prices pages against the mesh's aggregate pool:
+    head-axis placement (when :func:`kv_shards` says the caches actually
+    shard) means each shard physically holds ``1/kv_shards`` of every
+    page's bytes, so the same per-shard layer-0 budget carries
+    ``kv_shards``x the pages — the paper's die-level capacity split across
+    chips. Byte overrides are per-shard budgets and scale the same way;
+    the per-slot cap scales so one shard's worst case is unchanged.
     """
     pt = int(max(1, min(page_tokens, max_len)))
     p_max = -(-int(max_len) // pt)
     page_bytes = kv_bytes_per_token(cfg, cache_dtype_bytes) * pt
+    shards = kv_shards(cfg, model_shards)
     tiers = pool_tiers(target, fraction=fraction,
-                       layer1_fraction=layer1_fraction)
+                       layer1_fraction=layer1_fraction).scaled(shards)
     resident = resident_bytes_per_slot(cfg) * max_slots
     n0, n1 = tiers.units_per_tier(page_bytes, resident)
     if layer0_bytes is not None:
-        n0 = layer0_bytes // max(page_bytes, 1)
+        n0 = (layer0_bytes * shards) // max(page_bytes, 1)
     if layer1_bytes is not None:
-        n1 = layer1_bytes // max(page_bytes, 1)
-    cap = max_slots * p_max
+        n1 = (layer1_bytes * shards) // max(page_bytes, 1)
+    cap = max_slots * p_max * shards
     n0, n1 = min(int(n0), cap), min(int(n1), cap)
     if n0 < p_max:
         raise ValueError(
@@ -770,25 +816,33 @@ class Scheduler:
                   layer0_bytes: Optional[int] = None,
                   layer1_bytes: Optional[int] = None,
                   prefix_share: bool = False,
-                  chunk_prefill_tokens: Optional[int] = None) -> "Scheduler":
+                  chunk_prefill_tokens: Optional[int] = None,
+                  model_shards: int = 1,
+                  data_shards: int = 1) -> "Scheduler":
         """Size the slot table (and, when ``paged``, the two-tier page
         pools) from the target's CapacityPartition budget.
 
         ``chunk_prefill_tokens=0`` derives the per-boundary prefill budget
         from the same target via :func:`derive_prefill_chunk`; a positive
-        value pins it; None keeps whole-prompt admission."""
+        value pins it; None keeps whole-prompt admission.
+        ``model_shards``/``data_shards`` are the mesh axis sizes the engine
+        serves under: the budgets scale to the aggregate pool
+        (:func:`kv_shards`, :func:`derive_n_slots`) but the scheduler stays
+        otherwise mesh-oblivious — block tables, free lists and the prefix
+        index are global logical state, identical on every shard."""
         pages = None
         if paged:
             pages = derive_page_geometry(
                 cfg, max_len, target=target, fraction=fraction,
                 layer1_fraction=layer1_fraction, page_tokens=page_tokens,
                 max_slots=max_slots, layer0_bytes=layer0_bytes,
-                layer1_bytes=layer1_bytes)
+                layer1_bytes=layer1_bytes, model_shards=model_shards)
         if chunk_prefill_tokens == 0:
             chunk_prefill_tokens = derive_prefill_chunk(cfg, target=target)
         return cls(derive_n_slots(cfg, max_len, target=target,
                                   fraction=fraction, max_slots=max_slots,
-                                  pages=pages),
+                                  pages=pages, model_shards=model_shards,
+                                  data_shards=data_shards),
                    policy=policy, pages=pages, prefix_share=prefix_share,
                    chunk_prefill_tokens=chunk_prefill_tokens)
 

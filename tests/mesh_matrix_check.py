@@ -1,0 +1,102 @@
+"""Subprocess helper for the mesh=2 equivalence cells (NOT a pytest file).
+
+Run by tests/test_equivalence_matrix.py as a child python with
+``XLA_FLAGS=--xla_force_host_platform_device_count=2`` — the flag must be
+set before jax imports, and tests/conftest.py forbids it in the pytest
+process itself. Asserts that under a 1x2 (data x model) mesh every serving
+mode {paged, paged+share, chunked, speculate} emits tokens bit-identical
+to the SAME mesh engine's one-shot rollout, with one host sync per drain
+boundary, under the device->host transfer guard. Prints MESH_MATRIX_OK
+on success.
+"""
+
+import os
+import sys
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    sys.exit("run with XLA_FLAGS=--xla_force_host_platform_device_count=2")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.serve import scheduler as sm
+from repro.serve.engine import Engine, EngineConfig
+
+MAX_LEN = 64
+PT = 8
+CFG = ModelConfig(
+    name="tiny-mesh2", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=128,
+)
+
+#: (cell name, prefix_share, chunk_prefill_tokens, speculate_tokens)
+CELLS = (("paged", False, None, 0),
+         ("paged-share", True, None, 0),
+         ("chunked", False, 6, 0),
+         ("speculate", False, None, 4))
+
+
+def requests():
+    # mirrors tests/test_equivalence_matrix.py: every cell has work
+    rng = np.random.RandomState(11)
+    system = np.tile(rng.randint(2, 128, size=4).astype(np.int32), 4)
+    tails = [rng.randint(2, 128, size=n).astype(np.int32) for n in (7, 11)]
+    motif = np.tile(rng.randint(2, 128, size=5).astype(np.int32), 5)[:22]
+    rand = rng.randint(2, 128, size=13).astype(np.int32)
+    return [(np.concatenate([system, tails[0]]), 14),
+            (np.concatenate([system, tails[1]]), 12),
+            (motif, 16),
+            (rand, 10)]
+
+
+def main() -> None:
+    assert jax.device_count() >= 2, \
+        f"expected >=2 forced host devices, got {jax.devices()}"
+    mesh = make_host_mesh(1, 2)
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params,
+                 EngineConfig(max_len=MAX_LEN, sync_interval=4, mesh=mesh))
+    reqs = requests()
+    refs = []
+    for prompt, gen in reqs:
+        toks, _ = eng.generate({"tokens": jnp.asarray(prompt)[None]},
+                               n_steps=gen)
+        refs.append([int(t) for t in np.asarray(toks)[0]])
+    pb = sm.kv_bytes_per_token(CFG) * PT
+    geom = sm.PageGeometry(page_tokens=PT, n_pages=41, n_spill_pages=65,
+                           max_pages_per_slot=-(-MAX_LEN // PT),
+                           page_bytes=pb)
+    for name, share, chunk, spec in CELLS:
+        eng.ecfg.speculate_tokens = spec
+        try:
+            sch = sm.Scheduler(3, pages=geom, prefix_share=share,
+                               chunk_prefill_tokens=chunk)
+            rids = [sch.submit(p, g).rid for p, g in reqs]
+            with jax.transfer_guard_device_to_host("disallow"):
+                rep = eng.serve(scheduler=sch)
+        finally:
+            eng.ecfg.speculate_tokens = 0
+        # mesh size must not change the sync discipline: one explicit
+        # host read per drain boundary
+        assert rep.stats["host_syncs"] == rep.stats["chunks"], \
+            (name, rep.stats["host_syncs"], rep.stats["chunks"])
+        if spec:
+            assert rep.stats["spec_proposed"] > 0, name
+        for rid, ref in zip(rids, refs):
+            got = rep.outputs[rid]
+            assert got and got == ref[:len(got)], (name, rid, got, ref)
+        print(f"mesh=2 {name}: ok "
+              f"({rep.stats['host_syncs']} syncs, "
+              f"{sum(len(rep.outputs[r]) for r in rids)} tokens)")
+    print("MESH_MATRIX_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,9 +6,20 @@ Axes: {dense slab, paged pool, paged+prefix-share} x {chunked prefill
 off/on} x {speculate off/on} x {GQA, sliding-window, MLA} attention
 families — 36 cells, every serve under the device->host transfer guard
 with the one-host-sync-per-chunk invariant asserted.
+
+The mesh axis (ISSUE 8): a 1x1 mesh engine must be bit-identical to the
+no-mesh engine (same cells, same reference), and mesh=2 runs the cells in
+a subprocess (forcing host-platform devices requires XLA_FLAGS before jax
+imports, which conftest forbids in this process) where each mode must
+match the SAME mesh engine's one-shot rollout — within a mesh size the
+serving machinery moves no bits; across mesh sizes tensor-parallel
+all-reduces may legitimately reassociate.
 """
 
 import dataclasses
+import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -136,3 +147,67 @@ def test_matrix_cell_matches_one_shot(engines, references, name, mode,
         # continuous batching drains at EOS while one-shot pads EOS out to
         # the step budget, so the serve output is a prefix of the rollout
         assert got == ref[:len(got)], (name, mode, chunk, spec, rid)
+
+
+# ---------------------------------------------------------------------------
+# The mesh axis (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+#: (cell name, prefix_share, chunk_prefill_tokens, speculate_tokens)
+MESH_CELLS = (("paged", False, None, 0),
+              ("paged-share", True, None, 0),
+              ("chunked", False, 6, 0),
+              ("speculate", False, None, 4))
+
+
+@pytest.fixture(scope="module")
+def mesh1_engine():
+    """An engine configured with an explicit 1x1 mesh — the identity."""
+    from repro.launch.mesh import make_host_mesh
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    return Engine(model, params,
+                  EngineConfig(max_len=MAX_LEN, sync_interval=4,
+                               mesh=make_host_mesh(1, 1)))
+
+
+@pytest.mark.parametrize("cell", MESH_CELLS, ids=[c[0] for c in MESH_CELLS])
+def test_mesh1_cell_matches_unmeshed_one_shot(references, mesh1_engine,
+                                              cell):
+    """mesh=1 is bit-identical to NO mesh: the reference rollouts here come
+    from the unmeshed engine, so any spec-induced numeric drift at
+    trivial mesh sizes fails the cell."""
+    _, share, chunk, spec = cell
+    eng = mesh1_engine
+    refs = references(TINY.name)
+    eng.ecfg.speculate_tokens = spec
+    try:
+        sch = sm.Scheduler(3, pages=_geometry(TINY), prefix_share=share,
+                           chunk_prefill_tokens=chunk)
+        rids = [sch.submit(p, g).rid for p, g in REQS]
+        with jax.transfer_guard_device_to_host("disallow"):
+            rep = eng.serve(scheduler=sch)
+    finally:
+        eng.ecfg.speculate_tokens = 0
+    assert rep.stats["host_syncs"] == rep.stats["chunks"]
+    for rid, ref in zip(rids, refs):
+        got = rep.outputs[rid]
+        assert len(got) > 0
+        assert got == ref[:len(got)], (cell, rid)
+
+
+def test_mesh2_matrix_in_subprocess():
+    """mesh=2 on forced host-platform devices, in a child python (the XLA
+    device-count flag only takes effect before jax imports)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    repo = os.path.dirname(here)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2").strip()
+    env["PYTHONPATH"] = (os.path.join(repo, "src") + os.pathsep
+                         + env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(here, "mesh_matrix_check.py")],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert proc.returncode == 0, (proc.stdout[-2000:], proc.stderr[-2000:])
+    assert "MESH_MATRIX_OK" in proc.stdout

@@ -1,0 +1,117 @@
+"""Mesh-sharded serving budgets: per-shard pool scaling, CLI mesh parsing.
+
+The scheduler stays mesh-oblivious — block tables and free lists are global
+logical state — except for the budget scale: an m-way mesh with head-axis
+page placement exposes ``kv_shards(cfg, m)`` x the pool bytes and slots
+(per-device budgets multiply, per the MaxText ``device_count * per_device``
+convention). The mesh=1/mesh=2 serving equivalence cells live in
+tests/test_equivalence_matrix.py.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core.target import CapacityPartition, TieredPartition
+from repro.launch.mesh import parse_mesh
+from repro.models.config import ModelConfig
+from repro.serve import scheduler as sm
+
+TINY = ModelConfig(
+    name="tiny-mesh", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=128,
+)
+TINY_MLA = dataclasses.replace(TINY, name="tiny-mesh-mla", n_kv_heads=4,
+                               use_mla=True, kv_lora_rank=16,
+                               qk_nope_head_dim=16, qk_rope_head_dim=8,
+                               v_head_dim=16)
+
+MAX_LEN = 64
+L0 = sm.kv_bytes_per_token(TINY) * 8 * MAX_LEN
+
+
+def test_parse_mesh():
+    assert parse_mesh("2") == ((1, 2), ("data", "model"))
+    assert parse_mesh("1") == ((1, 1), ("data", "model"))
+    assert parse_mesh("2x4") == ((2, 4), ("data", "model"))
+    assert parse_mesh("2x4x2", "pod,data,model") \
+        == ((2, 4, 2), ("pod", "data", "model"))
+
+
+def test_parse_mesh_rejects_bad_specs():
+    with pytest.raises(ValueError):
+        parse_mesh("2x2x2")             # 3 sizes, 2 axes
+    with pytest.raises(ValueError):
+        parse_mesh("0x2")               # sizes must be >= 1
+    with pytest.raises(ValueError):
+        parse_mesh("2", "")             # no axis names
+
+
+def test_capacity_partition_scaled():
+    part = CapacityPartition(capacity_bytes=1 << 20, fraction=0.5)
+    assert part.scaled(1) is part
+    doubled = part.scaled(2)
+    assert doubled.capacity_bytes == 2 << 20
+    assert doubled.fraction == part.fraction      # only capacity scales
+    with pytest.raises(ValueError):
+        part.scaled(0)
+
+
+def test_tiered_partition_scaled():
+    tiers = TieredPartition(layer0=CapacityPartition(capacity_bytes=1024),
+                            layer1=CapacityPartition(capacity_bytes=4096))
+    assert tiers.scaled(1) is tiers
+    t2 = tiers.scaled(2)
+    assert t2.layer0.capacity_bytes == 2048
+    assert t2.layer1.capacity_bytes == 8192
+
+
+def test_kv_shards_gqa_divisibility():
+    assert sm.kv_shards(TINY, 1) == 1
+    assert sm.kv_shards(TINY, 2) == 2
+    # 2 KV heads cannot split 3 ways: all-or-nothing fallback
+    assert sm.kv_shards(TINY, 3) == 1
+
+
+def test_kv_shards_mla_replicates():
+    """MLA latent pages carry no head axis — capacity must NOT be priced
+    bigger than the arrays actually shard."""
+    assert sm.kv_shards(TINY_MLA, 2) == 1
+
+
+def test_page_geometry_scales_per_shard():
+    g1 = sm.derive_page_geometry(TINY, MAX_LEN, page_tokens=8,
+                                 max_slots=32, layer0_bytes=L0)
+    g2 = sm.derive_page_geometry(TINY, MAX_LEN, page_tokens=8,
+                                 max_slots=32, layer0_bytes=L0,
+                                 model_shards=2)
+    assert g2.page_bytes == g1.page_bytes         # pages stay page-sized
+    # data pages double (page 0 is the reserved null page in both)
+    assert g2.n_pages - 1 == 2 * (g1.n_pages - 1)
+    assert g2.n_spill_pages - 1 == 2 * (g1.n_spill_pages - 1)
+
+
+def test_page_geometry_mla_does_not_scale():
+    kw = dict(page_tokens=8, max_slots=32,
+              layer0_bytes=sm.kv_bytes_per_token(TINY_MLA) * 8 * MAX_LEN)
+    g1 = sm.derive_page_geometry(TINY_MLA, MAX_LEN, **kw)
+    g2 = sm.derive_page_geometry(TINY_MLA, MAX_LEN, model_shards=2, **kw)
+    assert g2.n_pages == g1.n_pages
+
+
+def test_derive_n_slots_scales_with_mesh():
+    g1 = sm.derive_page_geometry(TINY, MAX_LEN, page_tokens=8,
+                                 max_slots=32, layer0_bytes=L0)
+    g2 = sm.derive_page_geometry(TINY, MAX_LEN, page_tokens=8,
+                                 max_slots=32, layer0_bytes=L0,
+                                 model_shards=2)
+    s1 = sm.derive_n_slots(TINY, MAX_LEN, pages=g1, max_slots=32)
+    s2 = sm.derive_n_slots(TINY, MAX_LEN, pages=g2, max_slots=32,
+                           model_shards=2)
+    assert s1 >= 1
+    assert s2 == 2 * s1
+    # the max_slots cap scales with the mesh too (it is per-shard)
+    s2_capped = sm.derive_n_slots(TINY, MAX_LEN, pages=g2, max_slots=s1,
+                                  model_shards=2)
+    assert s2_capped == 2 * s1

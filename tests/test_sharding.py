@@ -86,6 +86,56 @@ def test_named_shardings_tree(mesh):
     assert sh["norm"]["scale"].spec == P(None)
 
 
+class _Mesh2:
+    """Fake 1x2 (data x model) mesh for spec-only tests."""
+    axis_names = ("data", "model")
+    shape = {"data": 1, "model": 2}
+
+
+def test_model_axis_size_and_heads_divide():
+    assert shd.model_axis_size(_Mesh2()) == 2
+    assert shd.model_axis_size() == 1          # no ambient mesh
+    assert shd.heads_divide(4, _Mesh2())
+    assert not shd.heads_divide(3, _Mesh2())   # 3 heads, 2-way axis
+    assert not shd.heads_divide(4)             # no ambient mesh
+
+
+def test_cache_spec_head_axis_layouts():
+    m = _Mesh2()
+    # paged pool (n_pages, hkv, pt, hd): head axis shards, pages replicate
+    assert shd.spec_for_cache("cache/layer0/k", (41, 2, 8, 16), m) \
+        == P(None, "model", None, None)
+    # stacked dense slab (n_repeat, B, hkv, max_len, hd)
+    assert shd.spec_for_cache("groups/blocks/v", (3, 4, 2, 64, 16), m) \
+        == P(None, None, "model", None, None)
+    # non-dividing head count falls back to replication
+    assert shd.spec_for_cache("k", (41, 3, 8, 16), m) \
+        == P(None, None, None, None)
+
+
+def test_cache_spec_state_leaves_replicate():
+    m = _Mesh2()
+    # MLA latent pages (n_pages, pt, lat): no head axis
+    assert shd.spec_for_cache("cache/ckv", (41, 8, 16), m) == P(None, None, None)
+    assert shd.spec_for_cache("cache/krope", (41, 8, 8), m) == P(None, None, None)
+    # recurrent SSM state
+    assert shd.spec_for_cache("cache/ssm", (4, 2, 16, 16), m) \
+        == P(None, None, None, None)
+    assert shd.spec_for_cache("cache/conv", (4, 2, 4, 16), m) \
+        == P(None, None, None, None)
+
+
+def test_cache_spec_only_matches_exact_leaf(mesh):
+    # "wkv_a" ends in neither "k" nor "v" as a path COMPONENT: param rules
+    # still apply, cache rules don't
+    assert shd.spec_for_cache("attn/wkv_a", (64, 32), _Mesh2()) is None
+    assert shd.spec_for_param("attn/wk", (64, 64), mesh) == P("data", "model")
+    # and spec_for_param routes real cache leaves through the cache rule
+    # instead of replicating them
+    assert shd.spec_for_param("cache/k", (41, 2, 8, 16), _Mesh2()) \
+        == P(None, "model", None, None)
+
+
 def test_shard_noop_without_mesh():
     x = jnp.ones((8, 8))
     y = shd.shard(x, "data", None)
