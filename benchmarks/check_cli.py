@@ -9,10 +9,12 @@ the admission-stall head-to-head (DESIGN.md §Chunked prefill), and its
 ``--speculate`` family is the contract for the speculative-decoding
 head-to-head (DESIGN.md §Speculative decoding), and its ``--mesh``
 family is the contract for the mesh-sharded scaling head-to-head
-(DESIGN.md §Sharded serving). The stream driver ``repro.launch.serve``
+(DESIGN.md §Sharded serving), and its ``--disaggregate`` family is the
+contract for the prefill/decode role-split head-to-head (DESIGN.md
+§Disaggregated serving). The stream driver ``repro.launch.serve``
 is checked too: it must expose ``--chunk-prefill-tokens``,
-``--speculate-tokens`` and ``--mesh`` so the serving knobs documented
-in docs/SERVING.md stay wired. Runs each script's
+``--speculate-tokens``, ``--mesh`` and ``--disaggregate`` so the
+serving knobs documented in docs/SERVING.md stay wired. Runs each script's
 ``--help`` in-process and greps the usage text.
 
     PYTHONPATH=src python -m benchmarks.check_cli
@@ -40,7 +42,9 @@ EXTRA_FLAGS = {
                        "--require-flat-p99", "--flat-p99-tol", "--repeats",
                        "--speculate", "--speculate-tokens",
                        "--require-speculate-win", "--mesh", "--mesh-axes",
-                       "--require-scaling", "--emit-bench"),
+                       "--require-scaling", "--disaggregate",
+                       "--require-disagg-win", "--disagg-win-min",
+                       "--emit-bench"),
 }
 
 #: non-benchmark CLI entry points checked for specific flags only (no
@@ -48,7 +52,7 @@ EXTRA_FLAGS = {
 EXTRA_CLIS = (
     (os.path.join("src", "repro", "launch", "serve.py"),
      ("--chunk-prefill-tokens", "--paged", "--prefix-share",
-      "--speculate-tokens", "--mesh", "--mesh-axes")),
+      "--speculate-tokens", "--mesh", "--mesh-axes", "--disaggregate")),
 )
 
 

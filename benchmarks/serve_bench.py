@@ -61,10 +61,25 @@ outputs bit-exact against the same engine's one-shot rollout, and one
 host sync per drain boundary on BOTH sides — sharding must not add
 sync points.
 
+``--disaggregate`` runs the prefill/decode role-split head-to-head
+(DESIGN.md §Disaggregated serving): mixed traffic — a short-request decode
+stream plus several long prompts admitted in chunks — served twice in the
+SAME layer-0 byte budget, combined engine vs disaggregated roles. The
+gated metric is **decode-role tokens/s**: decode tokens over the wall the
+decode clock actually spans. Combined, that clock is the full boundary
+(prefill chunks ride the decode engine's dispatch stream, so every decode
+consumer observes the prompt work); disaggregated, it is the decode
+role's own dispatch + drain (both runs phase-timed so each phase blocks on
+its device work — the role split is measured, not simulated). The same
+split drives the token-weighted inter-token p99: ``--require-disagg-win``
+gates on decode tok/s >= ``--disagg-win-min`` x combined AT a p99 no worse
+than ``1 + --flat-p99-tol`` x combined, bit-identical outputs, and at most
+one host sync per role per boundary.
+
 Every record carries pool bytes and pages-in-use next to throughput, so the
 dense-vs-paged comparison shows capacity, not just speed. Emits
 ``benchmarks/artifacts/serve_bench.json``; ``--emit-bench`` additionally
-writes the flat cross-PR metric file ``BENCH_8.json`` at the repo root
+writes the flat cross-PR metric file ``BENCH_9.json`` at the repo root
 (diffed by ``tools/diff_bench.py``).
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--target NAME] [--paged]
@@ -74,7 +89,8 @@ writes the flat cross-PR metric file ``BENCH_8.json`` at the repo root
         [--chunk-prefill-tokens N] [--sync-interval N] [--require-flat-p99]
         [--flat-p99-tol F] [--speculate] [--speculate-tokens K]
         [--require-speculate-win] [--mesh SPEC] [--mesh-axes NAMES]
-        [--require-scaling] [--emit-bench] [...]
+        [--require-scaling] [--disaggregate] [--require-disagg-win]
+        [--disagg-win-min F] [--emit-bench] [...]
 """
 
 from __future__ import annotations
@@ -87,7 +103,7 @@ from typing import Dict, List, Optional
 from benchmarks.common import add_target_arg, fmt_table, save_artifact, \
     target_scope
 
-BENCH_ID = 8
+BENCH_ID = 9
 
 
 def _emit_bench_json(meta: Dict, metrics: Dict) -> str:
@@ -727,6 +743,233 @@ def run_speculate(target_name=None, arch: str = "qwen2.5-3b",
     return "\n".join([table] + lines)
 
 
+def run_disagg(target_name=None, arch: str = "qwen2.5-3b",
+               n_requests: int = 24, prompt_len: int = 16,
+               gen_len: int = 16, n_slots: Optional[int] = None,
+               seed: int = 0, page_tokens: int = 8,
+               layer0_bytes: Optional[int] = None,
+               layer1_bytes: Optional[int] = None, max_slots: int = 32,
+               long_prompt_len: int = 512, n_long: int = 3,
+               long_gen_len: int = 8, chunk_prefill_tokens: int = 0,
+               sync_interval: int = 8, disagg_win_min: float = 1.15,
+               flat_p99_tol: float = 0.10,
+               require_disagg_win: bool = False,
+               emit_bench: bool = False) -> str:
+    """Disaggregated-roles head-to-head (see module doc): mixed
+    long-prompt + decode traffic through the SAME paged pool geometry,
+    combined engine vs prefill/decode role split.
+
+    Both runs are phase-timed (every phase blocks on its device work), so
+    the decode clock is measured, not simulated: combined, each boundary's
+    prefill chunks execute inside the decode engine's dispatch stream and
+    the full boundary wall is the inter-token gap every decode consumer
+    observes; disaggregated, the prompt chunks run on the prefill role and
+    the decode consumer's clock spans only the decode dispatch + the
+    decode role's drain fetch (``boundary_decode_wall_s``).
+    """
+    import jax
+    import numpy as np
+    from repro.configs import get_reduced
+    from repro.core.target import get_target
+    from repro.models import build_model
+    from repro.serve.engine import Engine, EngineConfig
+    from repro.serve.scheduler import (Scheduler, derive_page_geometry,
+                                       derive_prefill_chunk,
+                                       kv_bytes_per_token, percentile,
+                                       synthetic_stream)
+
+    with target_scope(target_name):
+        target = get_target()
+        cfg = get_reduced(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        shorts = synthetic_stream(n_requests, prompt_len, gen_len,
+                                  cfg.vocab_size, seed)
+        rng = np.random.RandomState(seed + 1)
+        longs = [{"prompt": rng.randint(2, cfg.vocab_size,
+                                        size=long_prompt_len
+                                        ).astype(np.int32),
+                  "max_new_tokens": long_gen_len}
+                 for _ in range(max(1, n_long))]
+        # interleave: every batch of short requests is followed by a long
+        # prompt, so prompt chunks keep landing while the pool decodes
+        stream = []
+        per = max(1, len(shorts) // (len(longs) + 1))
+        li = 0
+        for i, spec in enumerate(shorts):
+            stream.append(spec)
+            if (i + 1) % per == 0 and li < len(longs):
+                stream.append(longs[li])
+                li += 1
+        stream.extend(longs[li:])
+        chunk = chunk_prefill_tokens or derive_prefill_chunk(cfg)
+        max_len = long_prompt_len + max(gen_len, long_gen_len)
+        n_slots = n_slots or 8
+        if layer0_bytes is None:
+            resident = (n_slots * (prompt_len + gen_len + page_tokens)
+                        + n_long * (long_prompt_len + long_gen_len
+                                    + page_tokens))
+            layer0_bytes = kv_bytes_per_token(cfg) * resident
+        geom = derive_page_geometry(cfg, max_len, page_tokens=page_tokens,
+                                    max_slots=max_slots,
+                                    layer0_bytes=layer0_bytes,
+                                    layer1_bytes=layer1_bytes)
+
+        def one(disagg: bool) -> Dict:
+            # a fresh engine per mode keeps phase/role accounting separate;
+            # phase_timing on BOTH sides so each phase blocks identically
+            engine = Engine(model, params,
+                            EngineConfig(max_len=max_len,
+                                         sync_interval=sync_interval,
+                                         phase_timing=True,
+                                         disaggregate=disagg))
+
+            def serve_once():
+                sch = Scheduler(n_slots=n_slots, pages=geom,
+                                chunk_prefill_tokens=chunk,
+                                disaggregate=disagg)
+                for spec in stream:
+                    sch.submit(spec["prompt"], spec["max_new_tokens"])
+                t0 = time.monotonic()
+                rep = engine.serve(scheduler=sch)
+                return rep, time.monotonic() - t0
+
+            serve_once()                      # warmup: compile
+            rep, dt = serve_once()
+            st = rep.stats
+            # the decode consumer's clock: full boundary combined, the
+            # decode role's own span disaggregated
+            walls = (st["boundary_decode_wall_s"] if disagg
+                     else st["boundary_wall_s"])
+            decode_wall = sum(walls)
+            samples: List[float] = []
+            for w, t in zip(walls, st["boundary_tokens"]):
+                samples.extend([w / sync_interval] * t)
+            n_tokens = sum(len(r.tokens) for r in rep.requests)
+            decode_tokens = st.get(
+                "decode_tokens",
+                n_tokens - sum(1 for r in rep.requests if r.tokens))
+            rec = {
+                "mode": "disaggregated" if disagg else "combined",
+                "wall_s": dt,
+                "n_tokens": n_tokens,
+                "decode_tokens": decode_tokens,
+                "decode_wall_s": decode_wall,
+                # the gated metric: decode tokens over the decode clock
+                "decode_tok_per_s": (decode_tokens / decode_wall
+                                     if decode_wall else 0.0),
+                "intertoken_p50_ms": percentile(samples, 50) * 1e3,
+                "intertoken_p99_ms": percentile(samples, 99) * 1e3,
+                "tok_per_s": n_tokens / dt if dt else 0.0,
+                "boundaries": len(st["boundary_wall_s"]),
+                "decode_steps": st["decode_steps"],
+                "host_syncs": st["host_syncs"],
+                "completed": st["drained"],
+                "n_slots": n_slots,
+                "pool_bytes": st["pool_bytes"],
+                "pages_high_water": st["pages_high_water"],
+                "preemptions": st["preemptions"],
+                "prefill_chunks": st["prefill_chunks"],
+                "handovers": st["handovers"],
+                "handover_pages": st["handover_pages"],
+                "phase_s": dict(st.get("phase_s", {})),
+                "outputs": {r.rid: list(r.tokens) for r in rep.requests},
+            }
+            if disagg:
+                rec["host_syncs_by_role"] = dict(st["host_syncs_by_role"])
+                rec["role_s"] = dict(st.get("role_s", {}))
+                for role, n in rec["host_syncs_by_role"].items():
+                    if n > rec["boundaries"]:
+                        raise SystemExit(
+                            f"serve_bench --disaggregate: {role} role made "
+                            f"{n} host syncs over {rec['boundaries']} "
+                            "boundaries — at most one per role per boundary")
+            return rec
+
+        comb = one(False)
+        dis = one(True)
+
+    outputs = (comb.pop("outputs"), dis.pop("outputs"))
+    identical = outputs[0] == outputs[1]
+    if not identical:
+        raise SystemExit(
+            "serve_bench --disaggregate: disaggregated outputs differ from "
+            "the combined engine — the role split must be bit-exact")
+    ratio = (dis["decode_tok_per_s"] / comb["decode_tok_per_s"]
+             if comb["decode_tok_per_s"] else 0.0)
+    p99_ratio = (dis["intertoken_p99_ms"]
+                 / max(comb["intertoken_p99_ms"], 1e-9))
+    artifact = {
+        "arch": cfg.name, "target": target.name,
+        "n_requests": len(stream), "long_prompt_len": long_prompt_len,
+        "n_long": n_long, "chunk_prefill_tokens": chunk,
+        "sync_interval": sync_interval, "layer0_bytes": layer0_bytes,
+        "decode_tok_per_s_ratio": ratio, "p99_ratio": p99_ratio,
+        "disagg_win_min": disagg_win_min, "flat_p99_tol": flat_p99_tol,
+        "outputs_bit_identical": True,
+        "combined": comb, "disaggregated": dis,
+    }
+    save_artifact("serve_disagg_bench.json", artifact)
+    lines = [
+        f"disaggregated roles ({dis['handovers']} handovers, "
+        f"{dis['handover_pages']} pages moved zero-copy, same "
+        f"{dis['pool_bytes']} layer-0 bytes): decode "
+        f"{dis['decode_tok_per_s']:.1f} vs {comb['decode_tok_per_s']:.1f} "
+        f"tok/s (x{ratio:.2f}), inter-token p99 "
+        f"{dis['intertoken_p99_ms']:.2f} vs "
+        f"{comb['intertoken_p99_ms']:.2f} ms (x{p99_ratio:.2f}, tol "
+        f"{flat_p99_tol:.0%}), role syncs "
+        f"{dis['host_syncs_by_role']}, outputs bit-identical"]
+    if emit_bench:
+        metrics = {"decode_tok_per_s_ratio": ratio,
+                   "p99_ratio": p99_ratio}
+        for r in (comb, dis):
+            metrics.update({f"{r['mode']}.{k}": v for k, v in r.items()})
+            metrics.update({f"{r['mode']}.phase_{k}_s": v
+                            for k, v in r["phase_s"].items()})
+        path = _emit_bench_json(
+            {"mode": "disaggregate", "arch": cfg.name,
+             "target": target.name, "n_requests": len(stream),
+             "long_prompt_len": long_prompt_len,
+             "chunk_prefill_tokens": chunk,
+             "sync_interval": sync_interval}, metrics)
+        lines.append(f"bench metrics -> {path}")
+    if require_disagg_win:
+        if ratio < disagg_win_min:
+            raise SystemExit(
+                "serve_bench --require-disagg-win: expected >="
+                f"{disagg_win_min:.2f}x decode tok/s from the role split; "
+                f"got x{ratio:.2f} — the stream's prompt work is too thin "
+                "to matter (lengthen --long-prompt-len or add --n-long)")
+        if p99_ratio > 1 + flat_p99_tol:
+            raise SystemExit(
+                "serve_bench --require-disagg-win: disaggregated p99 "
+                f"inter-token moved x{p99_ratio:.2f} vs combined "
+                f"(tolerance {flat_p99_tol:.0%}) — the decode role is not "
+                "isolated from prompt work")
+    phase_keys = ("prefill", "insert", "generate", "drain", "handover")
+    rows = [[r["mode"], f"{r['decode_tok_per_s']:.1f}",
+             f"{r['intertoken_p50_ms']:.2f}/{r['intertoken_p99_ms']:.2f}",
+             r["n_tokens"], r["decode_tokens"], r["handovers"],
+             r["prefill_chunks"], r["preemptions"],
+             f"{r['host_syncs']}/{r['boundaries']}",
+             f"{r['wall_s']*1e3:.0f} ms"] for r in (comb, dis)]
+    table = fmt_table(
+        ["mode", "dec tok/s", "it p50/p99 ms", "tokens", "dec toks",
+         "handover", "chunks", "preempt", "syncs/bnd", "wall"],
+        rows, title=f"Disaggregated serve bench — {cfg.name}, "
+                    f"{len(stream)} requests ({n_long} x "
+                    f"{long_prompt_len}-token prompts), chunk={chunk} "
+                    f"({target.name})")
+    phase_rows = [[r["mode"]] + [f"{r['phase_s'].get(k, 0.0)*1e3:.0f}"
+                                 for k in phase_keys]
+                  for r in (comb, dis)]
+    phase_table = fmt_table(
+        ["mode"] + [f"{k} ms" for k in phase_keys], phase_rows,
+        title="Phase breakdown (both runs phase-timed)")
+    return "\n".join([table, phase_table] + lines)
+
+
 def run_mesh(target_name=None, arch: str = "qwen2.5-3b",
              n_requests: int = 32, prompt_len: int = 16,
              gen_len: int = 12, seed: int = 0, page_tokens: int = 8,
@@ -1010,6 +1253,21 @@ def main(argv=None) -> int:
                     help="fail unless the --mesh run shows >=1.7x modeled "
                          "decode scaling with one-shot-exact outputs and "
                          "one host sync per drain boundary")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="run the prefill/decode role-split head-to-head "
+                         "instead of the mode comparison: mixed long-"
+                         "prompt + decode traffic through the same paged "
+                         "pool, combined engine vs disaggregated roles")
+    ap.add_argument("--n-long", type=int, default=3,
+                    help="long prompts interleaved into the --disaggregate "
+                         "stream")
+    ap.add_argument("--require-disagg-win", action="store_true",
+                    help="fail unless the role split shows >= "
+                         "--disagg-win-min x decode tok/s at inter-token "
+                         "p99 within --flat-p99-tol of combined, with "
+                         "bit-identical outputs")
+    ap.add_argument("--disagg-win-min", type=float, default=1.15,
+                    help="decode tok/s ratio --require-disagg-win gates on")
     ap.add_argument("--emit-bench", action="store_true",
                     help="write the flat cross-PR metric file "
                          "BENCH_%d.json at the repo root" % BENCH_ID)
@@ -1030,6 +1288,20 @@ def main(argv=None) -> int:
             mesh_spec=args.mesh, mesh_axes=args.mesh_axes,
             sync_interval=args.sync_interval,
             require_scaling=args.require_scaling,
+            emit_bench=args.emit_bench))
+        return 0
+    if args.disaggregate or args.require_disagg_win:
+        print(run_disagg(
+            args.target, args.arch, args.requests, args.prompt_len,
+            args.gen_len, args.slots, args.seed,
+            page_tokens=args.page_tokens, layer0_bytes=args.layer0_bytes,
+            layer1_bytes=args.layer1_bytes, max_slots=args.max_slots,
+            long_prompt_len=args.long_prompt_len, n_long=args.n_long,
+            chunk_prefill_tokens=args.chunk_prefill_tokens,
+            sync_interval=args.sync_interval or 8,
+            disagg_win_min=args.disagg_win_min,
+            flat_p99_tol=args.flat_p99_tol,
+            require_disagg_win=args.require_disagg_win,
             emit_bench=args.emit_bench))
         return 0
     if args.speculate:

@@ -24,6 +24,13 @@ Two modes through the same Engine (pooled KV cache):
     requests; ``0`` derives the budget from the target
     (``derive_prefill_chunk``). Chunk counters (chunks, max boundary
     prefill tokens) join the report (DESIGN.md §Chunked prefill).
+  * ``--stream N --paged --disaggregate`` — disaggregated prefill/decode
+    engine roles over the same paged pool (DESIGN.md §Disaggregated
+    serving): admissions and prompt chunks run on the prefill role, the
+    batched decode on the decode role, and at each request's final prefill
+    chunk its pages hand over by a zero-copy block-table-row move.
+    Handover and per-role host-sync counters join the report; outputs are
+    bit-identical to the combined engine.
   * ``--speculate-tokens K`` (any stream mode) — self-drafting speculative
     decoding: each drain boundary proposes up to K draft tokens per live
     slot by prompt lookup and scores them all in ONE batched verify
@@ -118,6 +125,14 @@ def run_stream(engine: Engine, scheduler: Scheduler, stream: list) -> dict:
         rec.update({k: stats[k] for k in (
             "prefix_hits", "prefix_misses", "shared_prefix_tokens",
             "cow_copies", "mapped_high_water")})
+    if stats.get("disaggregate"):
+        rec.update({
+            "disaggregate": True,
+            "handovers": stats["handovers"],
+            "handover_pages": stats["handover_pages"],
+            "host_syncs_by_role": dict(stats["host_syncs_by_role"]),
+            "decode_tokens": stats["decode_tokens"],
+        })
     return rec
 
 
@@ -150,6 +165,11 @@ def main(argv=None) -> int:
                     help="override the layer-0 (hot tier) page-pool budget")
     ap.add_argument("--layer1-bytes", type=int, default=None,
                     help="override the layer-1 (spill tier) budget")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="split serving into prefill-role and decode-role "
+                         "engines over the shared paged pool; pages hand "
+                         "over at the final prefill chunk (requires "
+                         "--paged; bit-identical outputs)")
     ap.add_argument("--prefix-share", action="store_true",
                     help="share cached prompt prefixes across requests "
                          "(paged mode; drives a shared-system-prompt stream)")
@@ -177,6 +197,9 @@ def main(argv=None) -> int:
     if args.prefix_share and not args.paged:
         ap.error("--prefix-share requires --paged (shared pages live in "
                  "the paged pool)")
+    if args.disaggregate and not args.paged:
+        ap.error("--disaggregate requires --paged (page handover moves "
+                 "block-table rows, which the dense pool does not have)")
 
     cfg = get_config(args.arch) if args.full else get_reduced(args.arch)
     if args.stream and (cfg.family == "encdec" or cfg.frontend_len):
@@ -198,6 +221,7 @@ def main(argv=None) -> int:
                         EngineConfig(max_len=max_len,
                                      sync_interval=args.sync_interval,
                                      speculate_tokens=spec_k or 0,
+                                     disaggregate=args.disaggregate,
                                      mesh=mesh))
 
         if args.stream:
@@ -217,7 +241,8 @@ def main(argv=None) -> int:
                 chunk = derive_prefill_chunk(cfg)
             sched = Scheduler(n_slots=n_slots, pages=pages,
                               prefix_share=args.prefix_share,
-                              chunk_prefill_tokens=chunk)
+                              chunk_prefill_tokens=chunk,
+                              disaggregate=args.disaggregate)
             if args.prefix_share:
                 system_len = args.system_len or max(1, args.prompt_len // 2)
                 if system_len >= args.prompt_len:
@@ -237,6 +262,8 @@ def main(argv=None) -> int:
             rec = run_stream(engine, sched, stream)
             mode = ("paged+share" if args.prefix_share
                     else "paged" if args.paged else "dense")
+            if args.disaggregate:
+                mode += "+disagg"
             print(f"arch={cfg.name} stream={args.stream} mode={mode} "
                   f"slots={rec['n_slots']} (max reuse {rec['max_slot_reuse']})")
             if data_shards * model_shards > 1:
@@ -273,6 +300,14 @@ def main(argv=None) -> int:
                       f"(acceptance {rec['spec_acceptance_rate']:.2f}); "
                       f"{rec['n_tokens']} tokens over "
                       f"{rec['decode_steps_total']} verify forwards")
+            if args.disaggregate:
+                roles = rec["host_syncs_by_role"]
+                print(f"disaggregated roles: {rec['handovers']} handovers "
+                      f"({rec['handover_pages']} pages moved, 0 bytes "
+                      f"copied); host syncs prefill "
+                      f"{roles.get('prefill', 0)} / decode "
+                      f"{roles.get('decode', 0)}; "
+                      f"{rec['decode_tokens']} decode-role tokens")
             if args.paged:
                 print(f"pages: {rec['pages_high_water']}/{rec['n_pages']} "
                       f"layer-0 high water ({rec['pool_bytes']} B), "

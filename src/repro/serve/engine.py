@@ -26,8 +26,34 @@ Two serving surfaces share one decode substrate:
     paper's two-die capacity split, applied to serving. A scheduler built
     with ``prefix_share=True`` additionally executes prefix-index hits as
     **suffix-only prefills** over ref-counted shared pages
-    (:meth:`_shared_paged_admit`), turning shared-prefix TTFT compute from
-    O(prompt) into O(suffix) — DESIGN.md §Prefix sharing & copy-on-write.
+    (:meth:`PrefillRole.shared_paged_admit`), turning shared-prefix TTFT
+    compute from O(prompt) into O(suffix) — DESIGN.md §Prefix sharing &
+    copy-on-write.
+
+The engine itself is a composition of *roles* over a shared pool
+(DESIGN.md §Disaggregated serving):
+
+  * :class:`EngineCore` — jit-fn caches, mesh scope, device placement,
+    host IO (the single ``_fetch`` read path), timing, and the one
+    bucketing rule every jit-cache key goes through.
+  * :class:`PrefillRole` — admissions, suffix-only prefills, and chunked
+    prefill steps (compute-heavy, prompt-shaped work).
+  * :class:`DecodeRole` — the batched decode / speculative-verify chunks
+    (pool-sweep, latency-shaped work).
+  * :class:`~repro.serve.pool.PoolManager` — pool construction, the
+    layer-0 <-> layer-1 tier copies, and slot ownership (the
+    ``transfer_ownership`` page-handover primitive).
+
+A combined :class:`Engine` runs both roles in one loop — every test and
+benchmark goes through the role split. ``EngineConfig(disaggregate=True)``
+routes the SAME loop by role: admissions and prompt chunks are issued (and
+their host syncs attributed) by the prefill role, decode by the decode
+role, and at a request's final prefill chunk the scheduler emits a
+``HandoverStep`` the engine executes as a zero-copy ownership flip —
+the slot's block-table row starts appearing in the decode role's uploaded
+table; no KV bytes move. This is the serving analogue of the paper's
+compute-die / memory-die split: one shared pool address space, physically
+distinct engines for the two phases of the workload.
 
 The cache layout is the pooled-memory design (DESIGN.md §Pooled KV cache):
 sequence dim sharded across the `model` axis, so aggregate pod HBM is one
@@ -55,6 +81,11 @@ from repro.distributed import sharding as shd
 from repro.models.api import Model
 from repro.serve import scheduler as sched_mod
 from repro.serve import speculate as spec_mod
+from repro.serve.pool import (DECODE_ROLE, PREFILL_ROLE, PoolManager,
+                              PoolState)
+
+__all__ = ["Engine", "EngineConfig", "EngineCore", "PrefillRole",
+           "DecodeRole", "PoolState", "ServeReport"]
 
 
 @dataclasses.dataclass
@@ -78,9 +109,9 @@ class EngineConfig:
     :func:`repro.serve.scheduler.derive_speculate_tokens`.
 
     ``phase_timing`` turns on the per-phase wall-clock breakdown
-    (prefill / insert / generate / drain) in ``last_stats`` — benchmark
-    mode only: each phase blocks on its device work, which serializes the
-    dispatch pipeline the serve loop otherwise overlaps.
+    (prefill / insert / generate / drain / handover) in ``last_stats`` —
+    benchmark mode only: each phase blocks on its device work, which
+    serializes the dispatch pipeline the serve loop otherwise overlaps.
 
     ``mesh`` (a ``jax.sharding.Mesh``, e.g. from
     :func:`repro.launch.mesh.make_host_mesh`) runs every jitted engine
@@ -94,6 +125,14 @@ class EngineConfig:
     one-host-sync-per-drain-boundary discipline is mesh-invariant: the
     block-table upload (host->device) and the drain fetch are the only
     host <-> device edges per boundary, regardless of mesh size.
+
+    ``disaggregate`` splits serving into prefill-role and decode-role
+    engines over the shared paged pool (DESIGN.md §Disaggregated serving):
+    the scheduler routes PREFILLING slots to the prefill role and emits a
+    page handover at each request's final prefill chunk; each role issues
+    at most ONE host sync per drain boundary, and outputs stay
+    bit-identical to the combined engine. Requires the paged pool
+    (``Scheduler(pages=...)``).
     """
 
     max_len: int
@@ -105,27 +144,7 @@ class EngineConfig:
     speculate_tokens: int = 0
     phase_timing: bool = False
     mesh: Optional[Any] = None
-
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class PoolState:
-    """Device-side state of the KV slot pool (batch axis = slot index).
-
-    ``block_tables`` is ``None`` for the dense slot-slab pool; in paged
-    mode it is the ``(S, P)`` int32 map from each slot's logical page index
-    to a physical page of the flat layer-0 page pool (null page 0 for
-    unmapped entries). The host rebuilds and uploads it at every drain
-    boundary from the scheduler's page mappings.
-    """
-
-    state: Dict[str, Any]       # model caches (+aux), slot- or page-major
-    tok: jax.Array              # (S,) int32 — last emitted token per slot
-    cache_len: jax.Array        # (S,) int32 — filled KV prefix per slot
-    done: jax.Array             # (S,) bool — drained/empty slot mask
-    n_gen: jax.Array            # (S,) int32 — tokens emitted per occupant
-    budget: jax.Array           # (S,) int32 — occupant's max_new_tokens
-    block_tables: Optional[jax.Array] = None    # (S, P) int32, paged only
+    disaggregate: bool = False
 
 
 @dataclasses.dataclass
@@ -140,7 +159,17 @@ class ServeReport:
         return {r.rid: r.tokens for r in self.requests}
 
 
-class Engine:
+class EngineCore:
+    """The substrate both engine roles share: parameters (mesh-placed),
+    kernel plans, jit-fn caches, device placement, host IO, and timing.
+
+    Keeping every jit cache here — not on the roles — means a combined
+    engine and a disaggregated one compile the SAME function set, and the
+    equivalence matrix's bit-identity cells reuse compilations across
+    modes. The core is deliberately thin: it never looks at a scheduler
+    and runs no serve loop.
+    """
+
     def __init__(self, model: Model, params: Any, ecfg: EngineConfig):
         self.model = model
         self.mesh = ecfg.mesh
@@ -156,7 +185,7 @@ class Engine:
         self._chunk_fns: Dict[int, Any] = {}        # one-shot decode chunks
         self._pool_chunk_fns: Dict[int, Any] = {}   # pooled decode chunks
         self._verify_fns: Dict[int, Any] = {}       # speculative verify, by k
-        self._admit = self._make_admit_fn()
+        self._admit = None                          # dense admission
         self._paged_admit_fns: Dict[Any, Any] = {}  # keyed by page geometry
         self._suffix_admit_fns: Dict[Any, Any] = {}  # + static prefix_len
         # chunked prefill (DESIGN.md §Chunked prefill): jit variants keyed
@@ -164,17 +193,7 @@ class Engine:
         # runtime cursor — O(log chunk_tokens) compiles total
         self._chunk_prefill_fns: Dict[Any, Any] = {}        # paged
         self._dense_chunk_prefill_fns: Dict[Any, Any] = {}  # dense
-        self._tier_copy = None      # jitted layer-0 <-> layer-1 copy
         self.last_stats: Dict[str, Any] = {}
-        if ecfg.prompt_pad_multiple and self._has_ssm():
-            raise ValueError(
-                "prompt_pad_multiple requires attention-only models: SSM "
-                "recurrences integrate pad tokens (see EngineConfig)")
-        if ecfg.speculate_tokens and self._has_ssm():
-            raise ValueError(
-                "speculative decoding requires attention-only models: "
-                "recurrent SSM state cannot roll back rejected draft "
-                "tokens (docs/SERVING.md)")
 
     def _has_ssm(self) -> bool:
         return any(kind.attn == "mamba"
@@ -203,48 +222,447 @@ class Engine:
         return jax.device_put(tree, shd.named_shardings(tree, self.mesh))
 
     # ------------------------------------------------------------ host IO
-    def _fetch(self, tree):
+    def _fetch(self, tree, role: Optional[str] = None):
         """The ONLY device->host read path. One explicit transfer per call,
-        issued at batch-drain boundaries; counted for the regression test."""
+        issued at batch-drain boundaries; counted for the regression test.
+        ``role`` attributes the sync when serving disaggregated — the
+        per-role sync discipline is each role issues at most one fetch per
+        boundary."""
         self.last_stats["host_syncs"] = self.last_stats.get("host_syncs", 0) + 1
+        if role is not None:
+            by = self.last_stats.setdefault("host_syncs_by_role", {})
+            by[role] = by.get(role, 0) + 1
         return jax.device_get(tree)
 
-    def _timed(self, phase: str, fn, *args):
+    def _timed(self, phase: str, fn, *args, role: Optional[str] = None):
         """Run ``fn`` and, in ``phase_timing`` mode, charge its wall time
-        (blocked on device completion) to ``last_stats['phase_s'][phase]``.
-        Off by default: blocking per phase would serialize the dispatch
-        pipeline the serve loop overlaps."""
+        (blocked on device completion) to ``last_stats['phase_s'][phase]``
+        — and, when ``role`` is given, to ``last_stats['role_s'][role]``
+        (the disaggregated per-role busy breakdown). Off by default:
+        blocking per phase would serialize the dispatch pipeline the serve
+        loop overlaps."""
         if not self.ecfg.phase_timing:
             return fn(*args)
         t0 = time.perf_counter()
         out = fn(*args)
         jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
         acc = self.last_stats.setdefault("phase_s", {})
-        acc[phase] = acc.get(phase, 0.0) + (time.perf_counter() - t0)
+        acc[phase] = acc.get(phase, 0.0) + dt
+        if role is not None:
+            racc = self.last_stats.setdefault("role_s", {})
+            racc[role] = racc.get(role, 0.0) + dt
         return out
 
+    # --------------------------------------------------------- bucketing
     @staticmethod
-    def _bucket_len(n: int, limit: int) -> int:
-        """Next power of two >= n, clamped so the chunk write stays inside
-        the cache depth — the static lengths chunk prefill compiles for."""
-        return min(1 << (int(n) - 1).bit_length(), limit)
+    def bucket_len(n: int, limit: int, *, start: int = 0,
+                   multiple: Optional[int] = None) -> int:
+        """THE bucketing rule for every shape-keyed jit cache.
 
-    # ---------------------------------------------------------- one-shot
-    def prefill(self, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
-        logits, state = self.model.prefill(self.params, batch,
-                                           self.ecfg.max_len,
-                                           plans=self.plans)
-        return logits, state
+        Default mode: next power of two >= ``n``, clamped to ``limit`` —
+        the static lengths chunk prefill compiles for. When the padded
+        chunk would overrun the cache depth from ``start`` (the slot-depth
+        edge), the exact length is used instead: a traced-start cache
+        write would clamp backwards over earlier chunks (rare tail
+        variant; never hit while prompt + chunk fit the depth).
 
-    def _decode_chunk(self, n: int):
-        """Jitted: n decode steps with on-device EOS masking (lax.scan)."""
-        if n not in self._chunk_fns:
-            cfg, ecfg, plans = self.model.cfg, self.ecfg, self.plans
+        ``multiple`` mode: round up to a multiple instead (the
+        ``prompt_pad_multiple`` admission bucketing), clamped to ``limit``
+        so the padded buffer still fits the slot's KV depth.
+
+        One helper, three former call sites (`_bucket_len`, `_pad_prompt`,
+        the chunk-prefill edge) — the compile-cache key sequence is pinned
+        by ``tests/test_chunked_prefill.py``.
+        """
+        n = int(n)
+        if multiple:
+            return min(-(-n // multiple) * multiple, limit)
+        padded = min(1 << (n - 1).bit_length(), limit)
+        if start + padded > limit:
+            return n
+        return padded
+
+
+class PrefillRole:
+    """The prefill-role engine: admissions (whole-prompt, suffix-only, and
+    chunked) over the shared pool. Prompt-shaped, compute-heavy work — the
+    "logic die" half of the role split. Owns no device state: pools come
+    in and go out of every call; jitted fns live in the shared core."""
+
+    name = PREFILL_ROLE
+
+    def __init__(self, core: EngineCore, pools: PoolManager):
+        self.core = core
+        self.pools = pools
+
+    def _pad_prompt(self, prompt: np.ndarray) -> Tuple[np.ndarray, int]:
+        core = self.core
+        true_len = int(prompt.shape[0])
+        if true_len > core.ecfg.max_len:
+            raise ValueError(
+                f"prompt of {true_len} tokens exceeds the KV slot depth "
+                f"(max_len={core.ecfg.max_len})")
+        m = core.ecfg.prompt_pad_multiple
+        if not m:
+            return prompt, true_len
+        padded = core.bucket_len(true_len, core.ecfg.max_len, multiple=m)
+        if padded == true_len:
+            return prompt, true_len
+        out = np.full((padded,), core.ecfg.pad_token, np.int32)
+        out[:true_len] = prompt
+        return out, true_len
+
+    def _make_admit_fn(self):
+        """Jitted admission: prefill one prompt row and scatter it into the
+        pool at ``slot`` — in-flight slots are untouched (pure row insert).
+        One function; jit's shape-keyed cache retraces per padded prompt
+        length (bounded by ``prompt_pad_multiple`` bucketing)."""
+        core = self.core
+        cfg, ecfg, plans = core.model.cfg, core.ecfg, core.plans
+
+        def run(params, tokens, true_len, budget, slot, pool: PoolState):
+            last = (true_len - 1)[None]                     # (1,) gather
+            logits, row = core.model.prefill(
+                params, {"tokens": tokens}, ecfg.max_len, plans=plans,
+                last_pos=last)
+            first = jnp.argmax(logits[0, -1, :cfg.vocab_size])
+            first = first.astype(jnp.int32)
+            state = core.model.slot_update(pool.state, row, slot)
+            kv_len = true_len                               # filled prefix
+            done0 = ((first == ecfg.eos_token) | (budget <= 1)
+                     | (kv_len >= ecfg.max_len))
+            return PoolState(
+                state=state,
+                tok=pool.tok.at[slot].set(first),
+                cache_len=pool.cache_len.at[slot].set(kv_len),
+                done=pool.done.at[slot].set(done0),
+                n_gen=pool.n_gen.at[slot].set(1),
+                budget=pool.budget.at[slot].set(budget)), first
+
+        return jax.jit(run)
+
+    def admit_into_slot(self, pool: PoolState, slot: int,
+                        prompt: np.ndarray, max_new_tokens: int
+                        ) -> Tuple[PoolState, jax.Array]:
+        """Prefill ``prompt`` into ``slot``. Returns (pool, first_token) —
+        the token stays on device; callers fetch it at the next drain."""
+        core = self.core
+        if core._admit is None:
+            core._admit = self._make_admit_fn()
+        tokens, true_len = self._pad_prompt(np.asarray(prompt, np.int32))
+        return core._admit(core.params, tokens[None],
+                           jnp.asarray(true_len, jnp.int32),
+                           jnp.asarray(max_new_tokens, jnp.int32),
+                           jnp.asarray(slot, jnp.int32), pool)
+
+    # ------------------------------------------------------ paged admission
+    def _make_paged_admit_fn(self, geom: sched_mod.PageGeometry):
+        """Jitted paged admission: prefill one prompt row at the pool's
+        page-aligned depth, cut it into pages and scatter them at the
+        slot's block-table row. In-flight pages are untouched."""
+        core = self.core
+        cfg, ecfg, plans = core.model.cfg, core.ecfg, core.plans
+        depth, pt = geom.depth, geom.page_tokens
+
+        def run(params, tokens, true_len, budget, slot, block_row,
+                pool: PoolState):
+            last = (true_len - 1)[None]                 # (1,) gather
+            logits, row = core.model.prefill(
+                params, {"tokens": tokens}, depth, plans=plans, last_pos=last)
+            first = jnp.argmax(logits[0, -1, :cfg.vocab_size])
+            first = first.astype(jnp.int32)
+            state = core.model.slot_update_paged(pool.state, row, slot,
+                                                 block_row, pt)
+            kv_len = true_len
+            done0 = ((first == ecfg.eos_token) | (budget <= 1)
+                     | (kv_len >= ecfg.max_len))
+            return dataclasses.replace(
+                pool, state=state,
+                tok=pool.tok.at[slot].set(first),
+                cache_len=pool.cache_len.at[slot].set(kv_len),
+                done=pool.done.at[slot].set(done0),
+                n_gen=pool.n_gen.at[slot].set(1),
+                budget=pool.budget.at[slot].set(budget)), first
+
+        return jax.jit(run)
+
+    def paged_admit(self, pool: PoolState, slot: int,
+                    req: sched_mod.Request, geom: sched_mod.PageGeometry
+                    ) -> Tuple[PoolState, jax.Array]:
+        core = self.core
+        tokens, true_len = self._pad_prompt(np.asarray(req.prompt, np.int32))
+        block_row = self.pools.pad_pages(req.pages, geom.max_pages_per_slot)
+        key = (geom.depth, geom.page_tokens)
+        if key not in core._paged_admit_fns:
+            core._paged_admit_fns[key] = self._make_paged_admit_fn(geom)
+        return core._paged_admit_fns[key](
+            core.params, tokens[None], jnp.asarray(true_len, jnp.int32),
+            jnp.asarray(req.max_new_tokens, jnp.int32),
+            jnp.asarray(slot, jnp.int32), block_row, pool)
+
+    def _make_suffix_admit_fn(self, geom: sched_mod.PageGeometry,
+                              prefix_len: int):
+        """Jitted cache-hit admission: prefill ONLY the unmatched suffix.
+
+        The shared prefix pages (plus the copy-on-write source, when the
+        match ends mid-page) are gathered into a dense batch-1 view, the
+        suffix runs through ``Model.prefill`` at a static ``prefix_len``
+        offset (RoPE positions and causal masks continue where the shared
+        prefix ends — bit-identical to the same rows of a full prefill),
+        and the result is scattered back through ``write_row``, whose
+        entries for shared pages point at null page 0: shared history is
+        never written, and the frontier page lands in the request's fresh
+        private page (the COW copy rides the gather->scatter cycle).
+        TTFT compute drops from O(prompt) to O(suffix).
+        """
+        core = self.core
+        cfg, ecfg, plans = core.model.cfg, core.ecfg, core.plans
+        depth, pt = geom.depth, geom.page_tokens
+
+        def run(params, tokens, true_len, budget, slot, read_row, write_row,
+                pool: PoolState):
+            prefix = core.model.gather_row_paged(pool.state, read_row, pt)
+            last = (true_len - 1)[None]                 # (1,) gather
+            logits, row = core.model.prefill(
+                params, {"tokens": tokens}, depth, plans=plans, last_pos=last,
+                prefix_len=prefix_len, prefix_state=prefix)
+            first = jnp.argmax(logits[0, -1, :cfg.vocab_size])
+            first = first.astype(jnp.int32)
+            state = core.model.slot_update_paged(pool.state, row, slot,
+                                                 write_row, pt)
+            kv_len = true_len + prefix_len
+            done0 = ((first == ecfg.eos_token) | (budget <= 1)
+                     | (kv_len >= ecfg.max_len))
+            return dataclasses.replace(
+                pool, state=state,
+                tok=pool.tok.at[slot].set(first),
+                cache_len=pool.cache_len.at[slot].set(kv_len),
+                done=pool.done.at[slot].set(done0),
+                n_gen=pool.n_gen.at[slot].set(1),
+                budget=pool.budget.at[slot].set(budget)), first
+
+        return jax.jit(run)
+
+    def shared_paged_admit(self, pool: PoolState, slot: int,
+                           req: sched_mod.Request,
+                           geom: sched_mod.PageGeometry
+                           ) -> Tuple[PoolState, jax.Array]:
+        """Execute a prefix-index-hit admission planned by the scheduler.
+
+        ``read_row`` maps the pages the suffix attends over: the shared
+        full pages, plus — when the match ends mid-page — the COW *source*
+        page at the frontier index. ``write_row`` maps where suffix K/V
+        lands: null (page 0) under the shared prefix, the request's own
+        fresh pages from the frontier on. The frontier page is therefore
+        read from the canonical copy but written to a private one.
+        """
+        core = self.core
+        pt, p_max = geom.page_tokens, geom.max_pages_per_slot
+        suffix = np.asarray(req.prompt, np.int32)[req.prefix_len:]
+        tokens, true_len = self._pad_prompt(suffix)
+        if req.prefix_len + tokens.shape[0] > geom.depth:
+            tokens = tokens[:geom.depth - req.prefix_len]   # trim pad only
+        f_w = req.prefix_len // pt                  # frontier logical page
+        read = np.zeros((p_max,), np.int32)
+        read[:req.n_shared] = req.pages[:req.n_shared]
+        if req.cow_src >= 0:
+            read[f_w] = req.cow_src
+        write = np.zeros((p_max,), np.int32)
+        write[f_w:len(req.pages)] = req.pages[f_w:]
+        key = (geom.depth, pt, req.prefix_len, tokens.shape[0])
+        if key not in core._suffix_admit_fns:
+            core._suffix_admit_fns[key] = self._make_suffix_admit_fn(
+                geom, req.prefix_len)
+        return core._suffix_admit_fns[key](
+            core.params, tokens[None], jnp.asarray(true_len, jnp.int32),
+            jnp.asarray(req.max_new_tokens, jnp.int32),
+            jnp.asarray(slot, jnp.int32), jnp.asarray(read),
+            jnp.asarray(write), pool)
+
+    # ------------------------------------------------- chunked prefill
+    def _make_chunk_prefill_fn(self, geom: sched_mod.PageGeometry,
+                               n_tok: int, emit_first: bool):
+        """Jitted partial-prefill step: run ONE chunk of a prompt and
+        scatter its K/V into the request's pages (DESIGN.md §Chunked
+        prefill).
+
+        The chunk cursor ``start`` and true length ``true_n`` are TRACED
+        int32 scalars — the jit cache is keyed only by the power-of-two
+        padded chunk length (plus ``emit_first``), never by where in the
+        prompt the chunk lands, so a 4k-token prompt compiles the same
+        O(log chunk_tokens) variants as a 64-token one. A traced cursor
+        rides the same resumed-prefill path as the static-offset suffix
+        admission: positions and causal masks continue at ``start``
+        (bit-identical rows), and the traced offset forces the jnp
+        reference attention (the Pallas kernel needs a static grid
+        offset). Non-final chunks only advance ``cache_len`` — the slot
+        stays done-masked, so the interleaved decode chunk freezes it for
+        free. The final chunk emits the first output token and arms the
+        slot exactly like an unchunked admission.
+        """
+        core = self.core
+        cfg, ecfg, plans = core.model.cfg, core.ecfg, core.plans
+        depth, pt = geom.depth, geom.page_tokens
+
+        def run(params, tokens, start, true_n, budget, slot, read_row,
+                write_row, pool: PoolState):
+            prefix = core.model.gather_row_paged(pool.state, read_row, pt)
+            last = (true_n - 1)[None]                   # (1,) gather
+            logits, row = core.model.prefill(
+                params, {"tokens": tokens}, depth, plans=plans, last_pos=last,
+                prefix_len=start, prefix_state=prefix)
+            state = core.model.slot_update_paged(pool.state, row, slot,
+                                                 write_row, pt)
+            new_len = start + true_n
+            if not emit_first:
+                # done=True is NOT redundant: a slot freed by preempting a
+                # mid-decode request still carries done=False on device —
+                # without the mask the interleaved decode chunk would
+                # decode the half-prefilled slot
+                return dataclasses.replace(
+                    pool, state=state,
+                    cache_len=pool.cache_len.at[slot].set(new_len),
+                    done=pool.done.at[slot].set(True),
+                ), jnp.zeros((), jnp.int32)
+            first = jnp.argmax(logits[0, -1, :cfg.vocab_size])
+            first = first.astype(jnp.int32)
+            done0 = ((first == ecfg.eos_token) | (budget <= 1)
+                     | (new_len >= ecfg.max_len))
+            return dataclasses.replace(
+                pool, state=state,
+                tok=pool.tok.at[slot].set(first),
+                cache_len=pool.cache_len.at[slot].set(new_len),
+                done=pool.done.at[slot].set(done0),
+                n_gen=pool.n_gen.at[slot].set(1),
+                budget=pool.budget.at[slot].set(budget)), first
+
+        return jax.jit(run)
+
+    def exec_prefill_chunk(self, pool: PoolState,
+                           step: sched_mod.PrefillStep,
+                           geom: sched_mod.PageGeometry
+                           ) -> Tuple[PoolState, jax.Array]:
+        """Execute one planned :class:`~repro.serve.scheduler.PrefillStep`.
+
+        ``read_row`` maps every page holding KV the chunk attends over:
+        the request's own pages below the cursor — which are the SHARED
+        prefix pages for its leading entries — plus the copy-on-write
+        source when the first chunk starts at a mid-page prefix match.
+        ``write_row`` maps the pages the chunk's K/V lands in, from the
+        cursor's page on (whole-page scatter re-writes the frontier page's
+        earlier tokens with the very content just gathered, so a COW source
+        is copied private on the first chunk for free)."""
+        core = self.core
+        req = step.req
+        pt, p_max = geom.page_tokens, geom.max_pages_per_slot
+        n_pad = core.bucket_len(step.n_tokens, geom.depth, start=step.start)
+        tokens = np.full((n_pad,), core.ecfg.pad_token, np.int32)
+        tokens[:step.n_tokens] = np.asarray(req.prompt, np.int32)[
+            step.start:step.start + step.n_tokens]
+        f_r = -(-step.start // pt)              # pages covering [0, start)
+        read = np.zeros((p_max,), np.int32)
+        read[:f_r] = req.pages[:f_r]
+        if step.start == req.prefix_len and req.cow_src >= 0:
+            read[step.start // pt] = req.cow_src
+        f_w = step.start // pt                  # cursor's (frontier) page
+        end_pages = geom.pages_for(step.start + step.n_tokens)
+        write = np.zeros((p_max,), np.int32)
+        write[f_w:end_pages] = req.pages[f_w:end_pages]
+        key = (geom.depth, pt, n_pad, step.final)
+        if key not in core._chunk_prefill_fns:
+            core._chunk_prefill_fns[key] = self._make_chunk_prefill_fn(
+                geom, n_pad, step.final)
+        return core._chunk_prefill_fns[key](
+            core.params, tokens[None], jnp.asarray(step.start, jnp.int32),
+            jnp.asarray(step.n_tokens, jnp.int32),
+            jnp.asarray(req.max_new_tokens, jnp.int32),
+            jnp.asarray(step.slot, jnp.int32), jnp.asarray(read),
+            jnp.asarray(write), pool)
+
+    def _make_dense_chunk_prefill_fn(self, n_tok: int, emit_first: bool):
+        """Dense-pool analog of :meth:`_make_chunk_prefill_fn`: the chunk
+        attends over the slot's own slab (earlier chunks' K/V gathered by
+        :meth:`~repro.models.api.Model.gather_row`) and the whole updated
+        row is scattered back. Same traced cursor, same bucketed jit key."""
+        core = self.core
+        cfg, ecfg, plans = core.model.cfg, core.ecfg, core.plans
+
+        def run(params, tokens, start, true_n, budget, slot,
+                pool: PoolState):
+            prefix = core.model.gather_row(pool.state, slot)
+            last = (true_n - 1)[None]                   # (1,) gather
+            logits, row = core.model.prefill(
+                params, {"tokens": tokens}, ecfg.max_len, plans=plans,
+                last_pos=last, prefix_len=start, prefix_state=prefix)
+            state = core.model.slot_update(pool.state, row, slot)
+            new_len = start + true_n
+            if not emit_first:
+                return dataclasses.replace(
+                    pool, state=state,
+                    cache_len=pool.cache_len.at[slot].set(new_len),
+                    done=pool.done.at[slot].set(True),
+                ), jnp.zeros((), jnp.int32)
+            first = jnp.argmax(logits[0, -1, :cfg.vocab_size])
+            first = first.astype(jnp.int32)
+            done0 = ((first == ecfg.eos_token) | (budget <= 1)
+                     | (new_len >= ecfg.max_len))
+            return dataclasses.replace(
+                pool, state=state,
+                tok=pool.tok.at[slot].set(first),
+                cache_len=pool.cache_len.at[slot].set(new_len),
+                done=pool.done.at[slot].set(done0),
+                n_gen=pool.n_gen.at[slot].set(1),
+                budget=pool.budget.at[slot].set(budget)), first
+
+        return jax.jit(run)
+
+    def exec_dense_chunk(self, pool: PoolState, step: sched_mod.PrefillStep
+                         ) -> Tuple[PoolState, jax.Array]:
+        core = self.core
+        req = step.req
+        n_pad = core.bucket_len(step.n_tokens, core.ecfg.max_len,
+                                start=step.start)
+        tokens = np.full((n_pad,), core.ecfg.pad_token, np.int32)
+        tokens[:step.n_tokens] = np.asarray(req.prompt, np.int32)[
+            step.start:step.start + step.n_tokens]
+        key = (n_pad, step.final)
+        if key not in core._dense_chunk_prefill_fns:
+            core._dense_chunk_prefill_fns[key] = \
+                self._make_dense_chunk_prefill_fn(n_pad, step.final)
+        return core._dense_chunk_prefill_fns[key](
+            core.params, tokens[None], jnp.asarray(step.start, jnp.int32),
+            jnp.asarray(step.n_tokens, jnp.int32),
+            jnp.asarray(req.max_new_tokens, jnp.int32),
+            jnp.asarray(step.slot, jnp.int32), pool)
+
+
+class DecodeRole:
+    """The decode-role engine: batched decode and speculative-verify
+    chunks over the shared pool. Pool-sweep, latency-shaped work — the
+    "memory die" half of the role split. In disaggregated mode its
+    uploaded block table carries rows ONLY for slots it owns (handover
+    makes a row appear); done-masked slots it does not own write their
+    junk K/V to the null page instead of their own pages — positions at
+    or past a prefill cursor are never read, so outputs are unchanged."""
+
+    name = DECODE_ROLE
+
+    def __init__(self, core: EngineCore, pools: PoolManager):
+        self.core = core
+        self.pools = pools
+
+    def decode_chunk(self, n: int):
+        """Jitted: n decode steps with on-device EOS masking (lax.scan) —
+        the one-shot :meth:`Engine.generate` substrate."""
+        core = self.core
+        if n not in core._chunk_fns:
+            cfg, ecfg, plans = core.model.cfg, core.ecfg, core.plans
 
             def run(params, tok, state, cache_len, done):
                 def step(carry, _):
                     tok, state, cache_len, done = carry
-                    logits, state = self.model.decode_step(
+                    logits, state = core.model.decode_step(
                         params, tok[:, None], state, cache_len, plans=plans)
                     nxt = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
                     tok = jnp.where(done, ecfg.eos_token, nxt)
@@ -256,8 +674,199 @@ class Engine:
                 tok, state, cache_len, done = carry
                 return jnp.moveaxis(toks, 0, 1), tok, state, cache_len, done
 
-            self._chunk_fns[n] = jax.jit(run)
-        return self._chunk_fns[n]
+            core._chunk_fns[n] = jax.jit(run)
+        return core._chunk_fns[n]
+
+    def pool_chunk(self, n: int):
+        """Jitted: n batched decode steps over ALL slots with per-slot
+        cache_len vectors and on-device done masking. Emits per-step
+        (token, was_active) pairs; the host sees them only after the chunk."""
+        core = self.core
+        if n not in core._pool_chunk_fns:
+            cfg, ecfg, plans = core.model.cfg, core.ecfg, core.plans
+
+            def run(params, pool: PoolState):
+                def step(pool: PoolState, _):
+                    logits, state = core.model.decode_step(
+                        params, pool.tok[:, None], pool.state, pool.cache_len,
+                        plans=plans, block_tables=pool.block_tables)
+                    nxt = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
+                    was_done = pool.done
+                    tok = jnp.where(was_done, ecfg.eos_token,
+                                    nxt).astype(jnp.int32)
+                    n_gen = jnp.where(was_done, pool.n_gen, pool.n_gen + 1)
+                    cache_len = jnp.where(was_done, pool.cache_len,
+                                          pool.cache_len + 1)
+                    done = (was_done | (tok == ecfg.eos_token)
+                            | (n_gen >= pool.budget)
+                            | (cache_len >= ecfg.max_len))
+                    new = PoolState(state=state, tok=tok, cache_len=cache_len,
+                                    done=done, n_gen=n_gen,
+                                    budget=pool.budget,
+                                    block_tables=pool.block_tables)
+                    return new, (tok, ~was_done)
+
+                pool, (toks, valid) = jax.lax.scan(step, pool, None, length=n)
+                return pool, toks, valid        # (n, S) each
+
+            core._pool_chunk_fns[n] = jax.jit(run)
+        return core._pool_chunk_fns[n]
+
+    # ------------------------------------------- speculative verify chunk
+    def verify_fn(self, k: int):
+        """Jitted speculative boundary: ONE width-(k+1) verify forward over
+        ALL slots, folded into the pool's done-masked updates (DESIGN.md
+        §Speculative decoding).
+
+        Each slot's verify row is its last emitted token followed by its k
+        host-proposed drafts, so the forward's argmax column j is exactly
+        what the j-th sequential :meth:`pool_chunk` step would have
+        produced — :func:`repro.serve.speculate.fold_acceptance` then
+        emits the longest agreeing prefix plus one correction token and
+        rolls ``cache_len`` back over the rejected suffix. Output shape
+        matches :meth:`pool_chunk`'s ``(steps, S)`` tokens/valid pair
+        (steps = k+1 candidate positions), so the drain loop is unchanged.
+        Done slots emit nothing; their junk K/V writes land in their own
+        slab/pages (or the null page) exactly like the single-token path's
+        frozen decode.
+        """
+        core = self.core
+        if k not in core._verify_fns:
+            cfg, ecfg, plans = core.model.cfg, core.ecfg, core.plans
+
+            def run(params, pool: PoolState, drafts, dlen):
+                tokens = jnp.concatenate([pool.tok[:, None], drafts], axis=1)
+                logits, state = core.model.verify_step(
+                    params, tokens, pool.state, pool.cache_len, plans=plans,
+                    block_tables=pool.block_tables)
+                targets = jnp.argmax(logits[:, :, :cfg.vocab_size],
+                                     axis=-1).astype(jnp.int32)   # (S, k+1)
+                fold = spec_mod.fold_acceptance(
+                    targets, drafts, dlen, done=pool.done, n_gen=pool.n_gen,
+                    budget=pool.budget, cache_len=pool.cache_len,
+                    max_len=ecfg.max_len, eos_token=ecfg.eos_token)
+                toks = jnp.where(fold.valid, targets, ecfg.eos_token)
+                new = PoolState(state=state, tok=fold.tok,
+                                cache_len=fold.cache_len, done=fold.done,
+                                n_gen=fold.n_gen, budget=pool.budget,
+                                block_tables=pool.block_tables)
+                return new, toks.astype(jnp.int32).T, fold.valid.T
+
+            core._verify_fns[k] = jax.jit(run)
+        return core._verify_fns[k]
+
+    def build_drafts(self, sch: sched_mod.Scheduler, k: int
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-side draft proposal for every live slot (drain boundary).
+
+        Proposes from the slot's host-mirrored prompt+emitted context via
+        :func:`repro.serve.speculate.propose_ngram`. Slots without a
+        proposable context — free, mid-chunked-prefill, or admitted this
+        very boundary (first token still on device in ``pending_first``) —
+        get ``dlen = 0``, which the fold degrades to an ordinary
+        single-token step.
+        """
+        drafts = np.zeros((sch.n_slots, k), np.int32)
+        dlen = np.zeros((sch.n_slots,), np.int32)
+        for slot, req in sch.active.items():
+            if req.status != sched_mod.DECODING or not req.tokens:
+                continue
+            ctx = np.concatenate([np.asarray(req.prompt, np.int32),
+                                  np.asarray(req.tokens, np.int32)])
+            d = spec_mod.propose_ngram(ctx, k)
+            drafts[slot, :d.shape[0]] = d
+            dlen[slot] = d.shape[0]
+        return drafts, dlen
+
+
+class Engine:
+    """The combined engine: one :class:`EngineCore`, one
+    :class:`~repro.serve.pool.PoolManager`, a :class:`PrefillRole` and a
+    :class:`DecodeRole` — plus the serve loops that drive them. With
+    ``EngineConfig(disaggregate=True)`` (paged pool required) the same
+    loop routes work, host syncs, and timing by role and executes the
+    scheduler's page handovers; otherwise both roles run as one engine
+    with byte-identical behavior to the pre-split code."""
+
+    def __init__(self, model: Model, params: Any, ecfg: EngineConfig):
+        self.core = EngineCore(model, params, ecfg)
+        self.pools = PoolManager(model, ecfg, self.core._place)
+        self.prefill_role = PrefillRole(self.core, self.pools)
+        self.decode_role = DecodeRole(self.core, self.pools)
+        if ecfg.prompt_pad_multiple and self.core._has_ssm():
+            raise ValueError(
+                "prompt_pad_multiple requires attention-only models: SSM "
+                "recurrences integrate pad tokens (see EngineConfig)")
+        if ecfg.speculate_tokens and self.core._has_ssm():
+            raise ValueError(
+                "speculative decoding requires attention-only models: "
+                "recurrent SSM state cannot roll back rejected draft "
+                "tokens (docs/SERVING.md)")
+
+    # ----------------------------------------------- shared-core surface
+    # The public attribute surface predates the role split; tests, the
+    # benchmarks, and the stream driver reach these through the engine.
+    @property
+    def model(self) -> Model:
+        return self.core.model
+
+    @property
+    def params(self):
+        return self.core.params
+
+    @property
+    def mesh(self):
+        return self.core.mesh
+
+    @property
+    def ecfg(self) -> EngineConfig:
+        return self.core.ecfg
+
+    @property
+    def plans(self):
+        return self.core.plans
+
+    @property
+    def last_stats(self) -> Dict[str, Any]:
+        return self.core.last_stats
+
+    @last_stats.setter
+    def last_stats(self, value: Dict[str, Any]) -> None:
+        self.core.last_stats = value
+
+    @property
+    def _chunk_prefill_fns(self) -> Dict[Any, Any]:
+        return self.core._chunk_prefill_fns
+
+    @property
+    def _dense_chunk_prefill_fns(self) -> Dict[Any, Any]:
+        return self.core._dense_chunk_prefill_fns
+
+    def _has_ssm(self) -> bool:
+        return self.core._has_ssm()
+
+    def _mesh_scope(self):
+        return self.core._mesh_scope()
+
+    def init_pool(self, n_slots: int) -> PoolState:
+        return self.pools.init_pool(n_slots)
+
+    def init_paged_pool(self, sch: sched_mod.Scheduler
+                        ) -> Tuple[PoolState, Dict[str, Any]]:
+        return self.pools.init_paged_pool(sch)
+
+    def admit_into_slot(self, pool: PoolState, slot: int,
+                        prompt: np.ndarray, max_new_tokens: int
+                        ) -> Tuple[PoolState, jax.Array]:
+        return self.prefill_role.admit_into_slot(pool, slot, prompt,
+                                                 max_new_tokens)
+
+    # ---------------------------------------------------------- one-shot
+    def prefill(self, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
+        logits, state = self.model.prefill(self.params, batch,
+                                           self.ecfg.max_len,
+                                           plans=self.plans)
+        return logits, state
 
     def generate(self, batch: Dict[str, jax.Array], n_steps: int,
                  ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
@@ -285,615 +894,77 @@ class Engine:
         left = n_steps - 1
         while left > 0:
             n = min(self.ecfg.sync_interval, left)
-            toks, tok, state, cache_len, done = self._decode_chunk(n)(
-                self.params, tok, state, cache_len, done)
+            toks, tok, state, cache_len, done = \
+                self.decode_role.decode_chunk(n)(
+                    self.params, tok, state, cache_len, done)
             out.append(toks)
             left -= n
             self.last_stats["decode_steps"] += n
             # drain boundary: one explicit host read, then maybe early-exit
-            if left > 0 and bool(self._fetch(done).all()):
+            if left > 0 and bool(self.core._fetch(done).all()):
                 break
         return jnp.concatenate(out, axis=1), state
 
-    # ------------------------------------------------------------- pool
-    def init_pool(self, n_slots: int) -> PoolState:
-        """Empty slot pool: all slots done (free), caches zeroed."""
-        cfg = self.model.cfg
-        if cfg.family == "encdec":
-            raise NotImplementedError(
-                "pooled serving targets decoder-only families; encdec "
-                "requests go through one-shot generate()")
-        if cfg.frontend_len:
-            raise NotImplementedError(
-                "pooled serving takes token prompts; frontend-embed "
-                "requests go through one-shot generate()")
-        from repro.models import transformer
-        state = {"caches": transformer.init_caches(cfg, n_slots,
-                                                   self.ecfg.max_len)}
-        zeros = jnp.zeros((n_slots,), jnp.int32)
-        return self._place(PoolState(
-            state=state,
-            tok=jnp.full((n_slots,), self.ecfg.pad_token, jnp.int32),
-            cache_len=zeros,
-            done=jnp.ones((n_slots,), bool),
-            n_gen=zeros, budget=zeros))
-
-    def _pad_prompt(self, prompt: np.ndarray) -> Tuple[np.ndarray, int]:
-        true_len = int(prompt.shape[0])
-        if true_len > self.ecfg.max_len:
-            raise ValueError(
-                f"prompt of {true_len} tokens exceeds the KV slot depth "
-                f"(max_len={self.ecfg.max_len})")
-        m = self.ecfg.prompt_pad_multiple
-        if not m:
-            return prompt, true_len
-        # clamp: the padded buffer must still fit the slot's KV depth
-        padded = min(-(-true_len // m) * m, self.ecfg.max_len)
-        if padded == true_len:
-            return prompt, true_len
-        out = np.full((padded,), self.ecfg.pad_token, np.int32)
-        out[:true_len] = prompt
-        return out, true_len
-
-    def _make_admit_fn(self):
-        """Jitted admission: prefill one prompt row and scatter it into the
-        pool at ``slot`` — in-flight slots are untouched (pure row insert).
-        One function; jit's shape-keyed cache retraces per padded prompt
-        length (bounded by ``prompt_pad_multiple`` bucketing)."""
-        cfg, ecfg, plans = self.model.cfg, self.ecfg, self.plans
-
-        def run(params, tokens, true_len, budget, slot, pool: PoolState):
-            last = (true_len - 1)[None]                     # (1,) gather
-            logits, row = self.model.prefill(
-                params, {"tokens": tokens}, ecfg.max_len, plans=plans,
-                last_pos=last)
-            first = jnp.argmax(logits[0, -1, :cfg.vocab_size])
-            first = first.astype(jnp.int32)
-            state = self.model.slot_update(pool.state, row, slot)
-            kv_len = true_len                               # filled prefix
-            done0 = ((first == ecfg.eos_token) | (budget <= 1)
-                     | (kv_len >= ecfg.max_len))
-            return PoolState(
-                state=state,
-                tok=pool.tok.at[slot].set(first),
-                cache_len=pool.cache_len.at[slot].set(kv_len),
-                done=pool.done.at[slot].set(done0),
-                n_gen=pool.n_gen.at[slot].set(1),
-                budget=pool.budget.at[slot].set(budget)), first
-
-        return jax.jit(run)
-
-    def admit_into_slot(self, pool: PoolState, slot: int,
-                        prompt: np.ndarray, max_new_tokens: int
-                        ) -> Tuple[PoolState, jax.Array]:
-        """Prefill ``prompt`` into ``slot``. Returns (pool, first_token) —
-        the token stays on device; callers fetch it at the next drain."""
-        tokens, true_len = self._pad_prompt(np.asarray(prompt, np.int32))
-        return self._admit(self.params, tokens[None],
-                           jnp.asarray(true_len, jnp.int32),
-                           jnp.asarray(max_new_tokens, jnp.int32),
-                           jnp.asarray(slot, jnp.int32), pool)
-
-    def _pool_chunk(self, n: int):
-        """Jitted: n batched decode steps over ALL slots with per-slot
-        cache_len vectors and on-device done masking. Emits per-step
-        (token, was_active) pairs; the host sees them only after the chunk."""
-        if n not in self._pool_chunk_fns:
-            cfg, ecfg, plans = self.model.cfg, self.ecfg, self.plans
-
-            def run(params, pool: PoolState):
-                def step(pool: PoolState, _):
-                    logits, state = self.model.decode_step(
-                        params, pool.tok[:, None], pool.state, pool.cache_len,
-                        plans=plans, block_tables=pool.block_tables)
-                    nxt = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
-                    was_done = pool.done
-                    tok = jnp.where(was_done, ecfg.eos_token,
-                                    nxt).astype(jnp.int32)
-                    n_gen = jnp.where(was_done, pool.n_gen, pool.n_gen + 1)
-                    cache_len = jnp.where(was_done, pool.cache_len,
-                                          pool.cache_len + 1)
-                    done = (was_done | (tok == ecfg.eos_token)
-                            | (n_gen >= pool.budget)
-                            | (cache_len >= ecfg.max_len))
-                    new = PoolState(state=state, tok=tok, cache_len=cache_len,
-                                    done=done, n_gen=n_gen,
-                                    budget=pool.budget,
-                                    block_tables=pool.block_tables)
-                    return new, (tok, ~was_done)
-
-                pool, (toks, valid) = jax.lax.scan(step, pool, None, length=n)
-                return pool, toks, valid        # (n, S) each
-
-            self._pool_chunk_fns[n] = jax.jit(run)
-        return self._pool_chunk_fns[n]
-
-    # ------------------------------------------- speculative verify chunk
-    def _verify_fn(self, k: int):
-        """Jitted speculative boundary: ONE width-(k+1) verify forward over
-        ALL slots, folded into the pool's done-masked updates (DESIGN.md
-        §Speculative decoding).
-
-        Each slot's verify row is its last emitted token followed by its k
-        host-proposed drafts, so the forward's argmax column j is exactly
-        what the j-th sequential :meth:`_pool_chunk` step would have
-        produced — :func:`repro.serve.speculate.fold_acceptance` then
-        emits the longest agreeing prefix plus one correction token and
-        rolls ``cache_len`` back over the rejected suffix. Output shape
-        matches :meth:`_pool_chunk`'s ``(steps, S)`` tokens/valid pair
-        (steps = k+1 candidate positions), so the drain loop is unchanged.
-        Done slots emit nothing; their junk K/V writes land in their own
-        slab/pages (or the null page) exactly like the single-token path's
-        frozen decode.
-        """
-        if k not in self._verify_fns:
-            cfg, ecfg, plans = self.model.cfg, self.ecfg, self.plans
-
-            def run(params, pool: PoolState, drafts, dlen):
-                tokens = jnp.concatenate([pool.tok[:, None], drafts], axis=1)
-                logits, state = self.model.verify_step(
-                    params, tokens, pool.state, pool.cache_len, plans=plans,
-                    block_tables=pool.block_tables)
-                targets = jnp.argmax(logits[:, :, :cfg.vocab_size],
-                                     axis=-1).astype(jnp.int32)   # (S, k+1)
-                fold = spec_mod.fold_acceptance(
-                    targets, drafts, dlen, done=pool.done, n_gen=pool.n_gen,
-                    budget=pool.budget, cache_len=pool.cache_len,
-                    max_len=ecfg.max_len, eos_token=ecfg.eos_token)
-                toks = jnp.where(fold.valid, targets, ecfg.eos_token)
-                new = PoolState(state=state, tok=fold.tok,
-                                cache_len=fold.cache_len, done=fold.done,
-                                n_gen=fold.n_gen, budget=pool.budget,
-                                block_tables=pool.block_tables)
-                return new, toks.astype(jnp.int32).T, fold.valid.T
-
-            self._verify_fns[k] = jax.jit(run)
-        return self._verify_fns[k]
-
-    def _build_drafts(self, sch: sched_mod.Scheduler, k: int
-                      ) -> Tuple[np.ndarray, np.ndarray]:
-        """Host-side draft proposal for every live slot (drain boundary).
-
-        Proposes from the slot's host-mirrored prompt+emitted context via
-        :func:`repro.serve.speculate.propose_ngram`. Slots without a
-        proposable context — free, mid-chunked-prefill, or admitted this
-        very boundary (first token still on device in ``pending_first``) —
-        get ``dlen = 0``, which the fold degrades to an ordinary
-        single-token step.
-        """
-        drafts = np.zeros((sch.n_slots, k), np.int32)
-        dlen = np.zeros((sch.n_slots,), np.int32)
-        for slot, req in sch.active.items():
-            if req.status != sched_mod.DECODING or not req.tokens:
-                continue
-            ctx = np.concatenate([np.asarray(req.prompt, np.int32),
-                                  np.asarray(req.tokens, np.int32)])
-            d = spec_mod.propose_ngram(ctx, k)
-            drafts[slot, :d.shape[0]] = d
-            dlen[slot] = d.shape[0]
-        return drafts, dlen
-
-    # ------------------------------------------------- paged two-tier pool
-    def init_paged_pool(self, sch: sched_mod.Scheduler
-                        ) -> Tuple[PoolState, Dict[str, Any]]:
-        """Empty paged pool + the layer-1 spill tier's device arrays.
-
-        Layer 0 is a flat page pool shared by all slots (block tables map
-        slots to pages); layer 1 mirrors it at the spill budget, plus one
-        resident "seat" per spill page for recurrent SSM state (a spilled
-        sequence holds at least one page, so seats cannot run out first).
-        """
-        geom = sch.pages
-        assert geom is not None, "init_paged_pool needs a paged scheduler"
-        cfg = self.model.cfg
-        if cfg.family == "encdec" or cfg.frontend_len:
-            raise NotImplementedError(
-                "paged serving targets decoder-only token-prompt models; "
-                "others go through one-shot generate()")
-        from repro.models import transformer
-        n_slots = sch.n_slots
-        state = {"caches": transformer.init_paged_caches(
-            cfg, n_slots, geom.n_pages, geom.page_tokens)}
-        spill = transformer.init_paged_caches(
-            cfg, geom.n_spill_pages, geom.n_spill_pages, geom.page_tokens)
-        zeros = jnp.zeros((n_slots,), jnp.int32)
-        pool = PoolState(
-            state=state,
-            tok=jnp.full((n_slots,), self.ecfg.pad_token, jnp.int32),
-            cache_len=zeros, done=jnp.ones((n_slots,), bool),
-            n_gen=zeros, budget=zeros,
-            block_tables=jnp.zeros((n_slots, geom.max_pages_per_slot),
-                                   jnp.int32))
-        return self._place(pool), self._place(spill)
-
-    def _make_paged_admit_fn(self, geom: sched_mod.PageGeometry):
-        """Jitted paged admission: prefill one prompt row at the pool's
-        page-aligned depth, cut it into pages and scatter them at the
-        slot's block-table row. In-flight pages are untouched."""
-        cfg, ecfg, plans = self.model.cfg, self.ecfg, self.plans
-        depth, pt = geom.depth, geom.page_tokens
-
-        def run(params, tokens, true_len, budget, slot, block_row,
-                pool: PoolState):
-            last = (true_len - 1)[None]                 # (1,) gather
-            logits, row = self.model.prefill(
-                params, {"tokens": tokens}, depth, plans=plans, last_pos=last)
-            first = jnp.argmax(logits[0, -1, :cfg.vocab_size])
-            first = first.astype(jnp.int32)
-            state = self.model.slot_update_paged(pool.state, row, slot,
-                                                 block_row, pt)
-            kv_len = true_len
-            done0 = ((first == ecfg.eos_token) | (budget <= 1)
-                     | (kv_len >= ecfg.max_len))
-            return dataclasses.replace(
-                pool, state=state,
-                tok=pool.tok.at[slot].set(first),
-                cache_len=pool.cache_len.at[slot].set(kv_len),
-                done=pool.done.at[slot].set(done0),
-                n_gen=pool.n_gen.at[slot].set(1),
-                budget=pool.budget.at[slot].set(budget)), first
-
-        return jax.jit(run)
-
-    def _paged_admit(self, pool: PoolState, slot: int,
-                     req: sched_mod.Request, geom: sched_mod.PageGeometry
-                     ) -> Tuple[PoolState, jax.Array]:
-        tokens, true_len = self._pad_prompt(np.asarray(req.prompt, np.int32))
-        block_row = self._pad_pages(req.pages, geom.max_pages_per_slot)
-        key = (geom.depth, geom.page_tokens)
-        if key not in self._paged_admit_fns:
-            self._paged_admit_fns[key] = self._make_paged_admit_fn(geom)
-        return self._paged_admit_fns[key](
-            self.params, tokens[None], jnp.asarray(true_len, jnp.int32),
-            jnp.asarray(req.max_new_tokens, jnp.int32),
-            jnp.asarray(slot, jnp.int32), block_row, pool)
-
-    def _make_suffix_admit_fn(self, geom: sched_mod.PageGeometry,
-                              prefix_len: int):
-        """Jitted cache-hit admission: prefill ONLY the unmatched suffix.
-
-        The shared prefix pages (plus the copy-on-write source, when the
-        match ends mid-page) are gathered into a dense batch-1 view, the
-        suffix runs through ``Model.prefill`` at a static ``prefix_len``
-        offset (RoPE positions and causal masks continue where the shared
-        prefix ends — bit-identical to the same rows of a full prefill),
-        and the result is scattered back through ``write_row``, whose
-        entries for shared pages point at null page 0: shared history is
-        never written, and the frontier page lands in the request's fresh
-        private page (the COW copy rides the gather->scatter cycle).
-        TTFT compute drops from O(prompt) to O(suffix).
-        """
-        cfg, ecfg, plans = self.model.cfg, self.ecfg, self.plans
-        depth, pt = geom.depth, geom.page_tokens
-
-        def run(params, tokens, true_len, budget, slot, read_row, write_row,
-                pool: PoolState):
-            prefix = self.model.gather_row_paged(pool.state, read_row, pt)
-            last = (true_len - 1)[None]                 # (1,) gather
-            logits, row = self.model.prefill(
-                params, {"tokens": tokens}, depth, plans=plans, last_pos=last,
-                prefix_len=prefix_len, prefix_state=prefix)
-            first = jnp.argmax(logits[0, -1, :cfg.vocab_size])
-            first = first.astype(jnp.int32)
-            state = self.model.slot_update_paged(pool.state, row, slot,
-                                                 write_row, pt)
-            kv_len = true_len + prefix_len
-            done0 = ((first == ecfg.eos_token) | (budget <= 1)
-                     | (kv_len >= ecfg.max_len))
-            return dataclasses.replace(
-                pool, state=state,
-                tok=pool.tok.at[slot].set(first),
-                cache_len=pool.cache_len.at[slot].set(kv_len),
-                done=pool.done.at[slot].set(done0),
-                n_gen=pool.n_gen.at[slot].set(1),
-                budget=pool.budget.at[slot].set(budget)), first
-
-        return jax.jit(run)
-
-    def _shared_paged_admit(self, pool: PoolState, slot: int,
-                            req: sched_mod.Request,
-                            geom: sched_mod.PageGeometry
-                            ) -> Tuple[PoolState, jax.Array]:
-        """Execute a prefix-index-hit admission planned by the scheduler.
-
-        ``read_row`` maps the pages the suffix attends over: the shared
-        full pages, plus — when the match ends mid-page — the COW *source*
-        page at the frontier index. ``write_row`` maps where suffix K/V
-        lands: null (page 0) under the shared prefix, the request's own
-        fresh pages from the frontier on. The frontier page is therefore
-        read from the canonical copy but written to a private one.
-        """
-        pt, p_max = geom.page_tokens, geom.max_pages_per_slot
-        suffix = np.asarray(req.prompt, np.int32)[req.prefix_len:]
-        tokens, true_len = self._pad_prompt(suffix)
-        if req.prefix_len + tokens.shape[0] > geom.depth:
-            tokens = tokens[:geom.depth - req.prefix_len]   # trim pad only
-        f_w = req.prefix_len // pt                  # frontier logical page
-        read = np.zeros((p_max,), np.int32)
-        read[:req.n_shared] = req.pages[:req.n_shared]
-        if req.cow_src >= 0:
-            read[f_w] = req.cow_src
-        write = np.zeros((p_max,), np.int32)
-        write[f_w:len(req.pages)] = req.pages[f_w:]
-        key = (geom.depth, pt, req.prefix_len, tokens.shape[0])
-        if key not in self._suffix_admit_fns:
-            self._suffix_admit_fns[key] = self._make_suffix_admit_fn(
-                geom, req.prefix_len)
-        return self._suffix_admit_fns[key](
-            self.params, tokens[None], jnp.asarray(true_len, jnp.int32),
-            jnp.asarray(req.max_new_tokens, jnp.int32),
-            jnp.asarray(slot, jnp.int32), jnp.asarray(read),
-            jnp.asarray(write), pool)
-
-    # ------------------------------------------------- chunked prefill
-    def _make_chunk_prefill_fn(self, geom: sched_mod.PageGeometry,
-                               n_tok: int, emit_first: bool):
-        """Jitted partial-prefill step: run ONE chunk of a prompt and
-        scatter its K/V into the request's pages (DESIGN.md §Chunked
-        prefill).
-
-        The chunk cursor ``start`` and true length ``true_n`` are TRACED
-        int32 scalars — the jit cache is keyed only by the power-of-two
-        padded chunk length (plus ``emit_first``), never by where in the
-        prompt the chunk lands, so a 4k-token prompt compiles the same
-        O(log chunk_tokens) variants as a 64-token one. A traced cursor
-        rides the same resumed-prefill path as the static-offset suffix
-        admission: positions and causal masks continue at ``start``
-        (bit-identical rows), and the traced offset forces the jnp
-        reference attention (the Pallas kernel needs a static grid
-        offset). Non-final chunks only advance ``cache_len`` — the slot
-        stays done-masked, so the interleaved decode chunk freezes it for
-        free. The final chunk emits the first output token and arms the
-        slot exactly like an unchunked admission.
-        """
-        cfg, ecfg, plans = self.model.cfg, self.ecfg, self.plans
-        depth, pt = geom.depth, geom.page_tokens
-
-        def run(params, tokens, start, true_n, budget, slot, read_row,
-                write_row, pool: PoolState):
-            prefix = self.model.gather_row_paged(pool.state, read_row, pt)
-            last = (true_n - 1)[None]                   # (1,) gather
-            logits, row = self.model.prefill(
-                params, {"tokens": tokens}, depth, plans=plans, last_pos=last,
-                prefix_len=start, prefix_state=prefix)
-            state = self.model.slot_update_paged(pool.state, row, slot,
-                                                 write_row, pt)
-            new_len = start + true_n
-            if not emit_first:
-                # done=True is NOT redundant: a slot freed by preempting a
-                # mid-decode request still carries done=False on device —
-                # without the mask the interleaved decode chunk would
-                # decode the half-prefilled slot
-                return dataclasses.replace(
-                    pool, state=state,
-                    cache_len=pool.cache_len.at[slot].set(new_len),
-                    done=pool.done.at[slot].set(True),
-                ), jnp.zeros((), jnp.int32)
-            first = jnp.argmax(logits[0, -1, :cfg.vocab_size])
-            first = first.astype(jnp.int32)
-            done0 = ((first == ecfg.eos_token) | (budget <= 1)
-                     | (new_len >= ecfg.max_len))
-            return dataclasses.replace(
-                pool, state=state,
-                tok=pool.tok.at[slot].set(first),
-                cache_len=pool.cache_len.at[slot].set(new_len),
-                done=pool.done.at[slot].set(done0),
-                n_gen=pool.n_gen.at[slot].set(1),
-                budget=pool.budget.at[slot].set(budget)), first
-
-        return jax.jit(run)
-
-    def _exec_prefill_chunk(self, pool: PoolState, step: sched_mod.PrefillStep,
-                            geom: sched_mod.PageGeometry
-                            ) -> Tuple[PoolState, jax.Array]:
-        """Execute one planned :class:`~repro.serve.scheduler.PrefillStep`.
-
-        ``read_row`` maps every page holding KV the chunk attends over:
-        the request's own pages below the cursor — which are the SHARED
-        prefix pages for its leading entries — plus the copy-on-write
-        source when the first chunk starts at a mid-page prefix match.
-        ``write_row`` maps the pages the chunk's K/V lands in, from the
-        cursor's page on (whole-page scatter re-writes the frontier page's
-        earlier tokens with the very content just gathered, so a COW source
-        is copied private on the first chunk for free)."""
-        req = step.req
-        pt, p_max = geom.page_tokens, geom.max_pages_per_slot
-        n_pad = self._bucket_len(step.n_tokens, geom.depth)
-        if step.start + n_pad > geom.depth:
-            # slot-depth edge: exact length, or the traced-start cache
-            # write would clamp backwards over earlier chunks (rare tail
-            # variant; never hit while prompt + chunk fit the depth)
-            n_pad = step.n_tokens
-        tokens = np.full((n_pad,), self.ecfg.pad_token, np.int32)
-        tokens[:step.n_tokens] = np.asarray(req.prompt, np.int32)[
-            step.start:step.start + step.n_tokens]
-        f_r = -(-step.start // pt)              # pages covering [0, start)
-        read = np.zeros((p_max,), np.int32)
-        read[:f_r] = req.pages[:f_r]
-        if step.start == req.prefix_len and req.cow_src >= 0:
-            read[step.start // pt] = req.cow_src
-        f_w = step.start // pt                  # cursor's (frontier) page
-        end_pages = geom.pages_for(step.start + step.n_tokens)
-        write = np.zeros((p_max,), np.int32)
-        write[f_w:end_pages] = req.pages[f_w:end_pages]
-        key = (geom.depth, pt, n_pad, step.final)
-        if key not in self._chunk_prefill_fns:
-            self._chunk_prefill_fns[key] = self._make_chunk_prefill_fn(
-                geom, n_pad, step.final)
-        return self._chunk_prefill_fns[key](
-            self.params, tokens[None], jnp.asarray(step.start, jnp.int32),
-            jnp.asarray(step.n_tokens, jnp.int32),
-            jnp.asarray(req.max_new_tokens, jnp.int32),
-            jnp.asarray(step.slot, jnp.int32), jnp.asarray(read),
-            jnp.asarray(write), pool)
-
-    def _make_dense_chunk_prefill_fn(self, n_tok: int, emit_first: bool):
-        """Dense-pool analog of :meth:`_make_chunk_prefill_fn`: the chunk
-        attends over the slot's own slab (earlier chunks' K/V gathered by
-        :meth:`~repro.models.api.Model.gather_row`) and the whole updated
-        row is scattered back. Same traced cursor, same bucketed jit key."""
-        cfg, ecfg, plans = self.model.cfg, self.ecfg, self.plans
-
-        def run(params, tokens, start, true_n, budget, slot,
-                pool: PoolState):
-            prefix = self.model.gather_row(pool.state, slot)
-            last = (true_n - 1)[None]                   # (1,) gather
-            logits, row = self.model.prefill(
-                params, {"tokens": tokens}, ecfg.max_len, plans=plans,
-                last_pos=last, prefix_len=start, prefix_state=prefix)
-            state = self.model.slot_update(pool.state, row, slot)
-            new_len = start + true_n
-            if not emit_first:
-                return dataclasses.replace(
-                    pool, state=state,
-                    cache_len=pool.cache_len.at[slot].set(new_len),
-                    done=pool.done.at[slot].set(True),
-                ), jnp.zeros((), jnp.int32)
-            first = jnp.argmax(logits[0, -1, :cfg.vocab_size])
-            first = first.astype(jnp.int32)
-            done0 = ((first == ecfg.eos_token) | (budget <= 1)
-                     | (new_len >= ecfg.max_len))
-            return dataclasses.replace(
-                pool, state=state,
-                tok=pool.tok.at[slot].set(first),
-                cache_len=pool.cache_len.at[slot].set(new_len),
-                done=pool.done.at[slot].set(done0),
-                n_gen=pool.n_gen.at[slot].set(1),
-                budget=pool.budget.at[slot].set(budget)), first
-
-        return jax.jit(run)
-
-    def _exec_dense_chunk(self, pool: PoolState, step: sched_mod.PrefillStep
-                          ) -> Tuple[PoolState, jax.Array]:
-        req = step.req
-        n_pad = self._bucket_len(step.n_tokens, self.ecfg.max_len)
-        if step.start + n_pad > self.ecfg.max_len:
-            n_pad = step.n_tokens           # slab edge: exact tail length
-        tokens = np.full((n_pad,), self.ecfg.pad_token, np.int32)
-        tokens[:step.n_tokens] = np.asarray(req.prompt, np.int32)[
-            step.start:step.start + step.n_tokens]
-        key = (n_pad, step.final)
-        if key not in self._dense_chunk_prefill_fns:
-            self._dense_chunk_prefill_fns[key] = \
-                self._make_dense_chunk_prefill_fn(n_pad, step.final)
-        return self._dense_chunk_prefill_fns[key](
-            self.params, tokens[None], jnp.asarray(step.start, jnp.int32),
-            jnp.asarray(step.n_tokens, jnp.int32),
-            jnp.asarray(req.max_new_tokens, jnp.int32),
-            jnp.asarray(step.slot, jnp.int32), pool)
-
-    def _tier_copy_fn(self):
-        """ONE jitted layer-0 <-> layer-1 copy, shared by spill and restore
-        (jit's shape-keyed cache traces each direction independently).
-
-        Page pools move whole pages (gather by source ids, scatter at
-        destination ids — padded entries route through the null pages);
-        recurrent per-slot state moves one row between the slot axis and
-        the spill seat axis. Everything stays on device.
-        """
-        if self._tier_copy is not None:
-            return self._tier_copy
-        from repro.models import transformer
-        cfg = self.model.cfg
-
-        def copy(src_caches, dst_caches, row_src, row_dst, pages_src,
-                 pages_dst):
-            def page_copy(s, d):
-                return d.at[:, pages_dst].set(s[:, pages_src].astype(d.dtype))
-
-            def row_copy(s, d):
-                row = jax.lax.dynamic_slice_in_dim(s, row_src, 1, axis=1)
-                return jax.lax.dynamic_update_slice_in_dim(
-                    d, row.astype(d.dtype), row_dst, axis=1)
-
-            out: Dict[str, Any] = {}
-            for gname, key, is_paged in transformer.paged_cache_kinds(cfg):
-                fn = page_copy if is_paged else row_copy
-                out.setdefault(gname, {})[key] = jax.tree.map(
-                    fn, src_caches[gname][key], dst_caches[gname][key])
-            return out
-
-        self._tier_copy = jax.jit(copy)
-        return self._tier_copy
-
+    # -------------------------------------------------------- paged serve
     @staticmethod
-    def _pad_pages(pages, p_max: int) -> jax.Array:
-        row = np.zeros((p_max,), np.int32)
-        row[:len(pages)] = pages
-        return jnp.asarray(row)
-
-    def _exec_spill(self, pool: PoolState, spill: Dict[str, Any],
-                    act: sched_mod.SpillAction, p_max: int) -> Dict[str, Any]:
-        return self._tier_copy_fn()(
-            pool.state["caches"], spill,
-            jnp.asarray(act.slot, jnp.int32),
-            jnp.asarray(act.seat, jnp.int32),
-            self._pad_pages(act.src_pages, p_max),
-            self._pad_pages(act.dst_pages, p_max))
-
-    def _exec_restore(self, pool: PoolState, spill: Dict[str, Any],
-                      act: sched_mod.RestoreAction, p_max: int) -> PoolState:
-        """Copy a preempted sequence back into layer 0 and re-arm its slot.
-
-        The per-slot vectors are rebuilt from the host mirror: the KV
-        frontier is one behind the emitted count (the last token's K/V is
-        written by its own upcoming decode step), so decode resumes
-        bit-exactly where preemption cut it."""
-        req = act.req
-        caches = self._tier_copy_fn()(
-            spill, pool.state["caches"],
-            jnp.asarray(act.seat, jnp.int32),
-            jnp.asarray(act.slot, jnp.int32),
-            self._pad_pages(act.src_pages, p_max),
-            self._pad_pages(req.pages[:len(act.src_pages)], p_max))
-        slot = act.slot
-        if req.status == sched_mod.PREFILLING:
-            # restored mid-chunked-prefill: no output token exists yet, so
-            # only the KV frontier is re-armed; done is FORCED True (the
-            # slot may have been freed by a mid-decode preemption, leaving
-            # done=False on device) so the slot stays masked until its
-            # final chunk lands, and the cursor resumes at the NEXT
-            # boundary's prefill phase (plan order contract)
-            return dataclasses.replace(
-                pool, state={**pool.state, "caches": caches},
-                cache_len=pool.cache_len.at[slot].set(req.cache_len),
-                done=pool.done.at[slot].set(True))
-        return dataclasses.replace(
-            pool, state={**pool.state, "caches": caches},
-            tok=pool.tok.at[slot].set(int(req.tokens[-1])),
-            cache_len=pool.cache_len.at[slot].set(req.cache_len),
-            done=pool.done.at[slot].set(False),
-            n_gen=pool.n_gen.at[slot].set(len(req.tokens)),
-            budget=pool.budget.at[slot].set(req.max_new_tokens))
+    def _owner_role(req: sched_mod.Request) -> str:
+        """Which role a request's pool work belongs to: mid-prefill (the
+        cursor short of the prompt, or freshly PREFILLING) is prefill-role
+        work; everything decoding is decode-role work."""
+        if (req.status == sched_mod.PREFILLING
+                or 0 <= req.prefill_pos < req.prompt_len):
+            return PREFILL_ROLE
+        return DECODE_ROLE
 
     def _serve_paged(self, sch: sched_mod.Scheduler,
                      max_steps: Optional[int] = None) -> ServeReport:
         """Continuous batching over the paged two-tier pool.
 
         Same drain-boundary discipline as the dense loop (ONE host read per
-        chunk); what changes is the boundary work: the scheduler plans
-        grow / preempt / restore / admit in pages, the engine executes the
-        device copies in plan order and uploads the fresh block table, and
-        the decode chunk walks block tables instead of slot slabs.
+        chunk — per ROLE when disaggregated); what changes is the boundary
+        work: the scheduler plans grow / preempt / restore / admit in
+        pages, the engine executes the device copies in plan order and
+        uploads the fresh block table, and the decode chunk walks block
+        tables instead of slot slabs.
+
+        Disaggregated boundary order: spills -> restores -> admissions and
+        prefill chunks (prefill role) -> page handovers (the zero-copy
+        ownership flips for this boundary's final chunks) -> decode-view
+        block-table upload -> decode/verify chunk (decode role) -> decode
+        drain fetch -> prefill drain fetch (pending first tokens, only on
+        boundaries that completed a prompt). Outputs are bit-identical to
+        the combined loop; only issue order and attribution change.
         """
+        core, pools = self.core, self.pools
+        pre, dec = self.prefill_role, self.decode_role
         geom = sch.pages
-        if sch.prefix_index is not None and self._has_ssm():
+        disagg = self.ecfg.disaggregate or sch.disaggregate
+        if disagg and not sch.disaggregate:
+            sch.enable_disaggregation()
+        if sch.prefix_index is not None and core._has_ssm():
             raise ValueError(
                 "prefix sharing requires attention-only models: recurrent "
                 "SSM state is per-sequence, not per-page (docs/SERVING.md)")
-        if sch.chunk_prefill_tokens is not None and self._has_ssm():
+        if sch.chunk_prefill_tokens is not None and core._has_ssm():
             raise ValueError(
                 "chunked prefill requires attention-only models: recurrent "
                 "SSM state has no resumable KV prefix (docs/SERVING.md)")
         self.last_stats = {"host_syncs": 0, "decode_steps": 0, "chunks": 0}
+        pre_role = dec_role = None
+        if disagg:
+            self.last_stats["host_syncs_by_role"] = {PREFILL_ROLE: 0,
+                                                     DECODE_ROLE: 0}
+            self.last_stats["decode_tokens"] = 0
+            pre_role, dec_role = PREFILL_ROLE, DECODE_ROLE
         spec_k = self.ecfg.speculate_tokens
         if spec_k:
             self.last_stats.update(speculate_tokens=spec_k,
                                    spec_proposed=0, spec_accepted=0)
-        pool, spill = self.init_paged_pool(sch)
+        pool, spill = pools.init_paged_pool(sch)
         pending_first: List[Tuple[sched_mod.Request, jax.Array]] = []
         boundary_wall: List[float] = []
         boundary_tokens: List[int] = []
+        boundary_decode_wall: List[float] = []
         step_clock = 0
         n = self.ecfg.sync_interval
         p_max = geom.max_pages_per_slot
@@ -909,55 +980,86 @@ class Engine:
             # spills FIRST: they read layer-0 pages that restores/admits may
             # reuse later this boundary (functional arrays keep this exact)
             for act in plan.spills:
-                spill = self._timed("insert", self._exec_spill,
-                                    pool, spill, act, p_max)
+                spill = core._timed(
+                    "insert", pools.exec_spill, pool, spill, act, p_max,
+                    role=self._owner_role(act.req) if disagg else None)
             for act in plan.restores:
-                pool = self._timed("insert", self._exec_restore,
-                                   pool, spill, act, p_max)
+                role = self._owner_role(act.req) if disagg else None
+                if disagg:
+                    pools.claim(act.slot, role)
+                pool = core._timed("insert", pools.exec_restore,
+                                   pool, spill, act, p_max, role=role)
             for slot, req in plan.admits:
                 req.admit_step = step_clock
+                if disagg:
+                    pools.claim(slot, PREFILL_ROLE)
                 if req.prefill_pos >= 0:
                     continue    # chunked admission: runs via prefill_steps
                 if req.prefix_len:      # prefix-index hit: suffix-only prefill
-                    pool, first = self._timed(
-                        "prefill", self._shared_paged_admit,
-                        pool, slot, req, geom)
+                    pool, first = core._timed(
+                        "prefill", pre.shared_paged_admit,
+                        pool, slot, req, geom, role=pre_role)
                 else:
-                    pool, first = self._timed("prefill", self._paged_admit,
-                                              pool, slot, req, geom)
+                    pool, first = core._timed("prefill", pre.paged_admit,
+                                              pool, slot, req, geom,
+                                              role=pre_role)
                 req.status = sched_mod.DECODING
                 pending_first.append((req, first))
             # chunk prefills AFTER every copy, in plan order (scheduler's
             # ordering contract); a final chunk arms its slot like an admit
             for step in plan.prefill_steps:
-                pool, first = self._timed("prefill", self._exec_prefill_chunk,
-                                          pool, step, geom)
+                pool, first = core._timed("prefill", pre.exec_prefill_chunk,
+                                          pool, step, geom, role=pre_role)
                 if step.final:
                     step.req.status = sched_mod.DECODING
                     pending_first.append((step.req, first))
-            # the boundary's page moves, as one host->device upload
-            pool = dataclasses.replace(
-                pool, block_tables=jnp.asarray(sch.block_table()))
+            # page handover: each request whose prompt completed this
+            # boundary moves prefill -> decode by a zero-copy ownership
+            # flip; the decode role's table upload below carries its row
+            for h in plan.handovers:
+                core._timed("handover", pools.transfer_ownership,
+                            h.slot, h.pages)
+            # the boundary's page moves, as one host->device upload; the
+            # decode role uploads only the rows it owns (handover is what
+            # makes a row appear)
+            pool = dataclasses.replace(pool, block_tables=jnp.asarray(
+                sch.block_table(role=DECODE_ROLE) if disagg
+                else sch.block_table()))
+            t_dec = time.perf_counter()
             if spec_k:
                 # one verify forward replaces the sync_interval-step scan;
                 # the boundary still costs exactly one host sync below
-                drafts, dlen = self._build_drafts(sch, spec_k)
-                pool, toks, valid = self._timed(
-                    "generate", self._verify_fn(spec_k), self.params, pool,
-                    jnp.asarray(drafts), jnp.asarray(dlen))
+                drafts, dlen = dec.build_drafts(sch, spec_k)
+                pool, toks, valid = core._timed(
+                    "generate", dec.verify_fn(spec_k), core.params, pool,
+                    jnp.asarray(drafts), jnp.asarray(dlen), role=dec_role)
                 step_clock += 1
                 self.last_stats["decode_steps"] += 1
                 self.last_stats["spec_proposed"] += int(dlen.sum())
             else:
-                pool, toks, valid = self._timed(
-                    "generate", self._pool_chunk(n), self.params, pool)
+                pool, toks, valid = core._timed(
+                    "generate", dec.pool_chunk(n), core.params, pool,
+                    role=dec_role)
                 step_clock += n
                 self.last_stats["decode_steps"] += n
             self.last_stats["chunks"] += 1
-            # ---- drain boundary: the single host sync of this iteration
-            toks_h, valid_h, done_h, firsts = self._timed(
-                "drain", self._fetch,
-                (toks, valid, pool.done, [f for _, f in pending_first]))
+            # ---- drain boundary: ONE host sync per role (decode always;
+            # prefill only on boundaries that completed a prompt)
+            if disagg:
+                toks_h, valid_h, done_h = core._timed(
+                    "drain", core._fetch, (toks, valid, pool.done),
+                    DECODE_ROLE, role=DECODE_ROLE)
+                boundary_decode_wall.append(time.perf_counter() - t_dec)
+                firsts = []
+                if pending_first:
+                    firsts = core._timed(
+                        "drain", core._fetch,
+                        [f for _, f in pending_first], PREFILL_ROLE,
+                        role=PREFILL_ROLE)
+            else:
+                toks_h, valid_h, done_h, firsts = core._timed(
+                    "drain", core._fetch,
+                    (toks, valid, pool.done, [f for _, f in pending_first]))
             emitted = len(firsts)
             for (req, _), f in zip(pending_first, firsts):
                 req.tokens.append(int(f))
@@ -976,6 +1078,8 @@ class Engine:
                     if v)
                 got = len(req.tokens) - before
                 emitted += got
+                if disagg:
+                    self.last_stats["decode_tokens"] += got
                 if spec_k:
                     # a live slot's boundary emission is accepted drafts + 1
                     # correction token; just-admitted slots (dlen=0) emit
@@ -986,6 +1090,7 @@ class Engine:
                 # can drain
                 if done_h[slot] and req.status != sched_mod.PREFILLING:
                     req.finish_step = step_clock
+                    pools.release(slot)
                     sch.complete(slot)
             boundary_wall.append(time.perf_counter() - t0)
             boundary_tokens.append(emitted)
@@ -993,6 +1098,12 @@ class Engine:
                 break
         self.last_stats["boundary_wall_s"] = boundary_wall
         self.last_stats["boundary_tokens"] = boundary_tokens
+        if disagg:
+            # decode-role boundary wall: decode dispatch + its drain only
+            # (meaningful under phase_timing, where the prefill phase has
+            # blocked before t_dec) — the inter-token clock a decode
+            # consumer experiences when prefill runs on its own engine
+            self.last_stats["boundary_decode_wall_s"] = boundary_decode_wall
         self._finish_spec_stats()
         stats = dict(self.last_stats)
         stats.update(sch.stats())
@@ -1034,6 +1145,12 @@ class Engine:
             sch.submit_request(req)
         if sch.pages is not None:        # paged two-tier pool
             return self._serve_paged(sch, max_steps)
+        if self.ecfg.disaggregate or sch.disaggregate:
+            raise ValueError(
+                "disaggregated serving requires the paged pool: page "
+                "handover moves block-table rows, which the dense "
+                "slot-slab pool does not have (DESIGN.md §Disaggregated "
+                "serving)")
         chunked = sch.chunk_prefill_tokens is not None
         if chunked and self._has_ssm():
             raise ValueError(
@@ -1044,6 +1161,7 @@ class Engine:
         if spec_k:
             self.last_stats.update(speculate_tokens=spec_k,
                                    spec_proposed=0, spec_accepted=0)
+        core, pre, dec = self.core, self.prefill_role, self.decode_role
         pool = self.init_pool(sch.n_slots)
         pending_first: List[Tuple[sched_mod.Request, jax.Array]] = []
         boundary_wall: List[float] = []
@@ -1061,38 +1179,38 @@ class Engine:
                     continue
                 if chunked:
                     continue    # prefills by chunks via plan_prefill below
-                pool, first = self._timed(
-                    "prefill", self.admit_into_slot,
+                pool, first = core._timed(
+                    "prefill", pre.admit_into_slot,
                     pool, slot, req.prompt, req.max_new_tokens)
                 req.status = sched_mod.DECODING
                 pending_first.append((req, first))
             if chunked:
                 for step in sch.plan_prefill():
-                    pool, first = self._timed(
-                        "prefill", self._exec_dense_chunk, pool, step)
+                    pool, first = core._timed(
+                        "prefill", pre.exec_dense_chunk, pool, step)
                     if step.final:
                         step.req.status = sched_mod.DECODING
                         pending_first.append((step.req, first))
             if spec_k:
                 # one verify forward replaces the sync_interval-step scan;
                 # the boundary still costs exactly one host sync below
-                drafts, dlen = self._build_drafts(sch, spec_k)
-                pool, toks, valid = self._timed(
-                    "generate", self._verify_fn(spec_k), self.params, pool,
+                drafts, dlen = dec.build_drafts(sch, spec_k)
+                pool, toks, valid = core._timed(
+                    "generate", dec.verify_fn(spec_k), core.params, pool,
                     jnp.asarray(drafts), jnp.asarray(dlen))
                 step_clock += 1
                 self.last_stats["decode_steps"] += 1
                 self.last_stats["spec_proposed"] += int(dlen.sum())
             else:
                 n = self.ecfg.sync_interval
-                pool, toks, valid = self._timed(
-                    "generate", self._pool_chunk(n), self.params, pool)
+                pool, toks, valid = core._timed(
+                    "generate", dec.pool_chunk(n), core.params, pool)
                 step_clock += n
                 self.last_stats["decode_steps"] += n
             self.last_stats["chunks"] += 1
             # ---- drain boundary: the single host sync of this iteration
-            toks_h, valid_h, done_h, firsts = self._timed(
-                "drain", self._fetch,
+            toks_h, valid_h, done_h, firsts = core._timed(
+                "drain", core._fetch,
                 (toks, valid, pool.done, [f for _, f in pending_first]))
             emitted = len(firsts)
             for (req, _), f in zip(pending_first, firsts):

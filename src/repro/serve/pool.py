@@ -1,0 +1,259 @@
+"""Pool ownership for the serving engine: construction, tier copies, and
+the page-handover primitive (DESIGN.md §Disaggregated serving).
+
+The KV pool is ONE device-side address space — MemPool-3D's premise,
+applied to serving: whatever engine role computes against it, the pages
+live in the same flat layer-0/layer-1 arrays. This module owns everything
+about that pool that is not a model forward:
+
+  * :class:`PoolState` — the device arrays (moved here from
+    ``serve/engine.py``; the engine re-exports it for compatibility).
+  * :class:`PoolManager` — constructs empty pools (:meth:`init_pool` /
+    :meth:`init_paged_pool`), executes the layer-0 <-> layer-1 tier
+    copies planned by the scheduler (:meth:`exec_spill` /
+    :meth:`exec_restore`), and tracks which engine *role* owns each
+    slot when serving runs disaggregated.
+  * :meth:`PoolManager.transfer_ownership` — the handover primitive. At
+    a request's final prefill chunk, its slot moves from the prefill
+    role to the decode role by flipping ONE host-side table entry: the
+    slot's block-table row starts appearing in the decode role's
+    uploaded table, and the prefill role stops issuing work for it. No
+    KV bytes move — the pages were always in the shared pool; only the
+    table row and cursor change hands (the invariant the equivalence
+    matrix pins: a page row moves, bytes never copy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import scheduler as sched_mod
+
+#: Engine role names (DESIGN.md §Disaggregated serving). The prefill role
+#: runs admissions and prompt chunks; the decode role runs the batched
+#: decode/verify forwards. A combined engine is both at once. Canonical
+#: definitions live in the scheduler (routing is a scheduling decision).
+PREFILL_ROLE = sched_mod.PREFILL_ROLE
+DECODE_ROLE = sched_mod.DECODE_ROLE
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PoolState:
+    """Device-side state of the KV slot pool (batch axis = slot index).
+
+    ``block_tables`` is ``None`` for the dense slot-slab pool; in paged
+    mode it is the ``(S, P)`` int32 map from each slot's logical page index
+    to a physical page of the flat layer-0 page pool (null page 0 for
+    unmapped entries). The host rebuilds and uploads it at every drain
+    boundary from the scheduler's page mappings.
+    """
+
+    state: Dict[str, Any]       # model caches (+aux), slot- or page-major
+    tok: jax.Array              # (S,) int32 — last emitted token per slot
+    cache_len: jax.Array        # (S,) int32 — filled KV prefix per slot
+    done: jax.Array             # (S,) bool — drained/empty slot mask
+    n_gen: jax.Array            # (S,) int32 — tokens emitted per occupant
+    budget: jax.Array           # (S,) int32 — occupant's max_new_tokens
+    block_tables: Optional[jax.Array] = None    # (S, P) int32, paged only
+
+
+class PoolManager:
+    """Owns PoolState construction, tier copies, and slot ownership.
+
+    Exactly ONE PoolManager backs an engine, shared by its prefill and
+    decode roles — the pool is a single address space (the paper's shared
+    L1), the roles are just who computes against it. ``place`` is the
+    engine core's mesh-placement function so pools land on the same
+    shardings as every jitted fn's output.
+    """
+
+    def __init__(self, model: Any, ecfg: Any,
+                 place: Callable[[Any], Any]):
+        self.model = model
+        self.ecfg = ecfg
+        self._place = place
+        self._tier_copy = None      # jitted layer-0 <-> layer-1 copy
+        # ---- disaggregated slot ownership (role name per occupied slot).
+        # Empty in combined mode: a single engine owns everything and the
+        # bookkeeping would only add per-boundary host work.
+        self.owner: Dict[int, str] = {}
+        self.handovers = 0
+        self.handover_pages = 0
+
+    # ------------------------------------------------------- construction
+    def init_pool(self, n_slots: int) -> PoolState:
+        """Empty slot pool: all slots done (free), caches zeroed."""
+        cfg = self.model.cfg
+        if cfg.family == "encdec":
+            raise NotImplementedError(
+                "pooled serving targets decoder-only families; encdec "
+                "requests go through one-shot generate()")
+        if cfg.frontend_len:
+            raise NotImplementedError(
+                "pooled serving takes token prompts; frontend-embed "
+                "requests go through one-shot generate()")
+        from repro.models import transformer
+        state = {"caches": transformer.init_caches(cfg, n_slots,
+                                                   self.ecfg.max_len)}
+        zeros = jnp.zeros((n_slots,), jnp.int32)
+        return self._place(PoolState(
+            state=state,
+            tok=jnp.full((n_slots,), self.ecfg.pad_token, jnp.int32),
+            cache_len=zeros,
+            done=jnp.ones((n_slots,), bool),
+            n_gen=zeros, budget=zeros))
+
+    def init_paged_pool(self, sch: sched_mod.Scheduler
+                        ) -> Tuple[PoolState, Dict[str, Any]]:
+        """Empty paged pool + the layer-1 spill tier's device arrays.
+
+        Layer 0 is a flat page pool shared by all slots (block tables map
+        slots to pages); layer 1 mirrors it at the spill budget, plus one
+        resident "seat" per spill page for recurrent SSM state (a spilled
+        sequence holds at least one page, so seats cannot run out first).
+        """
+        geom = sch.pages
+        assert geom is not None, "init_paged_pool needs a paged scheduler"
+        cfg = self.model.cfg
+        if cfg.family == "encdec" or cfg.frontend_len:
+            raise NotImplementedError(
+                "paged serving targets decoder-only token-prompt models; "
+                "others go through one-shot generate()")
+        from repro.models import transformer
+        n_slots = sch.n_slots
+        state = {"caches": transformer.init_paged_caches(
+            cfg, n_slots, geom.n_pages, geom.page_tokens)}
+        spill = transformer.init_paged_caches(
+            cfg, geom.n_spill_pages, geom.n_spill_pages, geom.page_tokens)
+        zeros = jnp.zeros((n_slots,), jnp.int32)
+        pool = PoolState(
+            state=state,
+            tok=jnp.full((n_slots,), self.ecfg.pad_token, jnp.int32),
+            cache_len=zeros, done=jnp.ones((n_slots,), bool),
+            n_gen=zeros, budget=zeros,
+            block_tables=jnp.zeros((n_slots, geom.max_pages_per_slot),
+                                   jnp.int32))
+        return self._place(pool), self._place(spill)
+
+    # -------------------------------------------------------- tier copies
+    def tier_copy_fn(self):
+        """ONE jitted layer-0 <-> layer-1 copy, shared by spill and restore
+        (jit's shape-keyed cache traces each direction independently).
+
+        Page pools move whole pages (gather by source ids, scatter at
+        destination ids — padded entries route through the null pages);
+        recurrent per-slot state moves one row between the slot axis and
+        the spill seat axis. Everything stays on device.
+        """
+        if self._tier_copy is not None:
+            return self._tier_copy
+        from repro.models import transformer
+        cfg = self.model.cfg
+
+        def copy(src_caches, dst_caches, row_src, row_dst, pages_src,
+                 pages_dst):
+            def page_copy(s, d):
+                return d.at[:, pages_dst].set(s[:, pages_src].astype(d.dtype))
+
+            def row_copy(s, d):
+                row = jax.lax.dynamic_slice_in_dim(s, row_src, 1, axis=1)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    d, row.astype(d.dtype), row_dst, axis=1)
+
+            out: Dict[str, Any] = {}
+            for gname, key, is_paged in transformer.paged_cache_kinds(cfg):
+                fn = page_copy if is_paged else row_copy
+                out.setdefault(gname, {})[key] = jax.tree.map(
+                    fn, src_caches[gname][key], dst_caches[gname][key])
+            return out
+
+        self._tier_copy = jax.jit(copy)
+        return self._tier_copy
+
+    @staticmethod
+    def pad_pages(pages, p_max: int) -> jax.Array:
+        row = np.zeros((p_max,), np.int32)
+        row[:len(pages)] = pages
+        return jnp.asarray(row)
+
+    def exec_spill(self, pool: PoolState, spill: Dict[str, Any],
+                   act: sched_mod.SpillAction, p_max: int) -> Dict[str, Any]:
+        self.owner.pop(act.slot, None)      # preempted: the slot frees
+        return self.tier_copy_fn()(
+            pool.state["caches"], spill,
+            jnp.asarray(act.slot, jnp.int32),
+            jnp.asarray(act.seat, jnp.int32),
+            self.pad_pages(act.src_pages, p_max),
+            self.pad_pages(act.dst_pages, p_max))
+
+    def exec_restore(self, pool: PoolState, spill: Dict[str, Any],
+                     act: sched_mod.RestoreAction, p_max: int) -> PoolState:
+        """Copy a preempted sequence back into layer 0 and re-arm its slot.
+
+        The per-slot vectors are rebuilt from the host mirror: the KV
+        frontier is one behind the emitted count (the last token's K/V is
+        written by its own upcoming decode step), so decode resumes
+        bit-exactly where preemption cut it."""
+        req = act.req
+        caches = self.tier_copy_fn()(
+            spill, pool.state["caches"],
+            jnp.asarray(act.seat, jnp.int32),
+            jnp.asarray(act.slot, jnp.int32),
+            self.pad_pages(act.src_pages, p_max),
+            self.pad_pages(req.pages[:len(act.src_pages)], p_max))
+        slot = act.slot
+        if req.status == sched_mod.PREFILLING:
+            # restored mid-chunked-prefill: no output token exists yet, so
+            # only the KV frontier is re-armed; done is FORCED True (the
+            # slot may have been freed by a mid-decode preemption, leaving
+            # done=False on device) so the slot stays masked until its
+            # final chunk lands, and the cursor resumes at the NEXT
+            # boundary's prefill phase (plan order contract)
+            return dataclasses.replace(
+                pool, state={**pool.state, "caches": caches},
+                cache_len=pool.cache_len.at[slot].set(req.cache_len),
+                done=pool.done.at[slot].set(True))
+        return dataclasses.replace(
+            pool, state={**pool.state, "caches": caches},
+            tok=pool.tok.at[slot].set(int(req.tokens[-1])),
+            cache_len=pool.cache_len.at[slot].set(req.cache_len),
+            done=pool.done.at[slot].set(False),
+            n_gen=pool.n_gen.at[slot].set(len(req.tokens)),
+            budget=pool.budget.at[slot].set(req.max_new_tokens))
+
+    # ---------------------------------------------------------- ownership
+    def claim(self, slot: int, role: str) -> None:
+        """Record which role a slot's work is issued by (disaggregated
+        serving only; combined engines never populate the map)."""
+        self.owner[slot] = role
+
+    def release(self, slot: int) -> None:
+        self.owner.pop(slot, None)
+
+    def transfer_ownership(self, slot: int, pages: List[int], *,
+                           src: str = PREFILL_ROLE,
+                           dst: str = DECODE_ROLE) -> None:
+        """Hand a slot (and its mapped pages) from ``src`` to ``dst``.
+
+        This is pure bookkeeping — the zero-copy invariant of the shared
+        pool: the slot's pages already live in the layer-0 arrays both
+        roles compute against, so handover flips one table entry and the
+        decode role's next block-table upload carries the row. Raises if
+        ``src`` does not own the slot (a handover for a slot the prefill
+        role lost to preemption would silently corrupt routing).
+        """
+        cur = self.owner.get(slot)
+        if cur != src:
+            raise RuntimeError(
+                f"handover of slot {slot}: owned by {cur!r}, expected "
+                f"{src!r} — page handover must follow the final prefill "
+                f"chunk of the owning role")
+        self.owner[slot] = dst
+        self.handovers += 1
+        self.handover_pages += len(pages)

@@ -62,6 +62,14 @@ DRAINED = "drained"
 REJECTED = "rejected"      # invalid for the pool (e.g. prompt > max_len)
 PREEMPTED = "preempted"    # spilled to layer 1, waiting to be restored
 
+#: Engine role names (DESIGN.md §Disaggregated serving). Routing a slot to
+#: a role is a *scheduling* decision, so the canonical definitions live
+#: here; ``serve/pool.py`` and the engine re-export them. The prefill role
+#: runs admissions and prompt chunks; the decode role runs the batched
+#: decode/verify forwards; a combined engine is both at once.
+PREFILL_ROLE = "prefill"
+DECODE_ROLE = "decode"
+
 
 @dataclasses.dataclass
 class Request:
@@ -94,6 +102,12 @@ class Request:
     prefix_len: int = 0
     n_shared: int = 0
     cow_src: int = -1
+    # disaggregated serving (DESIGN.md §Disaggregated serving): which engine
+    # role this request's pool work is routed to. "" in combined mode; set
+    # to PREFILL_ROLE at admission and flipped to DECODE_ROLE by the
+    # HandoverStep at the final prefill chunk. Survives preemption — a
+    # mid-decode spill restores straight into the decode role.
+    owner: str = ""
 
     @property
     def prompt_len(self) -> int:
@@ -583,6 +597,21 @@ class PrefillStep:
 
 
 @dataclasses.dataclass
+class HandoverStep:
+    """One page handover (DESIGN.md §Disaggregated serving): at a request's
+    final prefill chunk its slot — and every page mapped to it — moves from
+    the prefill role to the decode role. Zero KV copies: the pages already
+    live in the shared layer-0 arrays both roles compute against, so the
+    engine executes this as one ownership-table flip
+    (:meth:`repro.serve.pool.PoolManager.transfer_ownership`) and the
+    decode role's next block-table upload carries the row."""
+
+    slot: int
+    req: Request
+    pages: List[int]
+
+
+@dataclasses.dataclass
 class SpillAction:
     """One preemption: copy ``src_pages`` (layer 0) to ``dst_pages``
     (layer 1) and, for models with resident SSM state, slot row -> seat."""
@@ -621,6 +650,10 @@ class PagePlan:
     # in list order (residents resume oldest-first before fresh admissions,
     # so a canonical prefix finishes before a same-boundary matcher reads it)
     prefill_steps: List[PrefillStep] = dataclasses.field(default_factory=list)
+    # disaggregated serving only: ownership flips for requests whose prompt
+    # completes THIS boundary — executed after their final prefill chunk,
+    # before the decode role's block-table upload
+    handovers: List[HandoverStep] = dataclasses.field(default_factory=list)
 
 
 def percentile(xs: Sequence[float], q: float) -> float:
@@ -760,11 +793,16 @@ class Scheduler:
     def __init__(self, n_slots: int, policy: str = "fcfs",
                  pages: Optional[PageGeometry] = None,
                  prefix_share: bool = False,
-                 chunk_prefill_tokens: Optional[int] = None):
+                 chunk_prefill_tokens: Optional[int] = None,
+                 disaggregate: bool = False):
         if policy not in self.POLICIES:
             raise ValueError(f"unknown policy {policy!r}; have {self.POLICIES}")
         if prefix_share and pages is None:
             raise ValueError("prefix_share requires the paged pool (pages=)")
+        if disaggregate and pages is None:
+            raise ValueError(
+                "disaggregate requires the paged pool (pages=): page "
+                "handover moves block-table rows between roles")
         if chunk_prefill_tokens is not None and chunk_prefill_tokens < 1:
             raise ValueError(f"chunk_prefill_tokens must be >= 1, got "
                              f"{chunk_prefill_tokens}")
@@ -791,6 +829,10 @@ class Scheduler:
         self.preemptions = 0
         self.spilled_pages = 0
         self.restores = 0
+        # ---- disaggregated roles (DESIGN.md §Disaggregated serving)
+        self.disaggregate = disaggregate
+        self.handovers = 0
+        self.handover_pages = 0
         # ---- prefix sharing (None -> every admission prefills in full)
         self.prefix_index: Optional[PrefixIndex] = None
         self.prefix_hits = 0
@@ -817,6 +859,7 @@ class Scheduler:
                   layer1_bytes: Optional[int] = None,
                   prefix_share: bool = False,
                   chunk_prefill_tokens: Optional[int] = None,
+                  disaggregate: bool = False,
                   model_shards: int = 1,
                   data_shards: int = 1) -> "Scheduler":
         """Size the slot table (and, when ``paged``, the two-tier page
@@ -844,7 +887,24 @@ class Scheduler:
                                   pages=pages, model_shards=model_shards,
                                   data_shards=data_shards),
                    policy=policy, pages=pages, prefix_share=prefix_share,
-                   chunk_prefill_tokens=chunk_prefill_tokens)
+                   chunk_prefill_tokens=chunk_prefill_tokens,
+                   disaggregate=disaggregate)
+
+    def enable_disaggregation(self) -> None:
+        """Switch on role routing after construction (the engine calls this
+        when ``EngineConfig(disaggregate=True)`` meets a scheduler built
+        without the flag). Must happen before the first boundary is
+        planned — a mid-stream flip would leave earlier admissions
+        unrouted."""
+        if self.pages is None:
+            raise ValueError(
+                "disaggregate requires the paged pool (pages=): page "
+                "handover moves block-table rows between roles")
+        if self.admit_order:
+            raise RuntimeError(
+                "enable_disaggregation() must precede the first admission; "
+                "requests already admitted have no role routing")
+        self.disaggregate = True
 
     # ------------------------------------------------------------- queue
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
@@ -1145,6 +1205,8 @@ class Scheduler:
                 if budget is None:
                     self.prefix_index.register(req.prompt, req.pages)
             req.status = PREFILLING
+            if self.disaggregate:
+                req.owner = PREFILL_ROLE
             self.active[slot] = req
             self.admit_order.append(req.rid)
             self._active_order.append(slot)
@@ -1155,6 +1217,10 @@ class Scheduler:
                 req.prefill_pos = prefix_len
                 left = self._plan_prefill_chunk(plan, slot, req, left,
                                                 chunk_tokens, max_len)
+            elif self.disaggregate:
+                # unchunked admission prefills the whole prompt this
+                # boundary, so the handover follows immediately
+                self._plan_handover(plan, slot, req)
         if budget is not None:
             self.boundary_prefill_tokens.append(budget - left)
         else:
@@ -1200,7 +1266,25 @@ class Scheduler:
             # content only once the last chunk lands — registering earlier
             # could hand a concurrent admission pages still being filled
             self.prefix_index.register(req.prompt, req.pages)
+        if final and self.disaggregate:
+            self._plan_handover(plan, slot, req)
         return left - n
+
+    def _plan_handover(self, plan: PagePlan, slot: int,
+                       req: Request) -> None:
+        """Route a prompt-complete request to the decode role: emit the
+        :class:`HandoverStep` the engine executes as a zero-copy ownership
+        flip. Safe within one plan: preemption picks the YOUNGEST resident,
+        so a spill planned after this (by a later chunk or admission) can
+        never hit an older, already-handed-over slot before the engine
+        executes both — and if THIS slot spills in a later boundary, its
+        restore re-enters straight into the decode role (owner survives
+        preemption)."""
+        req.owner = DECODE_ROLE
+        self.handovers += 1
+        self.handover_pages += len(req.pages)
+        plan.handovers.append(HandoverStep(slot=slot, req=req,
+                                           pages=list(req.pages)))
 
     def _match_prefix(self, req: Request) -> Tuple[List[int], int, int]:
         """Prefix-index lookup for a fresh admission.
@@ -1226,12 +1310,23 @@ class Scheduler:
         cow_src = matched[full] if prefix_len % pt else -1
         return matched[:full], prefix_len, cow_src
 
-    def block_table(self) -> np.ndarray:
+    def block_table(self, role: Optional[str] = None) -> np.ndarray:
         """The (n_slots, max_pages_per_slot) int32 block table implied by
-        the current page mappings; unmapped entries point at null page 0."""
+        the current page mappings; unmapped entries point at null page 0.
+
+        With ``role`` set (disaggregated serving), only slots OWNED by that
+        role get rows — everything else maps to the null page. The decode
+        role's view therefore routes done-masked junk writes for
+        mid-prefill slots into page 0 instead of their real pages, which is
+        safe by construction: positions at or past a prefill cursor are
+        never read, and the next prefill chunk's whole-page scatter
+        rewrites the frontier page anyway. Handover is exactly the moment a
+        slot's row appears in the decode view."""
         assert self.pages is not None
         bt = np.zeros((self.n_slots, self.pages.max_pages_per_slot), np.int32)
         for slot, req in self.active.items():
+            if role is not None and req.owner != role:
+                continue
             bt[slot, :len(req.pages)] = req.pages
         return bt
 
@@ -1296,6 +1391,12 @@ class Scheduler:
                 "mapped_high_water": self.page_pool.mapped_high_water,
                 "indexed_pages": (len(self.prefix_index)
                                   if self.prefix_index is not None else 0),
+                # disaggregated roles (DESIGN.md §Disaggregated serving):
+                # always reported so dashboards need no key probing — both
+                # stay 0 in combined mode
+                "disaggregate": self.disaggregate,
+                "handovers": self.handovers,
+                "handover_pages": self.handover_pages,
             })
         else:
             out["paged"] = False

@@ -198,6 +198,29 @@ def test_compile_cache_stays_logarithmic(engines):
         assert n_pad & (n_pad - 1) == 0 or n_pad == MAX_LEN
 
 
+def test_bucket_len_sequence_pinned():
+    """EngineCore.bucket_len is THE bucketing rule (one helper, three
+    former call sites) — pin the exact sequence so dedup can never shift a
+    jit-cache key. Power-of-two mode over a 64-deep cache, the slot-depth
+    overrun edge, and the prompt-pad multiple mode."""
+    from repro.serve.engine import EngineCore
+    bl = EngineCore.bucket_len
+    seq = [bl(n, 64) for n in range(1, 65)]
+    assert seq == ([1, 2] + [4] * 2 + [8] * 4 + [16] * 8
+                   + [32] * 16 + [64] * 32)
+    assert len(set(seq)) == int(math.log2(64)) + 1   # O(log max_len) keys
+    assert bl(80, 64) == 64                          # clamped to the limit
+    # the depth edge: a padded chunk that would overrun the cache from
+    # `start` falls back to the exact length (traced-start writes must not
+    # clamp backwards over earlier chunks)
+    assert bl(5, 64, start=56) == 8                  # 56 + 8 == 64: fits
+    assert bl(5, 64, start=61) == 5                  # 61 + 8 > 64: exact
+    # multiple mode (prompt_pad_multiple admission bucketing)
+    assert [bl(n, 64, multiple=8) for n in (1, 7, 8, 9, 16, 17)] == \
+        [8, 8, 8, 16, 16, 24]
+    assert bl(100, 64, multiple=8) == 64
+
+
 # ------------------------------------------------------------- family gate
 
 @pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])

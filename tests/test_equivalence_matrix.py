@@ -196,6 +196,86 @@ def test_mesh1_cell_matches_unmeshed_one_shot(references, mesh1_engine,
         assert got == ref[:len(got)], (cell, rid)
 
 
+# ---------------------------------------------------------------------------
+# The disaggregation axis (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+#: (cell name, prefix_share, n_layer0_data_pages, speculate_tokens).
+#: Every cell runs chunked (handover at the final chunk is the point);
+#: `preempt` shrinks layer 0 until mid-prefill preemption + restore fire.
+DISAGG_CELLS = (("share-cow", True, 40, 0),
+                ("preempt", False, 7, 0),
+                ("speculate", False, 40, 4))
+
+
+def _disagg_geometry(cfg, n_layer0):
+    pb = sm.kv_bytes_per_token(cfg) * PT
+    return sm.PageGeometry(page_tokens=PT, n_pages=n_layer0 + 1,
+                           n_spill_pages=65,
+                           max_pages_per_slot=-(-MAX_LEN // PT),
+                           page_bytes=pb)
+
+
+def _disagg_requests():
+    """REQS plus an identical PAGE-ALIGNED prompt pair: the duplicate's
+    prefix match covers the whole prompt, so the capped match ends
+    mid-page and the share-cow cell takes the COW-frontier path (a fresh
+    private copy of the final matched page), not just row sharing."""
+    rng = np.random.RandomState(23)
+    aligned = rng.randint(2, 128, size=3 * PT).astype(np.int32)
+    long = rng.randint(2, 128, size=44).astype(np.int32)
+    return list(REQS) + [(aligned, 8), (aligned.copy(), 6), (long, 12)]
+
+
+@pytest.mark.parametrize("cell", DISAGG_CELLS, ids=[c[0] for c in DISAGG_CELLS])
+def test_disagg_cell_matches_single_engine(engines, cell):
+    """Disaggregated roles move no bits: each cell must be bit-identical
+    to the SAME engine's single-engine chunked serve of the same stream,
+    both under the transfer guard — and must actually exercise its feature
+    (COW admissions, mid-prefill preemption + restore, or speculation)
+    while holding the per-role sync budget: the decode role reads once per
+    boundary, the prefill role only at prompt-completing boundaries."""
+    _, share, n_layer0, spec = cell
+    eng = engines(TINY.name)
+    reqs = _disagg_requests()
+    prev = eng.ecfg.speculate_tokens
+    eng.ecfg.speculate_tokens = spec
+    try:
+        runs = {}
+        for disagg in (False, True):
+            sch = sm.Scheduler(
+                3, pages=_disagg_geometry(TINY, n_layer0),
+                prefix_share=share, chunk_prefill_tokens=6,
+                disaggregate=disagg)
+            rids = [sch.submit(p, g).rid for p, g in reqs]
+            with jax.transfer_guard_device_to_host("disallow"):
+                rep = eng.serve(scheduler=sch)
+            runs[disagg] = ([rep.outputs[r] for r in rids], rep.stats)
+    finally:
+        eng.ecfg.speculate_tokens = prev
+
+    outs, st = runs[True]
+    assert outs == runs[False][0], cell[0]      # bit-identical token streams
+    assert all(len(o) > 0 for o in outs)
+    # the handover invariant: every drained prompt crossed roles once
+    assert st["handovers"] == len(reqs)
+    assert st["handover_pages"] > 0
+    by_role = st["host_syncs_by_role"]
+    assert by_role["decode"] == st["chunks"]
+    assert 0 < by_role["prefill"] <= st["chunks"]
+    assert st["host_syncs"] == by_role["decode"] + by_role["prefill"]
+    # the cell exercised its feature in the disaggregated run
+    if share:
+        assert st["cow_copies"] > 0, "duplicate prompt never took COW"
+        assert st["prefix_hits"] > 0
+    if n_layer0 < 40:
+        assert st["preemptions"] > 0, "tight pool never preempted"
+        assert st["restores"] > 0
+    if spec:
+        assert st["spec_proposed"] > 0
+        assert st["decode_steps"] == st["chunks"]
+
+
 def test_mesh2_matrix_in_subprocess():
     """mesh=2 on forced host-platform devices, in a child python (the XLA
     device-count flag only takes effect before jax imports)."""
