@@ -11,10 +11,13 @@ head-to-head (DESIGN.md §Speculative decoding), and its ``--mesh``
 family is the contract for the mesh-sharded scaling head-to-head
 (DESIGN.md §Sharded serving), and its ``--disaggregate`` family is the
 contract for the prefill/decode role-split head-to-head (DESIGN.md
-§Disaggregated serving). The stream driver ``repro.launch.serve``
+§Disaggregated serving), and its ``--kv-quant`` family is the contract
+for the tier-codec residency head-to-head (DESIGN.md §Tiered KV
+compression & host parking). The stream driver ``repro.launch.serve``
 is checked too: it must expose ``--chunk-prefill-tokens``,
-``--speculate-tokens``, ``--mesh`` and ``--disaggregate`` so the
-serving knobs documented in docs/SERVING.md stay wired. Runs each script's
+``--speculate-tokens``, ``--mesh``, ``--disaggregate``, ``--kv-quant``
+and ``--park-idle`` so the serving knobs documented in docs/SERVING.md
+stay wired. Runs each script's
 ``--help`` in-process and greps the usage text.
 
     PYTHONPATH=src python -m benchmarks.check_cli
@@ -44,7 +47,8 @@ EXTRA_FLAGS = {
                        "--require-speculate-win", "--mesh", "--mesh-axes",
                        "--require-scaling", "--disaggregate",
                        "--require-disagg-win", "--disagg-win-min",
-                       "--emit-bench"),
+                       "--kv-quant", "--park-idle",
+                       "--require-residency-win", "--emit-bench"),
 }
 
 #: non-benchmark CLI entry points checked for specific flags only (no
@@ -52,7 +56,8 @@ EXTRA_FLAGS = {
 EXTRA_CLIS = (
     (os.path.join("src", "repro", "launch", "serve.py"),
      ("--chunk-prefill-tokens", "--paged", "--prefix-share",
-      "--speculate-tokens", "--mesh", "--mesh-axes", "--disaggregate")),
+      "--speculate-tokens", "--mesh", "--mesh-axes", "--disaggregate",
+      "--kv-quant", "--park-idle")),
 )
 
 

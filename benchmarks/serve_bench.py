@@ -76,10 +76,24 @@ gates on decode tok/s >= ``--disagg-win-min`` x combined AT a p99 no worse
 than ``1 + --flat-p99-tol`` x combined, bit-identical outputs, and at most
 one host sync per role per boundary.
 
+``--kv-quant`` runs the tier-codec head-to-head (DESIGN.md §Tiered KV
+compression & host parking): the same stream served twice in the SAME
+layer-0 byte budget, fp16 pages vs the quantized codec (int8 or fp8 —
+either spills at int8). A smaller page prices more pages into the budget,
+so the gated metric is **concurrent resident sessions per layer-0 byte**:
+``--require-residency-win`` gates on the quantized run holding >=1.8x the
+fp16 run's resident high water at the same bytes, with every request
+draining and the greedy FIRST token agreeing with the fp16 run on >=75%
+of the stream (full-sequence identity is not gated — lossy codecs may
+legitimately flip a late argmax). ``--park-idle N`` additionally runs the
+layer-2 host tier inside the quantized serve: after N decode steps every
+decoding resident parks to a host blob, resumes, and the stream completes
+— park counters land in the record.
+
 Every record carries pool bytes and pages-in-use next to throughput, so the
 dense-vs-paged comparison shows capacity, not just speed. Emits
 ``benchmarks/artifacts/serve_bench.json``; ``--emit-bench`` additionally
-writes the flat cross-PR metric file ``BENCH_9.json`` at the repo root
+writes the flat cross-PR metric file ``BENCH_10.json`` at the repo root
 (diffed by ``tools/diff_bench.py``).
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--target NAME] [--paged]
@@ -90,7 +104,8 @@ writes the flat cross-PR metric file ``BENCH_9.json`` at the repo root
         [--flat-p99-tol F] [--speculate] [--speculate-tokens K]
         [--require-speculate-win] [--mesh SPEC] [--mesh-axes NAMES]
         [--require-scaling] [--disaggregate] [--require-disagg-win]
-        [--disagg-win-min F] [--emit-bench] [...]
+        [--disagg-win-min F] [--kv-quant CODEC] [--park-idle N]
+        [--require-residency-win] [--emit-bench] [...]
 """
 
 from __future__ import annotations
@@ -103,7 +118,7 @@ from typing import Dict, List, Optional
 from benchmarks.common import add_target_arg, fmt_table, save_artifact, \
     target_scope
 
-BENCH_ID = 9
+BENCH_ID = 10
 
 
 def _emit_bench_json(meta: Dict, metrics: Dict) -> str:
@@ -1172,6 +1187,176 @@ def run_mesh(target_name=None, arch: str = "qwen2.5-3b",
     return "\n".join([table] + lines)
 
 
+def run_quant(target_name=None, arch: str = "qwen2.5-3b",
+              n_requests: int = 32, prompt_len: int = 16,
+              gen_len: int = 12, seed: int = 0, *, page_tokens: int = 8,
+              layer0_bytes: Optional[int] = None,
+              layer1_bytes: Optional[int] = None, max_slots: int = 32,
+              kv_quant: str = "int8", park_idle: int = 0,
+              sync_interval: Optional[int] = None,
+              residency_win_min: float = 1.8,
+              require_residency_win: bool = False,
+              emit_bench: bool = False) -> str:
+    """Tier-codec head-to-head: fp16 vs quantized pages, SAME layer-0
+    bytes. The quantized page is smaller, so the same budget holds more
+    pages and the pool keeps more sessions concurrently resident — the
+    capacity win, gated as residents-per-byte. Greedy first-token
+    agreement against the fp16 run bounds the quantization cost."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.core.target import get_target
+    from repro.models import build_model
+    from repro.serve.engine import Engine, EngineConfig
+    from repro.serve.scheduler import (DECODING, PREFILLING, Scheduler,
+                                       derive_n_slots, derive_page_geometry,
+                                       kv_bytes_per_token, percentile,
+                                       synthetic_stream)
+
+    with target_scope(target_name):
+        target = get_target()
+        cfg = get_reduced(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        stream = synthetic_stream(n_requests, prompt_len, gen_len,
+                                  cfg.vocab_size, seed)
+        max_len = prompt_len + gen_len
+        engine = Engine(model, params,
+                        EngineConfig(max_len=max_len,
+                                     sync_interval=sync_interval or 4))
+        # default budget: four full-depth fp16 residents — tight enough
+        # that fp16 concurrency is page-capped, so the codec's smaller
+        # page shows up as MORE residents, not just slack
+        l0 = (layer0_bytes if layer0_bytes is not None
+              else 4 * kv_bytes_per_token(cfg) * max_len)
+
+        def one(qq: str) -> Dict:
+            geom = derive_page_geometry(
+                cfg, max_len, page_tokens=page_tokens, max_slots=max_slots,
+                layer0_bytes=l0, layer1_bytes=layer1_bytes, kv_quant=qq)
+            slots = derive_n_slots(cfg, max_len, pages=geom,
+                                   max_slots=max_slots)
+
+            def serve_once():
+                sch = Scheduler(n_slots=slots, pages=geom)
+                rids = [sch.submit(s["prompt"], s["max_new_tokens"]).rid
+                        for s in stream]
+                rid_map = {r: r for r in rids}
+                t0 = time.monotonic()
+                if park_idle:
+                    engine.serve(scheduler=sch, max_steps=park_idle)
+                    blobs = []
+                    for slot in sorted(list(sch.active)):
+                        req = sch.active[slot]
+                        if req.status == DECODING:
+                            blobs.append(
+                                (req.rid,
+                                 engine.park_request(sch, req.rid)))
+                        elif req.status == PREFILLING:
+                            sch.requeue(slot)
+                    for old_rid, blob in blobs:
+                        rid_map[old_rid] = \
+                            engine.resume_parked(sch, blob).rid
+                rep = engine.serve(scheduler=sch)
+                return rids, rid_map, rep, time.monotonic() - t0
+
+            serve_once()                          # warmup: compile
+            rids, rid_map, rep, dt = serve_once()
+            st = rep.stats
+            n_tokens = sum(len(r.tokens) for r in rep.requests)
+            return {
+                "mode": f"kv-quant={qq}",
+                "codec": qq,
+                "wall_s": dt,
+                "n_tokens": n_tokens,
+                "tok_per_s": n_tokens / dt if dt else 0.0,
+                "completed": st["drained"],
+                "n_slots": slots,
+                "n_pages": st["n_pages"],
+                "pool_bytes": st["pool_bytes"],
+                "page_bytes": geom.page_bytes,
+                "resident_high_water": st["resident_high_water"],
+                "residents_per_mb":
+                    st["resident_high_water"] * 2**20 / max(l0, 1),
+                "pages_high_water": st["pages_high_water"],
+                "preemptions": st["preemptions"],
+                "spilled_pages": st["spilled_pages"],
+                "parks": st["parks"],
+                "park_resumes": st["park_resumes"],
+                "ttft_emit_p50": percentile(st["ttft_emit_steps"], 50),
+                "ttft_emit_p95": percentile(st["ttft_emit_steps"], 95),
+                "outputs": [rep.outputs[rid_map[r]] for r in rids],
+            }
+
+        base = one("fp16")
+        quant = one(kv_quant)
+
+    for rec in (base, quant):
+        if rec["completed"] != n_requests:
+            raise SystemExit(
+                f"serve_bench --kv-quant: {rec['mode']} drained "
+                f"{rec['completed']}/{n_requests} requests")
+    outs_base = base.pop("outputs")
+    outs_quant = quant.pop("outputs")
+    if any(not o for o in outs_base) or any(not o for o in outs_quant):
+        raise SystemExit(
+            "serve_bench --kv-quant: a drained request emitted no tokens")
+    agreement = sum(a[0] == b[0]
+                    for a, b in zip(outs_base, outs_quant)) / n_requests
+    ratio = (quant["resident_high_water"]
+             / max(base["resident_high_water"], 1))
+    pages_ratio = (quant["n_pages"] - 1) / max(base["n_pages"] - 1, 1)
+    artifact = {
+        "arch": cfg.name, "target": target.name, "n_requests": n_requests,
+        "prompt_len": prompt_len, "gen_len": gen_len,
+        "kv_quant": kv_quant, "layer0_bytes": l0, "park_idle": park_idle,
+        "residency_ratio": ratio, "pages_ratio": pages_ratio,
+        "first_token_agreement": agreement,
+        "base": base, "quant": quant,
+    }
+    save_artifact("serve_quant_bench.json", artifact)
+    lines = [
+        f"tier codecs ({kv_quant} vs fp16, same {l0} layer-0 bytes): "
+        f"residency {quant['resident_high_water']} vs "
+        f"{base['resident_high_water']} concurrent residents "
+        f"({ratio:.2f}x), {quant['n_pages'] - 1} vs {base['n_pages'] - 1} "
+        f"data pages ({pages_ratio:.2f}x), greedy first-token agreement "
+        f"{agreement:.2f}"]
+    if park_idle:
+        lines.append(
+            f"host parking: {quant['parks']} parked at step {park_idle}, "
+            f"{quant['park_resumes']} resumed, stream completed")
+    if emit_bench:
+        metrics = {"residency_ratio": ratio, "pages_ratio": pages_ratio,
+                   "first_token_agreement": agreement}
+        for key, rec in (("base", base), ("quant", quant)):
+            metrics.update({f"{key}.{k}": v for k, v in rec.items()})
+        path = _emit_bench_json(
+            {"mode": "kv-quant", "arch": cfg.name, "target": target.name,
+             "n_requests": n_requests, "kv_quant": kv_quant,
+             "layer0_bytes": l0, "park_idle": park_idle}, metrics)
+        lines.append(f"bench metrics -> {path}")
+    if require_residency_win and (ratio < residency_win_min
+                                  or agreement < 0.75):
+        raise SystemExit(
+            "serve_bench --require-residency-win: expected >="
+            f"{residency_win_min}x concurrent residents at >=0.75 "
+            f"first-token agreement; got x{ratio:.2f} at {agreement:.2f} "
+            "— either the budget is slack (fp16 was not page-capped) or "
+            "the codec drifted")
+    rows = [[r["mode"], r["n_slots"], r["resident_high_water"],
+             r["n_pages"] - 1, r["page_bytes"], r["pool_bytes"],
+             r["preemptions"], r["parks"],
+             f"{r['ttft_emit_p50']:.0f}/{r['ttft_emit_p95']:.0f}",
+             f"{r['tok_per_s']:.1f}"] for r in (base, quant)]
+    table = fmt_table(
+        ["mode", "slots", "res hw", "pages", "page B", "pool B",
+         "preempt", "parks", "ttft 50/95", "tok/s"],
+        rows, title=f"Tier-codec serve bench — {cfg.name}, "
+                    f"{n_requests} requests, {l0} layer-0 bytes "
+                    f"({target.name})")
+    return "\n".join([table] + lines)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen2.5-3b")
@@ -1268,6 +1453,20 @@ def main(argv=None) -> int:
                          "bit-identical outputs")
     ap.add_argument("--disagg-win-min", type=float, default=1.15,
                     help="decode tok/s ratio --require-disagg-win gates on")
+    ap.add_argument("--kv-quant", choices=("fp16", "fp8", "int8"),
+                    default=None,
+                    help="run the tier-codec head-to-head instead of the "
+                         "mode comparison: the same stream in the same "
+                         "layer-0 bytes, fp16 pages vs this codec")
+    ap.add_argument("--park-idle", type=int, default=0, metavar="N",
+                    help="inside the --kv-quant runs: after N decode "
+                         "steps park every decoding resident to the "
+                         "layer-2 host tier, resume, and finish")
+    ap.add_argument("--require-residency-win", action="store_true",
+                    help="fail unless the quantized run holds >=1.8x the "
+                         "fp16 run's concurrent residents in the same "
+                         "layer-0 bytes at >=0.75 greedy first-token "
+                         "agreement")
     ap.add_argument("--emit-bench", action="store_true",
                     help="write the flat cross-PR metric file "
                          "BENCH_%d.json at the repo root" % BENCH_ID)
@@ -1302,6 +1501,17 @@ def main(argv=None) -> int:
             disagg_win_min=args.disagg_win_min,
             flat_p99_tol=args.flat_p99_tol,
             require_disagg_win=args.require_disagg_win,
+            emit_bench=args.emit_bench))
+        return 0
+    if args.kv_quant or args.require_residency_win:
+        print(run_quant(
+            args.target, args.arch, args.requests, args.prompt_len,
+            args.gen_len, args.seed, page_tokens=args.page_tokens,
+            layer0_bytes=args.layer0_bytes,
+            layer1_bytes=args.layer1_bytes, max_slots=args.max_slots,
+            kv_quant=args.kv_quant or "int8", park_idle=args.park_idle,
+            sync_interval=args.sync_interval,
+            require_residency_win=args.require_residency_win,
             emit_bench=args.emit_bench))
         return 0
     if args.speculate:

@@ -192,16 +192,24 @@ class TieredPartition:
         return TieredPartition(layer0=self.layer0.scaled(shards),
                                layer1=self.layer1.scaled(shards))
 
-    def units_per_tier(self, unit_bytes: int,
-                       resident_bytes: int = 0) -> Tuple[int, int]:
+    def units_per_tier(self, unit_bytes, resident_bytes: int = 0
+                       ) -> Tuple[int, int]:
         """How many ``unit_bytes``-sized blocks each layer sustains, pricing
         one unit with the SAME ``required_bytes`` contract the tile planner
         uses. ``resident_bytes`` is charged against layer 0 only (resident
-        state never spills a layer down by itself)."""
+        state never spills a layer down by itself).
+
+        ``unit_bytes`` is one int when both layers store a unit identically,
+        or a per-tier ``(layer0_bytes, layer1_bytes)`` pair when the tiers
+        encode differently — tier-aware KV compression prices a page per
+        CODEC, so a quantized tier fits more pages in the same budget
+        (DESIGN.md §Tiered KV compression)."""
+        per_tier = (unit_bytes if isinstance(unit_bytes, (tuple, list))
+                    else (unit_bytes, unit_bytes))
         out = []
         for i, tier in enumerate(self.tiers):
             budget = tier.budget_bytes - (resident_bytes if i == 0 else 0)
-            per = tier.required_bytes(unit_bytes)
+            per = tier.required_bytes(per_tier[i])
             out.append(max(0, budget // max(per, 1)))
         return (out[0], out[1])
 

@@ -48,6 +48,44 @@ from repro.distributed.sharding import BATCH, MODEL_AXIS, heads_divide, shard
 _NEG_INF = float("-inf")
 _STATS_LANES = 128   # stats scratch is (group, 128) for TPU lane alignment
 
+INT8_QMAX = 127.0    # symmetric int8: codes in [-127, 127], -128 unused
+
+
+# ------------------------------------------------------------ quantization
+#
+# Per-page symmetric int8 (DESIGN.md §Tiered KV compression): each page
+# carries ONE f32 scale per leaf (amax / 127 over everything in the page),
+# stored in a sibling `<leaf>_scale` array of shape (n_pages,). fp8-e4m3
+# needs no scales — KV values live inside e4m3's dynamic range and the
+# cast/uncast is a plain astype. fp16 (bf16 storage) is the identity.
+
+
+def quantize_page_int8(x: jax.Array, axes) -> tuple:
+    """Quantize ``x`` to symmetric int8 with one scale per un-reduced index.
+
+    ``axes`` are the reduced (per-page) axes: the scale is
+    ``amax(|x|, axes) / 127`` and the codes ``round(x / scale)`` clipped to
+    [-127, 127]. An all-zero page gets scale 0 and all-zero codes — the
+    dequant ``codes * 0`` round-trips it exactly. Returns ``(codes int8,
+    scales f32)`` with ``scales.shape == x.shape`` minus ``axes``.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axes)
+    scales = amax / INT8_QMAX
+    safe = jnp.where(scales > 0, scales, 1.0)
+    expand = list(axes) if isinstance(axes, (tuple, list)) else [axes]
+    safe_b = jnp.expand_dims(safe, expand)
+    codes = jnp.clip(jnp.round(xf / safe_b), -INT8_QMAX, INT8_QMAX)
+    return codes.astype(jnp.int8), scales
+
+
+def dequantize_page_int8(codes: jax.Array, scales: jax.Array,
+                         axes) -> jax.Array:
+    """Inverse of :func:`quantize_page_int8` (f32 out); ``axes`` are the
+    page axes the scales were reduced over."""
+    expand = list(axes) if isinstance(axes, (tuple, list)) else [axes]
+    return codes.astype(jnp.float32) * jnp.expand_dims(scales, expand)
+
 
 # ------------------------------------------------------------------ oracle
 
@@ -222,7 +260,9 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                            cache_len: jax.Array, *,
                            window: int | None = None,
                            causal: bool = True,
-                           impl: str = "auto") -> jax.Array:
+                           impl: str = "auto",
+                           k_scale: jax.Array | None = None,
+                           v_scale: jax.Array | None = None) -> jax.Array:
     """Decode attention over the paged pool; dense math is the oracle.
 
     ``impl="auto"`` walks pages with the Pallas kernel on TPU and takes the
@@ -238,16 +278,41 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     through the gather + oracle path (whose masks already handle
     ``qpos = cache_len + arange(s)``); an explicit ``impl="pallas"`` still
     asserts.
+
+    Quantized pools (DESIGN.md §Tiered KV compression): int8 pages carry
+    per-page ``k_scale``/``v_scale`` vectors ``(n_pages,)`` and fp8-e4m3
+    pages are detected by dtype; both dequantize AFTER the block-table
+    gather (dequant-on-gather) and run the oracle — the page walk moves
+    half the bytes, the math is unchanged. The Pallas kernel stays
+    fp16-only for now, so quantized pools always take the gather path.
     """
     on_tpu = jax.default_backend() == "tpu"
     single = q.shape[2] == 1
-    use_pallas = (impl == "pallas") or (impl == "auto" and on_tpu and single)
+    quantized = (k_scale is not None
+                 or k_pages.dtype not in (jnp.bfloat16, jnp.float16,
+                                          jnp.float32))
+    if quantized and impl == "pallas":
+        raise NotImplementedError(
+            "the Pallas page walk reads fp16 pages; quantized pools "
+            "dequantize on gather (impl='auto')")
+    use_pallas = (impl == "pallas") or (impl == "auto" and on_tpu and single
+                                        and not quantized)
     if use_pallas and causal:
         return paged_flash_decode(q, k_pages, v_pages, block_tables,
                                   cache_len, window=window,
                                   interpret=not on_tpu)
     k = gather_kv_pages(k_pages, block_tables, seq_axis=1)
     v = gather_kv_pages(v_pages, block_tables, seq_axis=1)
+    if k_scale is not None:
+        # per-page scalar scales -> per-token columns of the gathered view
+        pt = k_pages.shape[2]
+        ks = jnp.repeat(k_scale[block_tables], pt, axis=1)    # (B, P*pt)
+        vs = jnp.repeat(v_scale[block_tables], pt, axis=1)
+        k = k.astype(jnp.float32) * ks[:, None, :, None]
+        v = v.astype(jnp.float32) * vs[:, None, :, None]
+    elif quantized:
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
     if heads_divide(k_pages.shape[1]):
         # pin the gathered per-slot view to the head shards that own the
         # pages: the block-table gather indexes the (replicated-looking)

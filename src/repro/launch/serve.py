@@ -62,23 +62,47 @@ from repro.distributed import sharding as shd
 from repro.launch.mesh import make_cli_mesh
 from repro.models import build_model
 from repro.serve.engine import Engine, EngineConfig
-from repro.serve.scheduler import (DRAINED, Scheduler, derive_n_slots,
-                                   derive_page_geometry,
+from repro.serve.scheduler import (DECODING, DRAINED, PREFILLING, Scheduler,
+                                   derive_n_slots, derive_page_geometry,
                                    derive_prefill_chunk,
                                    derive_speculate_tokens, kv_shards,
                                    percentile, repetitive_stream,
                                    shared_prefix_stream, synthetic_stream)
 
 
-def run_stream(engine: Engine, scheduler: Scheduler, stream: list) -> dict:
-    """Drive a prepared request stream; return counters."""
+def run_stream(engine: Engine, scheduler: Scheduler, stream: list, *,
+               park_idle: int = 0) -> dict:
+    """Drive a prepared request stream; return counters.
+
+    With ``park_idle`` the stream runs in two phases: serve ``park_idle``
+    decode steps, park every decoding resident to the layer-2 host tier
+    (mid-prefill residents requeue from scratch — they have nothing to
+    resume), resume the parked blobs into the SAME scheduler, and serve to
+    completion. Outputs are bit-identical to the uninterrupted run at the
+    fp16 codec; the park counters land in the report."""
     n_requests = len(stream)
     for spec in stream:
         scheduler.submit(spec["prompt"], spec["max_new_tokens"])
     t0 = time.monotonic()
+    pre_stats = None
+    if park_idle:
+        engine.serve(scheduler=scheduler, max_steps=park_idle)
+        pre_stats = dict(engine.last_stats)
+        blobs = []
+        for slot in sorted(list(scheduler.active)):
+            req = scheduler.active[slot]
+            if req.status == DECODING:
+                blobs.append(engine.park_request(scheduler, req.rid))
+            elif req.status == PREFILLING:
+                scheduler.requeue(slot)
+        for blob in blobs:
+            engine.resume_parked(scheduler, blob)
     report = engine.serve(scheduler=scheduler)
     dt = time.monotonic() - t0
     stats = report.stats
+    if pre_stats:
+        for k in ("host_syncs", "decode_steps", "chunks"):
+            stats[k] = stats.get(k, 0) + pre_stats.get(k, 0)
     n_tokens = sum(len(r.tokens) for r in report.requests)
     served = [r for r in report.requests if r.status == DRAINED]
     decode_steps = [r.finish_step - r.admit_step for r in served
@@ -120,7 +144,9 @@ def run_stream(engine: Engine, scheduler: Scheduler, stream: list) -> dict:
     if stats.get("paged"):
         rec.update({k: stats[k] for k in (
             "page_tokens", "n_pages", "n_spill_pages", "pages_high_water",
-            "spill_high_water", "pool_bytes", "spill_bytes")})
+            "spill_high_water", "pool_bytes", "spill_bytes",
+            "layer0_codec", "layer1_codec", "parks", "park_resumes",
+            "resident_high_water")})
     if stats.get("prefix_sharing"):
         rec.update({k: stats[k] for k in (
             "prefix_hits", "prefix_misses", "shared_prefix_tokens",
@@ -165,6 +191,19 @@ def main(argv=None) -> int:
                     help="override the layer-0 (hot tier) page-pool budget")
     ap.add_argument("--layer1-bytes", type=int, default=None,
                     help="override the layer-1 (spill tier) budget")
+    ap.add_argument("--kv-quant", choices=["fp16", "fp8", "int8"],
+                    default=None,
+                    help="per-tier KV page codec (paged mode): fp16 is the "
+                         "bit-exact identity; fp8/int8 store more pages in "
+                         "the same layer-0 bytes at a bounded logit error, "
+                         "and the spill tier quantizes at least as hard "
+                         "(fp8 spills as int8)")
+    ap.add_argument("--park-idle", type=int, default=None, metavar="N",
+                    help="after N decode steps, park every decoding "
+                         "resident to the layer-2 host tier (zstd-coded "
+                         "page bytes + scheduler residue), then resume "
+                         "and serve to completion — bit-identical outputs "
+                         "at fp16 (paged mode)")
     ap.add_argument("--disaggregate", action="store_true",
                     help="split serving into prefill-role and decode-role "
                          "engines over the shared paged pool; pages hand "
@@ -200,6 +239,12 @@ def main(argv=None) -> int:
     if args.disaggregate and not args.paged:
         ap.error("--disaggregate requires --paged (page handover moves "
                  "block-table rows, which the dense pool does not have)")
+    if args.kv_quant and not args.paged:
+        ap.error("--kv-quant requires --paged (tier codecs apply to the "
+                 "paged pool's page bytes)")
+    if args.park_idle is not None and not args.paged:
+        ap.error("--park-idle requires --paged (the layer-2 host tier "
+                 "serializes pages, which the dense pool does not have)")
 
     cfg = get_config(args.arch) if args.full else get_reduced(args.arch)
     if args.stream and (cfg.family == "encdec" or cfg.frontend_len):
@@ -232,7 +277,8 @@ def main(argv=None) -> int:
                     max_slots=max(2, args.batch),
                     layer0_bytes=args.layer0_bytes,
                     layer1_bytes=args.layer1_bytes,
-                    model_shards=model_shards)
+                    model_shards=model_shards,
+                    kv_quant=args.kv_quant)
             n_slots = args.slots or derive_n_slots(
                 cfg, max_len, max_slots=max(2, args.batch), pages=pages,
                 model_shards=model_shards, data_shards=data_shards)
@@ -259,11 +305,14 @@ def main(argv=None) -> int:
             else:
                 stream = synthetic_stream(args.stream, args.prompt_len,
                                           args.gen_len, cfg.vocab_size)
-            rec = run_stream(engine, sched, stream)
+            rec = run_stream(engine, sched, stream,
+                             park_idle=args.park_idle or 0)
             mode = ("paged+share" if args.prefix_share
                     else "paged" if args.paged else "dense")
             if args.disaggregate:
                 mode += "+disagg"
+            if args.kv_quant:
+                mode += f"+{args.kv_quant}"
             print(f"arch={cfg.name} stream={args.stream} mode={mode} "
                   f"slots={rec['n_slots']} (max reuse {rec['max_slot_reuse']})")
             if data_shards * model_shards > 1:
@@ -316,6 +365,16 @@ def main(argv=None) -> int:
                       f"{rec['restores']} restores "
                       f"(layer-1 high water {rec['spill_high_water']}/"
                       f"{rec['n_spill_pages']})", flush=True)
+                if args.kv_quant:
+                    print(f"tier codecs: layer0={rec['layer0_codec']} "
+                          f"layer1={rec['layer1_codec']}; "
+                          f"{rec['resident_high_water']} residents high "
+                          f"water in {rec['pool_bytes']} B", flush=True)
+                if args.park_idle is not None:
+                    print(f"host parking: {rec['parks']} parked at step "
+                          f"{args.park_idle}, {rec['park_resumes']} "
+                          f"resumed (re-admitted as resumes, not "
+                          f"re-prefills)", flush=True)
                 if args.prefix_share:
                     hw = max(rec["pages_high_water"], 1)
                     print(f"prefix sharing: {rec['prefix_hits']} hits / "

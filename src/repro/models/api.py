@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core.planner import KernelPlans, Mem3DPlanner
 from repro.core.target import HardwareTarget
+from repro.kernels.paged_attention import quantize_page_int8
 from repro.models import encdec, frontends, transformer
 from repro.models.config import ModelConfig
 
@@ -270,34 +271,60 @@ class Model:
         dim, so a head-sharded scatter writes each shard's own head
         slice locally — the page-indexed ``at[:, block_row]`` update
         never moves bytes across shards.
+
+        An int8 pool (DESIGN.md §Tiered KV compression & host parking)
+        carries sibling ``*_scale`` leaves the dense row lacks: page cuts
+        quantize with FRESH per-page amax scales written alongside their
+        codes — a chunked-prefill frontier page re-scattered next chunk
+        re-quantizes cleanly, and a reused page's stale tenant scale never
+        leaks in.
         """
         p_max = block_row.shape[0]
 
-        def scatter_gqa(pool, row):
+        def cut_gqa(row):
             r, _, hkv, _, hd = row.shape
             cut = row[:, 0].reshape(r, hkv, p_max, page_tokens, hd)
-            cut = jnp.moveaxis(cut, 2, 1).astype(pool.dtype)
-            return pool.at[:, block_row].set(cut)
+            return jnp.moveaxis(cut, 2, 1)        # (r, P, hkv, pt, hd)
 
-        def scatter_mla(pool, row):
+        def cut_mla(row):
             r, _, _, lat = row.shape
-            cut = row[:, 0].reshape(r, p_max, page_tokens, lat)
-            return pool.at[:, block_row].set(cut.astype(pool.dtype))
+            return row[:, 0].reshape(r, p_max, page_tokens, lat)
 
         def scatter_slot(pool, row):
             return jax.lax.dynamic_update_slice_in_dim(
                 pool, row.astype(pool.dtype), slot, axis=1)
+
+        def scatter_pages(pool_leaf, row_leaf, cut_fn):
+            out = dict(pool_leaf)
+            for name, pool in pool_leaf.items():
+                if name.endswith("_scale"):
+                    continue                       # written with their codes
+                cut = cut_fn(row_leaf[name])
+                scale_name = name + "_scale"
+                if scale_name in pool_leaf:
+                    codes, scl = quantize_page_int8(
+                        cut, tuple(range(2, cut.ndim)))
+                    out[name] = pool.at[:, block_row].set(codes)
+                    out[scale_name] = (pool_leaf[scale_name]
+                                       .at[:, block_row].set(scl))
+                else:
+                    out[name] = pool.at[:, block_row].set(
+                        cut.astype(pool.dtype))
+            return out
 
         new_caches: Dict[str, Any] = {}
         for group in self.cfg.layer_groups():
             g: Dict[str, Any] = {}
             for pos, kind in enumerate(group.pattern):
                 key = f"pos{pos}"
-                fn = {"mamba": scatter_slot,
-                      "mla": scatter_mla}.get(kind.attn, scatter_gqa)
-                g[key] = jax.tree.map(fn,
-                                      pool_state["caches"][group.name][key],
-                                      row_state["caches"][group.name][key])
+                pool_leaf = pool_state["caches"][group.name][key]
+                row_leaf = row_state["caches"][group.name][key]
+                if kind.attn == "mamba":
+                    g[key] = jax.tree.map(scatter_slot, pool_leaf, row_leaf)
+                else:
+                    g[key] = scatter_pages(
+                        pool_leaf, row_leaf,
+                        cut_mla if kind.attn == "mla" else cut_gqa)
             new_caches[group.name] = g
         return {**pool_state, "caches": new_caches}
 
@@ -314,18 +341,39 @@ class Model:
         the copy-on-write source page) are gathered into the contiguous
         view the suffix tokens attend over. Attention-only models — shared
         pages cannot carry recurrent SSM state.
+
+        Quantized pools dequantize here (int8: codes × per-page scale;
+        fp8: upcast) into bf16 dense rows, so suffix-prefill compute is
+        identical whatever codec the pool stores.
         """
         p_max = block_row.shape[0]
 
-        def gather_gqa(pages):
-            r, _, hkv, pt, hd = pages.shape
-            g = jnp.moveaxis(pages[:, block_row], 1, 2)    # (r, hkv, P, pt, hd)
+        def merge_gqa(sel):
+            r, _, hkv, pt, hd = sel.shape                  # (r, P, hkv, pt, hd)
+            g = jnp.moveaxis(sel, 1, 2)
             return g.reshape(r, hkv, p_max * pt, hd)[:, None]
 
-        def gather_mla(pages):
-            r = pages.shape[0]
-            g = pages[:, block_row]                        # (r, P, pt, lat)
-            return g.reshape(r, p_max * page_tokens, -1)[:, None]
+        def merge_mla(sel):
+            r = sel.shape[0]                               # (r, P, pt, lat)
+            return sel.reshape(r, p_max * page_tokens, -1)[:, None]
+
+        def gather_leaves(pool_leaf, merge):
+            out: Dict[str, Any] = {}
+            for name, pages in pool_leaf.items():
+                if name.endswith("_scale"):
+                    continue
+                sel = pages[:, block_row]
+                scale_name = name + "_scale"
+                if scale_name in pool_leaf:
+                    scl = pool_leaf[scale_name][:, block_row]
+                    sel = (sel.astype(jnp.float32)
+                           * scl.reshape(scl.shape + (1,) * (sel.ndim - 2))
+                           ).astype(jnp.bfloat16)
+                elif sel.dtype not in (jnp.bfloat16, jnp.float16,
+                                       jnp.float32):
+                    sel = sel.astype(jnp.bfloat16)         # fp8 tier
+                out[name] = merge(sel)
+            return out
 
         caches: Dict[str, Any] = {}
         for group in self.cfg.layer_groups():
@@ -335,9 +383,9 @@ class Model:
                     raise NotImplementedError(
                         "prefix sharing requires attention-only models: "
                         "recurrent SSM state is per-sequence, not per-page")
-                fn = gather_mla if kind.attn == "mla" else gather_gqa
-                g[f"pos{pos}"] = jax.tree.map(
-                    fn, pool_state["caches"][group.name][f"pos{pos}"])
+                g[f"pos{pos}"] = gather_leaves(
+                    pool_state["caches"][group.name][f"pos{pos}"],
+                    merge_mla if kind.attn == "mla" else merge_gqa)
             caches[group.name] = g
         return {"caches": caches}
 

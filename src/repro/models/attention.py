@@ -37,7 +37,8 @@ from repro.core import tiling
 from repro.distributed.sharding import (BATCH, MODEL_AXIS, heads_divide,
                                         shard)
 from repro.kernels import ops
-from repro.kernels.paged_attention import (decode_attention_masked,
+from repro.kernels.paged_attention import (INT8_QMAX,
+                                           decode_attention_masked,
                                            gather_kv_pages,
                                            paged_decode_attention)
 from repro.models import layers
@@ -122,6 +123,63 @@ def _paged_cache_write(pages: jax.Array, new: jax.Array,
     return pages
 
 
+def _paged_cache_write_q(pages: jax.Array, scales: jax.Array, new: jax.Array,
+                         cache_len: jax.Array, block_tables: jax.Array,
+                         axis: int) -> Tuple[jax.Array, jax.Array]:
+    """Int8 block-table token append with a monotone per-page scale.
+
+    Same ``cache_len + j -> (page, offset)`` resolution as
+    :func:`_paged_cache_write`, but the pool holds int8 codes plus one f32
+    amax-scale per page (DESIGN.md §Tiered KV compression & host parking).
+    Per appended token: the page's scale grows to cover the new value
+    (``max(old, amax(new)/127)`` — monotone, so history codes only ever
+    get COARSER, never clip), the already-resident codes are requantized at
+    the grown scale, and the token's codes land at its offset. At
+    ``offset == 0`` the scale RESETS to the fresh token's instead: the page
+    was just (re)allocated, and inheriting the previous tenant's stale
+    amax would poison this sequence's precision for the page's lifetime.
+    Junk routed to null page 0 (frontier at/past mapped depth, duplicate
+    rows) also writes ``scales[0]`` — never read, like the page itself.
+
+    Shared (prefix-indexed) pages are never requantized here for the same
+    reason :func:`_paged_cache_write` needs no guard: writes resolve only
+    to pages private to the row by scheduler invariant.
+    """
+    pt = pages.shape[1 + axis]
+    p_max = block_tables.shape[1]
+    s = new.shape[1 + axis]
+    newf = new.astype(jnp.float32)
+    for j in range(s):
+        pos = cache_len + j
+        logical = jnp.minimum(pos // pt, p_max - 1)
+        phys = jnp.take_along_axis(block_tables, logical[:, None],
+                                   axis=1)[:, 0]
+        phys = jnp.where(pos < p_max * pt, phys, 0)
+        off = pos % pt
+        tok = newf[:, j] if axis == 0 else newf[:, :, j]
+        fresh = jnp.max(jnp.abs(tok),
+                        axis=tuple(range(1, tok.ndim))) / INT8_QMAX
+        old = scales[phys]
+        scl = jnp.where(off == 0, fresh, jnp.maximum(old, fresh))
+        safe = jnp.where(scl > 0, scl, 1.0)
+        page_shape_ones = (1,) * (pages.ndim - 1)
+        page_f = (pages[phys].astype(jnp.float32)
+                  * old.reshape((-1,) + page_shape_ones))
+        safe_b = safe.reshape((-1,) + page_shape_ones)
+        page_new = jnp.clip(jnp.round(page_f / safe_b), -INT8_QMAX,
+                            INT8_QMAX)
+        tok_codes = jnp.clip(
+            jnp.round(tok / safe.reshape((-1,) + (1,) * (tok.ndim - 1))),
+            -INT8_QMAX, INT8_QMAX)
+        iota = jax.lax.broadcasted_iota(jnp.int32, page_new.shape, 1 + axis)
+        off_b = off.reshape((-1,) + page_shape_ones)
+        page_new = jnp.where(iota == off_b,
+                             jnp.expand_dims(tok_codes, 1 + axis), page_new)
+        pages = pages.at[phys].set(page_new.astype(pages.dtype))
+        scales = scales.at[phys].set(scl)
+    return pages, scales
+
+
 # ---------------------------------------------------------------------- GQA
 
 def init_gqa(cfg: ModelConfig, key) -> Dict:
@@ -149,10 +207,18 @@ def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def init_gqa_pages(cfg: ModelConfig, n_pages: int, page_tokens: int,
-                   dtype=jnp.bfloat16) -> Dict:
-    """Flat page pool replacing the per-slot slab (page 0 = null page)."""
+                   dtype=jnp.bfloat16, quant_scales: bool = False) -> Dict:
+    """Flat page pool replacing the per-slot slab (page 0 = null page).
+
+    With ``quant_scales`` (the int8 tier codec) each page also carries one
+    f32 amax scale per leaf, stored as sibling ``*_scale`` arrays so they
+    travel through every tier copy / park blob alongside their codes."""
     shape = (n_pages, cfg.n_kv_heads, page_tokens, cfg.head_dim)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    out = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if quant_scales:
+        out["k_scale"] = jnp.zeros((n_pages,), jnp.float32)
+        out["v_scale"] = jnp.zeros((n_pages,), jnp.float32)
+    return out
 
 
 def gqa_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
@@ -193,12 +259,27 @@ def gqa_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
         k, v = cross_kv
 
     if cache is not None and block_tables is not None:
-        # paged two-tier pool: block-table write, page-walk attention.
-        k_pages = _paged_cache_write(cache["k"], k, cache_len, block_tables,
-                                     axis=1)
-        v_pages = _paged_cache_write(cache["v"], v, cache_len, block_tables,
-                                     axis=1)
-        new_cache = {"k": k_pages, "v": v_pages}
+        # paged two-tier pool: block-table write, page-walk attention. An
+        # int8 pool (sibling ``*_scale`` leaves present) takes the
+        # scale-aware write and hands the scales to the dequant-on-gather
+        # attention; an fp8 pool needs neither — the plain write's astype
+        # is the encode and the gather's upcast is the decode.
+        k_scales = v_scales = None
+        if "k_scale" in cache:
+            k_pages, k_scales = _paged_cache_write_q(
+                cache["k"], cache["k_scale"], k, cache_len, block_tables,
+                axis=1)
+            v_pages, v_scales = _paged_cache_write_q(
+                cache["v"], cache["v_scale"], v, cache_len, block_tables,
+                axis=1)
+            new_cache = {"k": k_pages, "v": v_pages,
+                         "k_scale": k_scales, "v_scale": v_scales}
+        else:
+            k_pages = _paged_cache_write(cache["k"], k, cache_len,
+                                         block_tables, axis=1)
+            v_pages = _paged_cache_write(cache["v"], v, cache_len,
+                                         block_tables, axis=1)
+            new_cache = {"k": k_pages, "v": v_pages}
         if heads_divide(hkv):
             # head-axis page placement: each mesh shard holds the page slice
             # its own KV heads read (q heads follow by GQA grouping), so the
@@ -219,7 +300,8 @@ def gqa_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
             v_pages = shard(v_pages, MODEL_AXIS, None, None, None)
         out = paged_decode_attention(q, k_pages, v_pages, block_tables,
                                      cache_len, window=kind.window,
-                                     causal=causal)
+                                     causal=causal, k_scale=k_scales,
+                                     v_scale=v_scales)
         out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
         return shard(linear(out, p["wo"]), BATCH, None, None), new_cache
 
@@ -315,13 +397,17 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def init_mla_pages(cfg: ModelConfig, n_pages: int, page_tokens: int,
-                   dtype=jnp.bfloat16) -> Dict:
+                   dtype=jnp.bfloat16, quant_scales: bool = False) -> Dict:
     """Paged latent pool: pages of the 576-dim latent, not per-head K/V."""
-    return {
+    out = {
         "ckv": jnp.zeros((n_pages, page_tokens, cfg.kv_lora_rank), dtype),
         "krope": jnp.zeros((n_pages, page_tokens, cfg.qk_rope_head_dim),
                            dtype),
     }
+    if quant_scales:
+        out["ckv_scale"] = jnp.zeros((n_pages,), jnp.float32)
+        out["krope_scale"] = jnp.zeros((n_pages,), jnp.float32)
+    return out
 
 
 def mla_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
@@ -356,14 +442,40 @@ def mla_attention(p: Dict, x: jax.Array, *, cfg: ModelConfig,
     if cache is not None and block_tables is not None:
         # paged latent pool: block-table write, then gather back the same
         # contiguous per-slot view the dense slab holds — the absorbed
-        # decode below is untouched and bit-exact with the dense path.
-        ckv_pages = _paged_cache_write(cache["ckv"], ckv, cache_len,
-                                       block_tables, axis=0)
-        krope_pages = _paged_cache_write(cache["krope"], k_rope, cache_len,
-                                         block_tables, axis=0)
-        new_cache = {"ckv": ckv_pages, "krope": krope_pages}
-        ckv = gather_kv_pages(ckv_pages, block_tables, seq_axis=0)
-        k_rope = gather_kv_pages(krope_pages, block_tables, seq_axis=0)
+        # decode below is untouched and bit-exact with the dense path. An
+        # int8 latent pool dequantizes on the gather (codes × per-page
+        # scale); fp8 upcasts in the gather's astype. Beyond-frontier
+        # positions hold junk either way — masked exactly like stale K/V.
+        if "ckv_scale" in cache:
+            ckv_pages, ckv_scales = _paged_cache_write_q(
+                cache["ckv"], cache["ckv_scale"], ckv, cache_len,
+                block_tables, axis=0)
+            krope_pages, krope_scales = _paged_cache_write_q(
+                cache["krope"], cache["krope_scale"], k_rope, cache_len,
+                block_tables, axis=0)
+            new_cache = {"ckv": ckv_pages, "krope": krope_pages,
+                         "ckv_scale": ckv_scales,
+                         "krope_scale": krope_scales}
+            pt = ckv_pages.shape[1]
+            ckv = (gather_kv_pages(ckv_pages, block_tables, seq_axis=0)
+                   .astype(jnp.float32)
+                   * jnp.repeat(ckv_scales[block_tables], pt,
+                                axis=1)[:, :, None])
+            k_rope = (gather_kv_pages(krope_pages, block_tables, seq_axis=0)
+                      .astype(jnp.float32)
+                      * jnp.repeat(krope_scales[block_tables], pt,
+                                   axis=1)[:, :, None])
+        else:
+            ckv_pages = _paged_cache_write(cache["ckv"], ckv, cache_len,
+                                           block_tables, axis=0)
+            krope_pages = _paged_cache_write(cache["krope"], k_rope,
+                                             cache_len, block_tables, axis=0)
+            new_cache = {"ckv": ckv_pages, "krope": krope_pages}
+            ckv = gather_kv_pages(ckv_pages, block_tables, seq_axis=0)
+            k_rope = gather_kv_pages(krope_pages, block_tables, seq_axis=0)
+            if ckv.dtype not in (jnp.bfloat16, jnp.float16, jnp.float32):
+                ckv = ckv.astype(jnp.float32)       # fp8 tier: decode=upcast
+                k_rope = k_rope.astype(jnp.float32)
         q_offset = cache_len
     elif cache is not None:
         ckv = _cache_write(cache["ckv"], ckv, cache_len, axis=1)

@@ -270,10 +270,17 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def init_paged_caches(cfg: ModelConfig, batch: int, n_pages: int,
-                      page_tokens: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+                      page_tokens: int, dtype=jnp.bfloat16,
+                      quant_scales: bool = False) -> Dict[str, Any]:
     """Paged two-tier pool caches: attention layers share a flat page pool
     (``n_pages`` pages of ``page_tokens`` tokens, page 0 = null); recurrent
-    SSM state stays per-slot resident exactly as in :func:`init_caches`."""
+    SSM state stays per-slot resident exactly as in :func:`init_caches`.
+
+    ``dtype``/``quant_scales`` come from the tier's codec (DESIGN.md
+    §Tiered KV compression & host parking): an int8 tier stores codes in
+    the page leaves plus one f32 amax scale per page in sibling
+    ``*_scale`` leaves; recurrent state never quantizes (the scheduler
+    rejects quantized codecs for recurrent families upstream)."""
     caches: Dict[str, Any] = {}
     for group in cfg.layer_groups():
         g: Dict[str, Any] = {}
@@ -281,9 +288,11 @@ def init_paged_caches(cfg: ModelConfig, batch: int, n_pages: int,
             if kind.attn == "mamba":
                 one = ssm.init_mamba_cache(cfg, batch)
             elif kind.attn == "mla":
-                one = attn_mod.init_mla_pages(cfg, n_pages, page_tokens, dtype)
+                one = attn_mod.init_mla_pages(cfg, n_pages, page_tokens,
+                                              dtype, quant_scales)
             else:
-                one = attn_mod.init_gqa_pages(cfg, n_pages, page_tokens, dtype)
+                one = attn_mod.init_gqa_pages(cfg, n_pages, page_tokens,
+                                              dtype, quant_scales)
             g[f"pos{pos}"] = jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (group.n_repeat,) + a.shape), one)
         caches[group.name] = g

@@ -793,6 +793,13 @@ class Engine:
         self.pools = PoolManager(model, ecfg, self.core._place)
         self.prefill_role = PrefillRole(self.core, self.pools)
         self.decode_role = DecodeRole(self.core, self.pools)
+        # ---- layer-2 host tier (DESIGN.md §Tiered KV compression & host
+        # parking): the paged pool of the LAST serve() call, kept so idle
+        # sessions can be parked between calls, and resume content staged
+        # by rid until the scheduler re-admits the session
+        self._last_pool: Optional[PoolState] = None
+        self._last_spill: Optional[Dict[str, Any]] = None
+        self._park_pending: Dict[int, Dict[str, np.ndarray]] = {}
         if ecfg.prompt_pad_multiple and self.core._has_ssm():
             raise ValueError(
                 "prompt_pad_multiple requires attention-only models: SSM "
@@ -905,6 +912,109 @@ class Engine:
                 break
         return jnp.concatenate(out, axis=1), state
 
+    # ------------------------------------------- layer-2 host tier (park)
+    def park_request(self, sch: sched_mod.Scheduler, rid: int) -> bytes:
+        """Park an active DECODING session to the layer-2 host tier.
+
+        Gathers the contents of every page the session maps (codes AND
+        per-page scales, verbatim — lossless at any codec) plus its
+        per-slot rows, serializes them with the scheduler residue through
+        :mod:`repro.serve.park`, then releases the slot and all device
+        resources via :meth:`Scheduler.park`. The returned blob is the
+        session; feed it to :meth:`resume_parked` to continue the decode
+        as a resume, never a re-prefill. fp16 pools round-trip
+        byte-identically (raw-bytes serialization, no recompute)."""
+        from repro.models import transformer
+        from repro.serve import park as park_mod
+        slot = next((s for s, r in sch.active.items() if r.rid == rid), None)
+        if slot is None:
+            raise KeyError(f"rid {rid} is not active; only resident "
+                           f"sessions park")
+        req = sch.active[slot]
+        if req.status != sched_mod.DECODING:
+            raise ValueError(
+                "only decoding sessions park — a mid-prefill request has "
+                "no emitted token to resume from; requeue it instead")
+        if self._last_pool is None:
+            raise RuntimeError("park_request follows a serve() call — no "
+                               "paged pool state is staged")
+        pool, cfg = self._last_pool, self.core.model.cfg
+        pages = np.asarray(req.pages, np.int32)
+        arrays: Dict[str, Any] = {}
+        for gname, gkey, is_paged in transformer.paged_cache_kinds(cfg):
+            for name, arr in pool.state["caches"][gname][gkey].items():
+                key = f"{gname}/{gkey}/{name}"
+                if is_paged:
+                    arrays["pages/" + key] = arr[:, pages]
+                else:
+                    arrays["rows/" + key] = jax.lax.dynamic_slice_in_dim(
+                        arr, slot, 1, axis=1)
+        meta = {"prompt": [int(t) for t in req.prompt],
+                "tokens": [int(t) for t in req.tokens],
+                "max_new_tokens": int(req.max_new_tokens),
+                "cache_len": int(req.cache_len),
+                "n_pages": len(req.pages)}
+        blob = park_mod.pack_parked(meta, arrays)
+        sch.park(slot)
+        self.pools.release(slot)
+        return blob
+
+    def resume_parked(self, sch: sched_mod.Scheduler,
+                      blob: bytes) -> sched_mod.Request:
+        """Re-enter a parked session: rebuild the scheduler residue
+        (:meth:`Scheduler.submit_parked`) and stage the page contents so
+        the next serve() boundary that admits it scatters them back."""
+        from repro.serve import park as park_mod
+        meta, arrays = park_mod.unpack_parked(blob)
+        req = sch.submit_parked(meta["prompt"], meta["max_new_tokens"],
+                                meta["tokens"])
+        self._park_pending[req.rid] = arrays
+        return req
+
+    def _exec_resume(self, pool: PoolState, rs: sched_mod.ResumeStep,
+                     geom: sched_mod.PageGeometry) -> PoolState:
+        """Scatter a parked session's staged content into its freshly
+        mapped pages and re-arm the slot for decode.
+
+        Only PRIVATE logical pages are written: shared (prefix-matched)
+        pages already hold the canonical bytes — at fp16 bit-identical to
+        the parked copies, which is what keeps park/resume bit-exact even
+        through sharing. Parked pages beyond the new mapping (old growth
+        margin) sit past the KV frontier and are dropped; freshly mapped
+        pages beyond the parked coverage stay zero until decode writes
+        them (scale reset at offset 0 keeps int8 clean)."""
+        from repro.models import transformer
+        req, slot = rs.req, rs.slot
+        arrays = self._park_pending.pop(req.rid)
+        cfg = self.core.model.cfg
+        n_shared = req.n_shared
+        parked_n = next((v.shape[1] for key, v in arrays.items()
+                         if key.startswith("pages/")), len(req.pages))
+        k = min(parked_n, len(req.pages)) - n_shared
+        priv = np.asarray(req.pages[n_shared:n_shared + k], np.int32)
+        new_caches: Dict[str, Any] = {}
+        for gname, gkey, is_paged in transformer.paged_cache_kinds(cfg):
+            leaf = pool.state["caches"][gname][gkey]
+            new_leaf = dict(leaf)
+            for name, arr in leaf.items():
+                if is_paged:
+                    src = jnp.asarray(
+                        arrays[f"pages/{gname}/{gkey}/{name}"])
+                    new_leaf[name] = arr.at[:, priv].set(
+                        src[:, n_shared:n_shared + k].astype(arr.dtype))
+                else:
+                    src = jnp.asarray(arrays[f"rows/{gname}/{gkey}/{name}"])
+                    new_leaf[name] = jax.lax.dynamic_update_slice_in_dim(
+                        arr, src.astype(arr.dtype), slot, axis=1)
+            new_caches.setdefault(gname, {})[gkey] = new_leaf
+        return dataclasses.replace(
+            pool, state={**pool.state, "caches": new_caches},
+            tok=pool.tok.at[slot].set(int(req.tokens[-1])),
+            cache_len=pool.cache_len.at[slot].set(req.cache_len),
+            done=pool.done.at[slot].set(False),
+            n_gen=pool.n_gen.at[slot].set(len(req.tokens)),
+            budget=pool.budget.at[slot].set(req.max_new_tokens))
+
     # -------------------------------------------------------- paged serve
     @staticmethod
     def _owner_role(req: sched_mod.Request) -> str:
@@ -989,6 +1099,15 @@ class Engine:
                     pools.claim(act.slot, role)
                 pool = core._timed("insert", pools.exec_restore,
                                    pool, spill, act, p_max, role=role)
+            # layer-2 resumes BEFORE admissions/prefill chunks: a resumed
+            # session's pages were registered in the prefix index at plan
+            # time, so their bytes must be resident before any same-
+            # boundary matcher's suffix chunk reads them
+            for rs in plan.resumes:
+                if disagg:
+                    pools.claim(rs.slot, DECODE_ROLE)
+                pool = core._timed("insert", self._exec_resume, pool, rs,
+                                   geom, role=dec_role)
             for slot, req in plan.admits:
                 req.admit_step = step_clock
                 if disagg:
@@ -1105,6 +1224,10 @@ class Engine:
             # consumer experiences when prefill runs on its own engine
             self.last_stats["boundary_decode_wall_s"] = boundary_decode_wall
         self._finish_spec_stats()
+        # stage the pool for park_request between serve() calls (the next
+        # serve() builds a fresh pool — parking is how a still-active
+        # session's KV survives the gap)
+        self._last_pool, self._last_spill = pool, spill
         stats = dict(self.last_stats)
         stats.update(sch.stats())
         return ServeReport(requests=(sch.drained + list(sch.active.values())

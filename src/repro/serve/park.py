@@ -1,0 +1,59 @@
+"""Layer-2 host tier: serialize an idle session off-device, resume later.
+
+DESIGN.md §Tiered KV compression & host parking. A *park* captures
+everything a session needs to continue decoding after its device
+resources are gone:
+
+  * the contents of every page its block-table row maps — KV codes AND,
+    for a scaled (int8) tier, the sibling per-page scales, copied
+    verbatim so the round trip is lossless at ANY codec (fp16 parks are
+    byte-identical; int8 parks restore the exact codes that were
+    resident, never a re-quantization);
+  * its per-slot rows — recurrent-state seats never park (the scheduler
+    rejects parking for recurrent families upstream), but the row slice
+    keeps the walk uniform;
+  * the scheduler residue: prompt, emitted tokens, decode budget, and
+    the KV frontier, enough for :meth:`Scheduler.submit_parked` to
+    rebuild the host mirror and re-enter admission as a *resume* rather
+    than a re-prefill.
+
+The byte format rides :mod:`repro.train.checkpoint`'s codec path — the
+same zstd(-or-zlib) per-leaf compression checkpoints use — wrapped with a
+small msgpack header for the residue. Raw-bytes round trip through
+``np.frombuffer`` keeps fp16 parks bit-exact end to end.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import msgpack
+import numpy as np
+
+from repro.train.checkpoint import _deserialize_leaves, _serialize_tree
+
+#: Bump when the blob layout changes — parked sessions may outlive
+#: processes, so a loud version check beats a shape error mid-resume.
+PARK_FORMAT = 1
+
+
+def pack_parked(meta: Dict[str, Any], arrays: Dict[str, Any]) -> bytes:
+    """Serialize one parked session: ``meta`` (json-safe scheduler
+    residue) + ``arrays`` (a pytree of page/row contents, host or device;
+    leaves are fetched and compressed per-leaf)."""
+    return msgpack.packb(
+        {"format": PARK_FORMAT, "meta": meta,
+         "arrays": _serialize_tree(arrays)},
+        use_bin_type=True)
+
+
+def unpack_parked(blob: bytes) -> Tuple[Dict[str, Any],
+                                        Dict[str, np.ndarray]]:
+    """Inverse of :func:`pack_parked`: ``(meta, flat arrays)`` with array
+    keys ``"/"``-joined along the original tree paths."""
+    top = msgpack.unpackb(blob, raw=False)
+    fmt = top.get("format")
+    if fmt != PARK_FORMAT:
+        raise ValueError(f"parked-session blob format {fmt!r}; this build "
+                         f"reads format {PARK_FORMAT}")
+    return top["meta"], _deserialize_leaves(top["arrays"])

@@ -42,6 +42,54 @@ PREFILL_ROLE = sched_mod.PREFILL_ROLE
 DECODE_ROLE = sched_mod.DECODE_ROLE
 
 
+# ------------------------------------------------------------- tier codecs
+
+
+@dataclasses.dataclass(frozen=True)
+class TierCodec:
+    """How one pool tier stores KV bytes (DESIGN.md §Tiered KV compression).
+
+    ``scaled`` codecs (int8) carry one f32 scale per page per leaf in a
+    sibling ``<leaf>_scale`` array; unscaled codecs are a plain dtype cast
+    (fp8-e4m3) or the identity (fp16 — bf16 storage, bit-exact by
+    construction, the reference every quantized tier is gated against).
+    """
+
+    name: str
+    dtype: Any
+    bytes_per_value: int
+    scaled: bool
+
+
+CODECS: Dict[str, TierCodec] = {
+    "fp16": TierCodec("fp16", jnp.bfloat16, 2, False),
+    "fp8": TierCodec("fp8", jnp.float8_e4m3fn, 1, False),
+    "int8": TierCodec("int8", jnp.int8, 1, True),
+}
+
+
+def quant_policy(kv_quant: Optional[str]) -> Tuple[str, str]:
+    """Map a ``--kv-quant`` knob to ``(layer0_codec, layer1_codec)``.
+
+    The spill tier quantizes at least as hard as layer 0 — layer-1
+    bandwidth is cheap (pages move once per preemption), capacity is not —
+    so ``fp8`` spills as int8 while ``int8`` is already at the floor.
+    """
+    if kv_quant in (None, "none", "fp16"):
+        return ("fp16", "fp16")
+    if kv_quant == "fp8":
+        return ("fp8", "int8")
+    if kv_quant == "int8":
+        return ("int8", "int8")
+    raise ValueError(f"unknown kv quant codec {kv_quant!r} "
+                     f"(choices: {', '.join(sorted(CODECS))})")
+
+
+def _has_recurrent_state(cfg) -> bool:
+    return any(kind.attn == "mamba"
+               for group in cfg.layer_groups() for kind in group.pattern)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class PoolState:
@@ -78,7 +126,8 @@ class PoolManager:
         self.model = model
         self.ecfg = ecfg
         self._place = place
-        self._tier_copy = None      # jitted layer-0 <-> layer-1 copy
+        self._tier_copy: Dict[Tuple[str, str], Any] = {}   # jitted tier copies
+        self._geom = None           # PageGeometry after init_paged_pool
         # ---- disaggregated slot ownership (role name per occupied slot).
         # Empty in combined mode: a single engine owns everything and the
         # bookkeeping would only add per-boundary host work.
@@ -126,11 +175,22 @@ class PoolManager:
                 "paged serving targets decoder-only token-prompt models; "
                 "others go through one-shot generate()")
         from repro.models import transformer
+        l0 = CODECS[getattr(geom, "layer0_codec", "fp16")]
+        l1 = CODECS[getattr(geom, "layer1_codec", "fp16")]
+        if (l0.name != "fp16" or l1.name != "fp16") \
+                and _has_recurrent_state(cfg):
+            raise ValueError(
+                "quantized KV pages require attention-only models: "
+                "recurrent SSM state integrates every step and has no "
+                "bounded per-page error story (docs/SERVING.md)")
+        self._geom = geom
         n_slots = sch.n_slots
         state = {"caches": transformer.init_paged_caches(
-            cfg, n_slots, geom.n_pages, geom.page_tokens)}
+            cfg, n_slots, geom.n_pages, geom.page_tokens,
+            dtype=l0.dtype, quant_scales=l0.scaled)}
         spill = transformer.init_paged_caches(
-            cfg, geom.n_spill_pages, geom.n_spill_pages, geom.page_tokens)
+            cfg, geom.n_spill_pages, geom.n_spill_pages, geom.page_tokens,
+            dtype=l1.dtype, quant_scales=l1.scaled)
         zeros = jnp.zeros((n_slots,), jnp.int32)
         pool = PoolState(
             state=state,
@@ -142,19 +202,53 @@ class PoolManager:
         return self._place(pool), self._place(spill)
 
     # -------------------------------------------------------- tier copies
-    def tier_copy_fn(self):
-        """ONE jitted layer-0 <-> layer-1 copy, shared by spill and restore
-        (jit's shape-keyed cache traces each direction independently).
+    def tier_copy_fn(self, src_codec: str = "fp16", dst_codec: str = "fp16"):
+        """ONE jitted layer-0 <-> layer-1 copy per codec pair, shared by
+        spill and restore (jit's shape-keyed cache traces each direction
+        independently).
 
         Page pools move whole pages (gather by source ids, scatter at
         destination ids — padded entries route through the null pages);
         recurrent per-slot state moves one row between the slot axis and
         the spill seat axis. Everything stays on device.
+
+        Same-codec tiers copy VERBATIM — int8 codes and their page scales
+        move untouched, so a quantized spill -> restore round-trip is
+        bit-exact (no double quantization). Cross-codec tiers (the fp8
+        policy's fp8 layer 0 <-> int8 layer 1) dequantize each moved page
+        to f32 and re-encode at the destination codec, writing fresh
+        per-page scales when the destination is scaled.
         """
-        if self._tier_copy is not None:
-            return self._tier_copy
+        key = (src_codec, dst_codec)
+        if key in self._tier_copy:
+            return self._tier_copy[key]
         from repro.models import transformer
+        from repro.kernels import paged_attention as pq
         cfg = self.model.cfg
+        src_c, dst_c = CODECS[src_codec], CODECS[dst_codec]
+        same = src_codec == dst_codec
+
+        def convert_pages(src_leaves, dst_leaves, pages_src, pages_dst):
+            out = dict(dst_leaves)
+            for name in [n for n in src_leaves if not n.endswith("_scale")]:
+                sel = src_leaves[name][:, pages_src]    # (r, Psel, *page)
+                if src_c.scaled:
+                    scl = src_leaves[name + "_scale"][:, pages_src]
+                    sel = (sel.astype(jnp.float32)
+                           * scl.reshape(scl.shape + (1,) * (sel.ndim - 2)))
+                else:
+                    sel = sel.astype(jnp.float32)
+                dst = dst_leaves[name]
+                if dst_c.scaled:
+                    codes, scales = pq.quantize_page_int8(
+                        sel, tuple(range(2, sel.ndim)))
+                    out[name] = dst.at[:, pages_dst].set(codes)
+                    out[name + "_scale"] = dst_leaves[
+                        name + "_scale"].at[:, pages_dst].set(scales)
+                else:
+                    out[name] = dst.at[:, pages_dst].set(
+                        sel.astype(dst.dtype))
+            return out
 
         def copy(src_caches, dst_caches, row_src, row_dst, pages_src,
                  pages_dst):
@@ -167,14 +261,26 @@ class PoolManager:
                     d, row.astype(d.dtype), row_dst, axis=1)
 
             out: Dict[str, Any] = {}
-            for gname, key, is_paged in transformer.paged_cache_kinds(cfg):
-                fn = page_copy if is_paged else row_copy
-                out.setdefault(gname, {})[key] = jax.tree.map(
-                    fn, src_caches[gname][key], dst_caches[gname][key])
+            for gname, gkey, is_paged in transformer.paged_cache_kinds(cfg):
+                src_g, dst_g = src_caches[gname][gkey], dst_caches[gname][gkey]
+                if not is_paged:
+                    leaf = jax.tree.map(row_copy, src_g, dst_g)
+                elif same:
+                    leaf = jax.tree.map(page_copy, src_g, dst_g)
+                else:
+                    leaf = convert_pages(src_g, dst_g, pages_src, pages_dst)
+                out.setdefault(gname, {})[gkey] = leaf
             return out
 
-        self._tier_copy = jax.jit(copy)
-        return self._tier_copy
+        self._tier_copy[key] = jax.jit(copy)
+        return self._tier_copy[key]
+
+    def _tier_codecs(self) -> Tuple[str, str]:
+        geom = self._geom
+        if geom is None:
+            return ("fp16", "fp16")
+        return (getattr(geom, "layer0_codec", "fp16"),
+                getattr(geom, "layer1_codec", "fp16"))
 
     @staticmethod
     def pad_pages(pages, p_max: int) -> jax.Array:
@@ -185,7 +291,8 @@ class PoolManager:
     def exec_spill(self, pool: PoolState, spill: Dict[str, Any],
                    act: sched_mod.SpillAction, p_max: int) -> Dict[str, Any]:
         self.owner.pop(act.slot, None)      # preempted: the slot frees
-        return self.tier_copy_fn()(
+        l0, l1 = self._tier_codecs()
+        return self.tier_copy_fn(l0, l1)(
             pool.state["caches"], spill,
             jnp.asarray(act.slot, jnp.int32),
             jnp.asarray(act.seat, jnp.int32),
@@ -201,7 +308,8 @@ class PoolManager:
         written by its own upcoming decode step), so decode resumes
         bit-exactly where preemption cut it."""
         req = act.req
-        caches = self.tier_copy_fn()(
+        l0, l1 = self._tier_codecs()
+        caches = self.tier_copy_fn(l1, l0)(
             spill, pool.state["caches"],
             jnp.asarray(act.seat, jnp.int32),
             jnp.asarray(act.slot, jnp.int32),

@@ -61,6 +61,8 @@ DECODING = "decoding"
 DRAINED = "drained"
 REJECTED = "rejected"      # invalid for the pool (e.g. prompt > max_len)
 PREEMPTED = "preempted"    # spilled to layer 1, waiting to be restored
+PARKED = "parked"          # serialized to the layer-2 host tier; a resumed
+                           # submission re-enters admission with its KV intact
 
 #: Engine role names (DESIGN.md §Disaggregated serving). Routing a slot to
 #: a role is a *scheduling* decision, so the canonical definitions live
@@ -147,6 +149,21 @@ def kv_bytes_per_token(cfg: ModelConfig, cache_dtype_bytes: int = 2) -> int:
             else:
                 per_tok = 2 * cfg.n_kv_heads * cfg.head_dim
             total += group.n_repeat * per_tok * cache_dtype_bytes
+    return total
+
+
+def kv_scale_bytes_per_page(cfg: ModelConfig) -> int:
+    """Per-page overhead of a *scaled* codec (DESIGN.md §Tiered KV
+    compression): one f32 scale per page per KV leaf — two leaves per
+    attention layer (k/v, or the MLA ckv/krope pair), stored alongside the
+    block table and priced into the page so quantized geometry never
+    overcommits the byte budget."""
+    total = 0
+    for group in cfg.layer_groups():
+        for kind in group.pattern:
+            if kind.attn == "mamba":
+                continue
+            total += group.n_repeat * 2 * 4
     return total
 
 
@@ -344,7 +361,14 @@ class PageGeometry:
     n_pages: int                # layer-0 physical pages, incl. null page 0
     n_spill_pages: int          # layer-1 physical pages, incl. null page 0
     max_pages_per_slot: int     # block-table width: ceil(max_len/page_tokens)
-    page_bytes: int             # KV bytes of one page (all layers)
+    page_bytes: int             # KV bytes of one layer-0 page, at its codec
+    # tier codecs (DESIGN.md §Tiered KV compression): how each tier encodes
+    # page bytes. "fp16" is the identity (bit-exact, the default); quantized
+    # codecs shrink page_bytes so the same budget holds more pages. The
+    # spill tier may encode differently (spill_page_bytes prices it).
+    layer0_codec: str = "fp16"
+    layer1_codec: str = "fp16"
+    spill_page_bytes: Optional[int] = None   # None -> same as page_bytes
 
     @property
     def depth(self) -> int:
@@ -365,7 +389,9 @@ class PageGeometry:
 
     @property
     def layer1_bytes(self) -> int:
-        return self.n_spill_data_pages * self.page_bytes
+        per = (self.spill_page_bytes if self.spill_page_bytes is not None
+               else self.page_bytes)
+        return self.n_spill_data_pages * per
 
     def pages_for(self, n_tokens: int) -> int:
         """Pages needed to map ``n_tokens`` of KV (at least one)."""
@@ -380,7 +406,8 @@ def derive_page_geometry(cfg: ModelConfig, max_len: int, *,
                          cache_dtype_bytes: int = 2,
                          layer0_bytes: Optional[int] = None,
                          layer1_bytes: Optional[int] = None,
-                         model_shards: int = 1) -> PageGeometry:
+                         model_shards: int = 1,
+                         kv_quant: Optional[str] = None) -> PageGeometry:
     """Page count, page size, and spill budget from the two-tier partition.
 
     ``layer0_bytes``/``layer1_bytes`` override the derived tier budgets —
@@ -396,19 +423,44 @@ def derive_page_geometry(cfg: ModelConfig, max_len: int, *,
     ``kv_shards``x the pages — the paper's die-level capacity split across
     chips. Byte overrides are per-shard budgets and scale the same way;
     the per-slot cap scales so one shard's worst case is unchanged.
+
+    ``kv_quant`` picks the tier codecs (DESIGN.md §Tiered KV compression):
+    each tier's page is priced at ITS codec's bytes-per-value (plus the
+    per-page scale overhead for scaled codecs), so a quantized layer 0
+    yields ~2x the pages in the same byte budget — the residency win the
+    paper's capacity-per-byte argument predicts.
     """
+    from repro.serve.pool import CODECS, quant_policy   # pool imports us
+    l0_name, l1_name = quant_policy(kv_quant)
+    l0, l1 = CODECS[l0_name], CODECS[l1_name]
+    if (l0.name != "fp16" or l1.name != "fp16") and any(
+            kind.attn == "mamba"
+            for group in cfg.layer_groups() for kind in group.pattern):
+        raise ValueError(
+            "quantized KV pages require attention-only models: recurrent "
+            "SSM state integrates every step and has no bounded per-page "
+            "error story (docs/SERVING.md)")
     pt = int(max(1, min(page_tokens, max_len)))
     p_max = -(-int(max_len) // pt)
-    page_bytes = kv_bytes_per_token(cfg, cache_dtype_bytes) * pt
+
+    def tier_page_bytes(codec) -> int:
+        bpv = codec.bytes_per_value if kv_quant else cache_dtype_bytes
+        per = kv_bytes_per_token(cfg, bpv) * pt
+        if codec.scaled:
+            per += kv_scale_bytes_per_page(cfg)
+        return per
+
+    page_bytes = tier_page_bytes(l0)
+    spill_page_bytes = tier_page_bytes(l1)
     shards = kv_shards(cfg, model_shards)
     tiers = pool_tiers(target, fraction=fraction,
                        layer1_fraction=layer1_fraction).scaled(shards)
     resident = resident_bytes_per_slot(cfg) * max_slots
-    n0, n1 = tiers.units_per_tier(page_bytes, resident)
+    n0, n1 = tiers.units_per_tier((page_bytes, spill_page_bytes), resident)
     if layer0_bytes is not None:
         n0 = (layer0_bytes * shards) // max(page_bytes, 1)
     if layer1_bytes is not None:
-        n1 = (layer1_bytes * shards) // max(page_bytes, 1)
+        n1 = (layer1_bytes * shards) // max(spill_page_bytes, 1)
     cap = max_slots * p_max * shards
     n0, n1 = min(int(n0), cap), min(int(n1), cap)
     if n0 < p_max:
@@ -418,7 +470,9 @@ def derive_page_geometry(cfg: ModelConfig, max_len: int, *,
             f"budget or shrink max_len")
     return PageGeometry(page_tokens=pt, n_pages=n0 + 1,
                         n_spill_pages=max(n1, 0) + 1,
-                        max_pages_per_slot=p_max, page_bytes=page_bytes)
+                        max_pages_per_slot=p_max, page_bytes=page_bytes,
+                        layer0_codec=l0.name, layer1_codec=l1.name,
+                        spill_page_bytes=spill_page_bytes)
 
 
 class PagePool:
@@ -635,6 +689,20 @@ class RestoreAction:
 
 
 @dataclasses.dataclass
+class ResumeStep:
+    """One layer-2 resume (DESIGN.md §Tiered KV compression & host
+    parking): a parked session re-admitted with its KV intact. The engine
+    scatters the parked page contents (held host-side since
+    ``Engine.park_request``) into the PRIVATE tail of ``req.pages`` —
+    logical pages ``req.n_shared..`` — and re-arms the slot vectors; the
+    leading ``n_shared`` pages were re-matched through the prefix index
+    and map read-only, exactly like a shared admission."""
+
+    slot: int
+    req: Request
+
+
+@dataclasses.dataclass
 class PagePlan:
     """Everything one drain boundary decided; the engine executes the device
     copies in EXACTLY this order (spills read layer 0 before any restore or
@@ -654,6 +722,11 @@ class PagePlan:
     # completes THIS boundary — executed after their final prefill chunk,
     # before the decode role's block-table upload
     handovers: List[HandoverStep] = dataclasses.field(default_factory=list)
+    # layer-2 host tier only: parked sessions re-admitted this boundary —
+    # executed after restores (their scatters write freshly allocated pages)
+    # and before admits (a same-boundary admission may prefix-match pages a
+    # resume just repopulated)
+    resumes: List[ResumeStep] = dataclasses.field(default_factory=list)
 
 
 def percentile(xs: Sequence[float], q: float) -> float:
@@ -829,6 +902,13 @@ class Scheduler:
         self.preemptions = 0
         self.spilled_pages = 0
         self.restores = 0
+        # ---- layer-2 host tier (DESIGN.md §Tiered KV compression & host
+        # parking): idle sessions serialized off-device and re-admitted
+        self.parks = 0
+        self.park_resumes = 0
+        #: most sequences concurrently resident in layer 0 at any boundary —
+        #: the numerator of the residents-per-byte gate
+        self.resident_high_water = 0
         # ---- disaggregated roles (DESIGN.md §Disaggregated serving)
         self.disaggregate = disaggregate
         self.handovers = 0
@@ -924,6 +1004,34 @@ class Scheduler:
         self.queue.append(req)
         return req
 
+    def submit_parked(self, prompt: Sequence[int], max_new_tokens: int,
+                      tokens: Sequence[int], *,
+                      submit_step: int = 0) -> Request:
+        """Enqueue a session resumed from the layer-2 host tier
+        (DESIGN.md §Tiered KV compression & host parking).
+
+        ``tokens`` are the outputs already emitted before the park, so the
+        request's host-side ``cache_len`` mirror lands exactly where the
+        parked pool bytes left it. The request enters admission with status
+        ``PARKED`` and takes the resume branch of :meth:`plan_boundary`:
+        pages are re-allocated (full prompt pages re-matched through the
+        prefix index when sharing is on) and the engine scatters the parked
+        page contents back — a resume, never a re-prefill."""
+        if self.pages is None:
+            raise ValueError("park/resume requires the paged pool (pages=)")
+        if not tokens:
+            raise ValueError("a parked session has emitted at least its "
+                             "first token; got an empty token list")
+        req = Request(rid=self._next_rid,
+                      prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=int(max_new_tokens),
+                      tokens=list(int(t) for t in tokens),
+                      submit_step=submit_step)
+        self._next_rid += 1
+        req.status = PARKED
+        self.queue.append(req)
+        return req
+
     # --------------------------------------------------------- admission
     def _pop_next(self) -> Request:
         if self.policy == "shortest":
@@ -1003,6 +1111,51 @@ class Scheduler:
             req.pages = []
         req.status = status
         self.drained.append(req)
+        return req
+
+    def park(self, slot: int) -> Request:
+        """Evict ``slot`` to the layer-2 host tier (DESIGN.md §Tiered KV
+        compression & host parking). The caller (the engine) has already
+        gathered the session's page bytes into a host-side blob; this
+        releases every device resource the slot held. Pages drop one
+        reference exactly like :meth:`complete` — a shared page stays
+        resident for its other readers, so parking never yanks history out
+        from under a live matcher. The returned request is neither drained
+        nor queued: it re-enters admission via :meth:`submit_parked` when
+        its blob comes back."""
+        req = self.active.pop(slot)
+        self.table.release(slot)
+        self._active_order.remove(slot)
+        if self.page_pool is not None and req.pages:
+            released = self.page_pool.free(req.pages)
+            if self.prefix_index is not None:
+                self.prefix_index.forget(released)
+            req.pages = []
+        req.prefix_len, req.n_shared, req.cow_src = 0, 0, -1
+        req.status = PARKED
+        self.parks += 1
+        return req
+
+    def requeue(self, slot: int) -> Request:
+        """Return a mid-prefill resident to the queue from scratch.
+
+        The park path needs a decoded token to resume from, so a request
+        caught mid-prefill when the engine idles out cannot park — it
+        releases its pages and restarts its prefill on re-admission (it
+        has emitted nothing, so nothing is lost but the partial prompt
+        work). Queued at the FRONT: it was admitted once already."""
+        req = self.active.pop(slot)
+        self.table.release(slot)
+        self._active_order.remove(slot)
+        if self.page_pool is not None and req.pages:
+            released = self.page_pool.free(req.pages)
+            if self.prefix_index is not None:
+                self.prefix_index.forget(released)
+            req.pages = []
+        req.prefill_pos = -1
+        req.prefix_len, req.n_shared, req.cow_src = 0, 0, -1
+        req.status = QUEUED
+        self.queue.appendleft(req)
         return req
 
     # --------------------------------------------------- paged admission
@@ -1167,6 +1320,54 @@ class Scheduler:
                 self.spill_pool.free(src)
                 self.seat_pool.free([seat])
                 continue
+            if req.status == PARKED:
+                # layer-2 resume (DESIGN.md §Tiered KV compression & host
+                # parking): the session's bytes live in a host blob, so
+                # admission only re-maps layer-0 page ids — the engine
+                # scatters the parked contents back; never a re-prefill.
+                # Prefix re-match covers FULL prompt pages only: a resumed
+                # session's write frontier is past its prompt, so matched
+                # pages are history it merely reads, but a mid-page match
+                # would need the COW copy the resume scatter path
+                # deliberately avoids.
+                shared = []
+                if self.prefix_index is not None:
+                    matched = self.prefix_index.match(req.prompt)
+                    full = min(len(matched),
+                               (req.prompt_len - 1) // geom.page_tokens)
+                    shared = matched[:full]
+                need = max(geom.pages_for(
+                    min(req.cache_len + chunk_tokens, max_len)),
+                    geom.pages_for(req.cache_len))
+                got = self.page_pool.alloc(need - len(shared))
+                if got is None:
+                    break
+                if shared:
+                    self.page_pool.share(shared)
+                del self.queue[idx]
+                slot = self.table.allocate(req.rid)
+                req.pages = shared + got
+                req.prefix_len = len(shared) * geom.page_tokens
+                req.n_shared, req.cow_src = len(shared), -1
+                if self.prefix_index is not None:
+                    if req.prefix_len:
+                        self.prefix_hits += 1
+                        self.shared_prefix_tokens += req.prefix_len
+                    else:
+                        self.prefix_misses += 1
+                    # register at plan time: the engine executes resumes
+                    # before this boundary's admissions prefill anything,
+                    # so a same-boundary matcher reads settled bytes
+                    self.prefix_index.register(req.prompt, req.pages)
+                req.status = DECODING
+                if self.disaggregate:
+                    req.owner = DECODE_ROLE
+                self.active[slot] = req
+                self.admit_order.append(req.rid)
+                self._active_order.append(slot)
+                self.park_resumes += 1
+                plan.resumes.append(ResumeStep(slot=slot, req=req))
+                continue
             if req.prompt_len > max_len:
                 del self.queue[idx]
                 req.status = REJECTED
@@ -1226,6 +1427,8 @@ class Scheduler:
         else:
             self.boundary_prefill_tokens.append(sum(
                 r.prompt_len - r.prefix_len for _, r in plan.admits))
+        self.resident_high_water = max(self.resident_high_water,
+                                       len(self.active))
         return plan
 
     def _plan_prefill_chunk(self, plan: PagePlan, slot: int, req: Request,
@@ -1397,6 +1600,13 @@ class Scheduler:
                 "disaggregate": self.disaggregate,
                 "handovers": self.handovers,
                 "handover_pages": self.handover_pages,
+                # tiered codecs + layer-2 host tier (DESIGN.md §Tiered KV
+                # compression & host parking)
+                "layer0_codec": geom.layer0_codec,
+                "layer1_codec": geom.layer1_codec,
+                "parks": self.parks,
+                "park_resumes": self.park_resumes,
+                "resident_high_water": self.resident_high_water,
             })
         else:
             out["paged"] = False

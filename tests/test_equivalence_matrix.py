@@ -276,6 +276,119 @@ def test_disagg_cell_matches_single_engine(engines, cell):
         assert st["decode_steps"] == st["chunks"]
 
 
+# ---------------------------------------------------------------------------
+# The tier-codec axis (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+#: (cell name, prefix_share, chunk_prefill_tokens, speculate_tokens,
+#: disaggregate) — every serving mode the codec must compose with.
+KVQ_CELLS = (("paged", False, None, 0, False),
+             ("paged-share", True, None, 0, False),
+             ("chunked", False, 6, 0, False),
+             ("speculate", False, None, 4, False),
+             ("disagg", False, 6, 0, True))
+
+#: One-step logit-error budgets for the quantized codecs, pinned against
+#: measured drift on these tiny models (int8 ~8e-3, fp8 ~2.3e-2) with
+#: generous margin: per-step error past these bounds is an encoder
+#: regression, not noise.
+KVQ_LOGIT_BOUND = {"int8": 0.05, "fp8": 0.10}
+#: Greedy FIRST-token agreement gate for quantized serving. Full-sequence
+#: agreement is deliberately not gated — one early argmax flip on a
+#: random tiny model legitimately diverges the rest of the rollout.
+KVQ_FIRST_TOKEN_AGREEMENT = 0.75
+
+
+def _quant_geometry(cfg, kv_quant):
+    return sm.derive_page_geometry(cfg, MAX_LEN, page_tokens=PT,
+                                   max_slots=3, layer0_bytes=64 * 1024,
+                                   kv_quant=kv_quant)
+
+
+@pytest.mark.parametrize("cell", KVQ_CELLS, ids=[c[0] for c in KVQ_CELLS])
+def test_fp16_codec_cells_bit_identical(engines, references, cell):
+    """kv_quant="fp16" is the identity codec: a geometry derived through
+    the explicit codec path serves every mode bit-identical to the
+    one-shot rollout, exactly like the codec-less pool."""
+    _, share, chunk, spec, disagg = cell
+    eng = engines(TINY.name)
+    refs = references(TINY.name)
+    prev = eng.ecfg.speculate_tokens
+    eng.ecfg.speculate_tokens = spec
+    try:
+        sch = sm.Scheduler(3, pages=_quant_geometry(TINY, "fp16"),
+                           prefix_share=share, chunk_prefill_tokens=chunk,
+                           disaggregate=disagg)
+        rids = [sch.submit(p, g).rid for p, g in REQS]
+        with jax.transfer_guard_device_to_host("disallow"):
+            rep = eng.serve(scheduler=sch)
+    finally:
+        eng.ecfg.speculate_tokens = prev
+    assert rep.stats["layer0_codec"] == "fp16"
+    for rid, ref in zip(rids, refs):
+        got = rep.outputs[rid]
+        assert len(got) > 0
+        assert got == ref[:len(got)], (cell[0], rid)
+
+
+@pytest.mark.parametrize("kv_quant", sorted(KVQ_LOGIT_BOUND))
+def test_quantized_one_step_logit_drift_bounded(engines, kv_quant):
+    """One decode step off a quantized pool: max|Δlogit| vs the fp16 pool
+    stays inside the pinned budget and the argmax token agrees."""
+    eng = engines(TINY.name)
+    prompt, _ = REQS[0]
+    logits = {}
+    for qq in ("fp16", kv_quant):
+        geom = _quant_geometry(TINY, qq)
+        sch = sm.Scheduler(3, pages=geom)
+        sch.submit(prompt, 8)
+        plan = sch.plan_boundary(chunk_tokens=1, max_len=MAX_LEN)
+        pool, _ = eng.init_paged_pool(sch)
+        slot, rr = plan.admits[0]
+        pool, _first = eng.prefill_role.paged_admit(pool, slot, rr, geom)
+        pool = dataclasses.replace(
+            pool, block_tables=jnp.asarray(sch.block_table()))
+        out = eng.model.decode_step(
+            eng.params, pool.tok[:, None], pool.state, pool.cache_len,
+            block_tables=pool.block_tables, plans=eng.plans)
+        lg = out[0] if isinstance(out, tuple) else out
+        logits[qq] = np.asarray(
+            lg[slot, 0, :TINY.vocab_size], np.float32)
+    drift = float(np.max(np.abs(logits[kv_quant] - logits["fp16"])))
+    assert drift <= KVQ_LOGIT_BOUND[kv_quant], drift
+    assert int(np.argmax(logits[kv_quant])) == \
+        int(np.argmax(logits["fp16"]))
+
+
+@pytest.mark.parametrize("cell", KVQ_CELLS, ids=[c[0] for c in KVQ_CELLS])
+@pytest.mark.parametrize("kv_quant", sorted(KVQ_LOGIT_BOUND))
+def test_quantized_cells_serve_with_greedy_agreement(engines, references,
+                                                     kv_quant, cell):
+    """Quantized codecs compose with every serving mode: all requests
+    drain with output, and the greedy FIRST token agrees with the fp16
+    reference on at least the pinned fraction of the stream."""
+    _, share, chunk, spec, disagg = cell
+    eng = engines(TINY.name)
+    refs = references(TINY.name)
+    prev = eng.ecfg.speculate_tokens
+    eng.ecfg.speculate_tokens = spec
+    try:
+        sch = sm.Scheduler(3, pages=_quant_geometry(TINY, kv_quant),
+                           prefix_share=share, chunk_prefill_tokens=chunk,
+                           disaggregate=disagg)
+        rids = [sch.submit(p, g).rid for p, g in REQS]
+        with jax.transfer_guard_device_to_host("disallow"):
+            rep = eng.serve(scheduler=sch)
+    finally:
+        eng.ecfg.speculate_tokens = prev
+    assert rep.stats["layer0_codec"] == kv_quant
+    outs = [rep.outputs[r] for r in rids]
+    assert all(len(o) > 0 for o in outs)
+    agree = sum(o[0] == ref[0] for o, ref in zip(outs, refs))
+    assert agree >= KVQ_FIRST_TOKEN_AGREEMENT * len(REQS), \
+        (cell[0], kv_quant, agree)
+
+
 def test_mesh2_matrix_in_subprocess():
     """mesh=2 on forced host-platform devices, in a child python (the XLA
     device-count flag only takes effect before jax imports)."""

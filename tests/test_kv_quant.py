@@ -1,0 +1,357 @@
+"""Tier-codec tests (ISSUE 10): per-page quantized KV codecs.
+
+Pins the tentpole's numeric guarantees (DESIGN.md §Tiered KV compression
+& host parking): the int8 codec's round-trip error bound per leaf kind,
+the write path's per-page scale invariants (monotone growth within a
+page, RESET at offset 0 so a reused page never inherits a stale amax),
+spilled-then-restored quantized serving bit-identical to never-spilled
+(same-codec tier copies move codes + scales verbatim), and the loud
+rejection of quantized codecs on recurrent families. A hypothesis
+property extends the allocator model of ``test_paged_properties.py``
+with codec-tagged pages: a page's bytes never change tier codec without
+a planned tier copy, and per-page scales live exactly as long as the
+page is mapped.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_attention import (INT8_QMAX, dequantize_page_int8,
+                                           quantize_page_int8)
+from repro.models import build_model
+from repro.models.attention import _paged_cache_write_q
+from repro.models.config import ModelConfig
+from repro.serve import scheduler as sm
+from repro.serve.engine import Engine, EngineConfig
+from repro.serve.pool import CODECS, quant_policy
+
+MAX_LEN = 64
+PT = 8
+
+TINY = ModelConfig(
+    name="tiny-kvq", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=128,
+)
+TINY_MLA = dataclasses.replace(
+    TINY, name="tiny-kvq-mla", n_kv_heads=4, use_mla=True, kv_lora_rank=16,
+    qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16)
+TINY_HYBRID = dataclasses.replace(
+    TINY, name="tiny-kvq-hybrid", family="hybrid", n_layers=4,
+    ssm_d_state=8, ssm_conv=4, attn_period=2, attn_offset=1)
+
+
+# ------------------------------------------------------------- codec bounds
+
+#: (leaf kind, page shape, per-page reduced axes) — one entry per distinct
+#: pooled-leaf layout the write paths quantize: GQA k/v pages are
+#: (pages, kv_heads, page_tokens, head_dim) with ONE scale per page (all
+#: axes but the page axis reduced), MLA latent/rope pages are
+#: (pages, page_tokens, width).
+LEAF_KINDS = [
+    ("gqa-kv", (5, 2, PT, 16), (1, 2, 3)),
+    ("mla-ckv", (5, PT, 16), (1, 2)),
+    ("mla-krope", (5, PT, 8), (1, 2)),
+]
+
+
+@pytest.mark.parametrize("kind,shape,axes", LEAF_KINDS,
+                         ids=[k[0] for k in LEAF_KINDS])
+def test_int8_round_trip_error_bound_per_leaf_kind(kind, shape, axes):
+    """|dequant(quant(x)) - x| <= scale/2 per element, scale = amax/127
+    per page — the symmetric-int8 contract every pooled leaf relies on."""
+    rng = np.random.RandomState(7)
+    x = jnp.asarray(rng.randn(*shape).astype(np.float32) * 3.0)
+    codes, scales = quantize_page_int8(x, axes)
+    assert codes.dtype == jnp.int8
+    assert scales.shape == (shape[0],)
+    back = dequantize_page_int8(codes, scales, axes)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    bound = np.asarray(scales)[(slice(None),) + (None,) * (len(shape) - 1)]
+    assert (err <= bound / 2 + 1e-7).all(), (kind, err.max())
+    # codes stay in the symmetric range: -128 is never produced
+    assert int(np.asarray(codes).min()) >= -int(INT8_QMAX)
+
+
+def test_int8_all_zero_page_round_trips_exactly():
+    """An all-zero page gets scale 0 and all-zero codes; dequant is exact
+    (no 0/0) — fresh pages past the KV frontier stay clean."""
+    x = jnp.zeros((3, 2, PT, 16), jnp.float32)
+    codes, scales = quantize_page_int8(x, (1, 2, 3))
+    assert (np.asarray(scales) == 0).all()
+    assert (np.asarray(codes) == 0).all()
+    back = dequantize_page_int8(codes, scales, (1, 2, 3))
+    assert (np.asarray(back) == 0).all()
+
+
+def test_int8_exact_values_round_trip_bit_exact():
+    """Values already on the code lattice (k * amax/127) survive the
+    round trip exactly — the property same-codec tier copies lean on."""
+    scale = 0.5 / INT8_QMAX
+    vals = np.array([-127, -64, 0, 1, 64, 127], np.float32) * scale
+    x = jnp.asarray(np.tile(vals, (2, 1, PT, 1))[..., :6])
+    codes, scales = quantize_page_int8(x, (1, 2, 3))
+    back = dequantize_page_int8(codes, scales, (1, 2, 3))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+# ---------------------------------------------------- write-path invariants
+
+def _write_tokens(tokens, cache_lens):
+    """Drive ``_paged_cache_write_q`` token by token over a 1-row pool
+    (axis=0 layout: pages are (n_pages, page_tokens, width)) and return
+    the scale trajectory observed after each append."""
+    n_pages, width = 4, 6
+    pages = jnp.zeros((n_pages, PT, width), jnp.int8)
+    scales = jnp.zeros((n_pages,), jnp.float32)
+    bt = jnp.asarray([[1, 2, 3]], jnp.int32)          # one slot, 3 pages
+    traj = []
+    for tok, pos in zip(tokens, cache_lens):
+        new = jnp.asarray(tok, jnp.float32).reshape(1, 1, width)
+        pages, scales = _paged_cache_write_q(
+            pages, scales, new, jnp.asarray([pos], jnp.int32), bt, 0)
+        traj.append((np.asarray(pages), np.asarray(scales)))
+    return traj
+
+
+def test_scale_monotone_within_page_and_resets_at_offset_zero():
+    """Within one page the scale only grows (history codes only get
+    COARSER, never clip); at offset 0 it RESETS to the fresh token's amax
+    instead of inheriting the previous tenant's."""
+    width = 6
+    big = np.full((width,), 8.0, np.float32)
+    small = np.full((width,), 0.5, np.float32)
+    tiny = np.full((width,), 0.125, np.float32)
+    # page 1: offsets 0..2 with amplitudes small, big, tiny
+    # page 2: offset 0 (pos == PT) with amplitude tiny -> reset, not max
+    traj = _write_tokens([small, big, tiny, tiny], [0, 1, 2, PT])
+    scales = [t[1] for t in traj]
+    s_small, s_big, s_tiny = (0.5 / INT8_QMAX, 8.0 / INT8_QMAX,
+                              0.125 / INT8_QMAX)
+    assert scales[0][1] == pytest.approx(s_small)
+    assert scales[1][1] == pytest.approx(s_big)       # grew to cover big
+    assert scales[2][1] == pytest.approx(s_big)       # monotone: no shrink
+    assert scales[3][1] == pytest.approx(s_big)       # untouched page keeps
+    assert scales[3][2] == pytest.approx(s_tiny)      # offset-0 RESET
+    # the grown scale still represents the earlier small token within the
+    # coarser lattice's half-step
+    page1 = traj[2][0][1].astype(np.float32) * scales[2][1]
+    assert np.abs(page1[0] - small).max() <= scales[2][1] / 2 + 1e-7
+
+
+def test_scale_reset_protects_reused_page_precision():
+    """A page reused after a big-amplitude tenant re-quantizes the NEW
+    tenant at its own fine scale — without the reset the 0.01 token would
+    round to codes of one or two steps of the stale 8.0-amax lattice."""
+    width = 6
+    big = np.full((width,), 8.0, np.float32)
+    fine = np.linspace(-0.01, 0.01, width).astype(np.float32)
+    traj = _write_tokens([big, fine], [0, 0])         # same page, off 0
+    pages, scales = traj[-1]
+    got = pages[1].astype(np.float32)[0] * scales[1]
+    assert scales[1] == pytest.approx(0.01 / INT8_QMAX)
+    assert np.abs(got - fine).max() <= scales[1] / 2 + 1e-7
+
+
+# --------------------------------------- spill/restore serving equivalence
+
+def _serve_outputs(cfg, engine, layer0_bytes, kv_quant, reqs):
+    geom = sm.derive_page_geometry(cfg, MAX_LEN, page_tokens=PT,
+                                   max_slots=3, layer0_bytes=layer0_bytes,
+                                   layer1_bytes=256 * 1024,
+                                   kv_quant=kv_quant)
+    sch = sm.Scheduler(3, pages=geom)
+    rids = [sch.submit(p, g).rid for p, g in reqs]
+    with jax.transfer_guard_device_to_host("disallow"):
+        rep = engine.serve(scheduler=sch)
+    return [rep.outputs[r] for r in rids], rep.stats
+
+
+@pytest.mark.parametrize("kv_quant", ["int8", "fp8"])
+def test_quantized_spill_restore_matches_never_spilled(kv_quant):
+    """Preempt-and-restore under a quantized codec is bit-identical to the
+    same quantized serve with an ample pool: same-codec tier copies move
+    codes AND scales verbatim, so a spill round trip is lossless even when
+    the codec itself is lossy."""
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params,
+                 EngineConfig(max_len=MAX_LEN, sync_interval=4))
+    rng = np.random.RandomState(5)
+    reqs = [(rng.randint(2, 128, size=n).astype(np.int32), g)
+            for n, g in ((21, 12), (17, 10), (25, 8), (13, 14))]
+    ample, st_a = _serve_outputs(TINY, eng, 128 * 1024, kv_quant, reqs)
+    tight, st_t = _serve_outputs(TINY, eng, 9000, kv_quant, reqs)
+    assert st_t["preemptions"] > 0, "tight pool never spilled"
+    assert st_a["preemptions"] == 0
+    assert st_t["layer0_codec"] == ("int8" if kv_quant == "int8" else "fp8")
+    assert tight == ample
+
+
+# ---------------------------------------------------------- policy & gates
+
+def test_quant_policy_mapping():
+    assert quant_policy(None) == ("fp16", "fp16")
+    assert quant_policy("none") == ("fp16", "fp16")
+    assert quant_policy("fp16") == ("fp16", "fp16")
+    assert quant_policy("fp8") == ("fp8", "int8")    # spill quantizes harder
+    assert quant_policy("int8") == ("int8", "int8")
+    with pytest.raises(ValueError, match="kv quant"):
+        quant_policy("int4")
+
+
+def test_codec_table_prices_bytes():
+    assert CODECS["fp16"].bytes_per_value == 2
+    assert CODECS["fp8"].bytes_per_value == 1
+    assert CODECS["int8"].bytes_per_value == 1
+    assert CODECS["int8"].scaled and not CODECS["fp8"].scaled
+    assert not CODECS["fp16"].scaled
+
+
+def test_int8_doubles_pages_in_same_budget():
+    """The capacity claim: int8 fits ~2x the pages of fp16 in the SAME
+    layer-0 byte budget (scales cost a little, hence >= 1.8x not 2.0x)."""
+    budget = 32 * 1024
+    f16 = sm.derive_page_geometry(TINY, MAX_LEN, page_tokens=PT,
+                                  max_slots=32, layer0_bytes=budget)
+    i8 = sm.derive_page_geometry(TINY, MAX_LEN, page_tokens=PT,
+                                 max_slots=32, layer0_bytes=budget,
+                                 kv_quant="int8")
+    assert i8.layer0_codec == "int8" and f16.layer0_codec == "fp16"
+    assert (i8.n_pages - 1) >= 1.8 * (f16.n_pages - 1)
+
+
+@pytest.mark.parametrize("kv_quant", ["int8", "fp8"])
+def test_recurrent_family_rejects_quantized_codecs(kv_quant):
+    """SSM state is a running summary, not a token log — requantizing it
+    per page would compound error every step, so both the geometry
+    derivation and the pool constructor refuse loudly."""
+    with pytest.raises(ValueError, match="recurrent"):
+        sm.derive_page_geometry(TINY_HYBRID, MAX_LEN, page_tokens=PT,
+                                max_slots=3, layer0_bytes=64 * 1024,
+                                kv_quant=kv_quant)
+    # the pool constructor has its own guard: a hand-built geometry with a
+    # quantized codec must not slip past derive_page_geometry's check
+    geom = sm.derive_page_geometry(TINY_HYBRID, MAX_LEN, page_tokens=PT,
+                                   max_slots=3, layer0_bytes=64 * 1024)
+    geom = dataclasses.replace(geom, layer0_codec=kv_quant,
+                               layer1_codec=kv_quant)
+    model = build_model(TINY_HYBRID)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params,
+                 EngineConfig(max_len=MAX_LEN, sync_interval=4))
+    sch = sm.Scheduler(3, pages=geom)
+    with pytest.raises(ValueError, match="recurrent"):
+        eng.init_paged_pool(sch)
+
+
+def test_mla_serves_quantized():
+    """The MLA latent/rope leaves take the quantized path too (scaled int8
+    latent + rope pages) — a smoke serve must complete every request."""
+    model = build_model(TINY_MLA)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params,
+                 EngineConfig(max_len=MAX_LEN, sync_interval=4))
+    rng = np.random.RandomState(9)
+    reqs = [(rng.randint(2, 128, size=n).astype(np.int32), 8)
+            for n in (15, 21)]
+    outs, st = _serve_outputs(TINY_MLA, eng, 128 * 1024, "int8", reqs)
+    assert all(len(o) == 8 for o in outs)
+    assert st["layer0_codec"] == "int8"
+
+
+# ----------------------------------------- codec-tagged allocator property
+# (hypothesis-gated so the rest of this file still runs without it; CI
+# hard-installs hypothesis, mirroring test_paged_properties.py)
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:                                    # pragma: no cover
+    hypothesis = None
+
+
+@pytest.mark.parametrize("seed", [0, 11, 23])
+def test_codec_tags_change_only_via_tier_copies(seed):
+    """Deterministic slice of the property below — runs everywhere, with
+    or without hypothesis."""
+    _codec_tag_property(seed, n_reqs=8, n_slots=3)
+
+
+def _hyp_codec_property():
+    @hypothesis.given(st.integers(0, 2 ** 31 - 1), st.integers(4, 12),
+                      st.integers(2, 6))
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def prop(seed, n_reqs, n_slots):
+        _codec_tag_property(seed, n_reqs, n_slots)
+    return prop
+
+
+if hypothesis is not None:
+    test_codec_tags_property_hypothesis = _hyp_codec_property()
+
+
+def _codec_tag_property(seed, n_reqs, n_slots):
+    """Extend the allocator model with codec tags: every page a request
+    maps in layer 0 carries the layer-0 codec, every spilled page the
+    layer-1 codec, and a request's content NEVER changes tier codec
+    without a SpillAction/RestoreAction in that boundary's plan (the tier
+    copy that re-encodes it). Per-page scales are modeled as living
+    exactly as long as the page is mapped: the scale set == the mapped
+    layer-0 page set at every boundary, and empty at drain."""
+    rng = np.random.RandomState(seed)
+    max_len, chunk, pt = 32, 4, 8
+    geom = sm.derive_page_geometry(
+        TINY, max_len, page_tokens=pt, max_slots=n_slots,
+        layer0_bytes=int(rng.randint(4, 10)) * 1100,
+        layer1_bytes=int(rng.randint(6, 12)) * 1100,
+        kv_quant="int8")
+    assert geom.layer0_codec == "int8" == geom.layer1_codec
+    sch = sm.Scheduler(n_slots=n_slots, pages=geom)
+    for _ in range(n_reqs):
+        sch.submit(rng.randint(2, 128, size=rng.randint(1, 12)),
+                   int(rng.randint(1, 16)))
+    tier_of = {}                 # rid -> "l0" | "l1" (content's tier codec)
+    scales = set()               # mapped layer-0 pages holding a live scale
+    for _ in range(200):
+        if not sch.has_work():
+            break
+        plan = sch.plan_boundary(chunk_tokens=chunk, max_len=max_len)
+        spilled_rids = {a.req.rid for a in plan.spills}
+        restored_rids = {a.req.rid for a in plan.restores}
+        for slot, req in plan.admits:
+            tier_of[req.rid] = "l0"
+        # ---- codec-transition invariant: tier changes require a copy
+        for req in list(sch.queue):
+            if req.status == sm.PREEMPTED:
+                if tier_of.get(req.rid) == "l0":
+                    assert req.rid in spilled_rids, \
+                        "page content changed codec without a spill copy"
+                tier_of[req.rid] = "l1"
+        for slot, req in sch.active.items():
+            if tier_of.get(req.rid) == "l1":
+                assert req.rid in restored_rids, \
+                    "page content changed codec without a restore copy"
+            tier_of[req.rid] = "l0"
+        # ---- scale lifetime: exactly the mapped layer-0 pages
+        scales = {p for r in sch.active.values() for p in r.pages}
+        assert scales.isdisjoint(sch.page_pool._free)
+        spilled_pages = [p for r in sch.queue if r.status == sm.PREEMPTED
+                         for p in r.spill_pages]
+        assert len(spilled_pages) == len(set(spilled_pages))
+        # ---- simulate the decode chunk + drain boundary
+        for slot in sorted(sch.active):
+            req = sch.active[slot]
+            take = min(chunk, req.max_new_tokens - len(req.tokens),
+                       max_len - req.cache_len)
+            req.tokens.extend([7] * max(take, 0))
+            if (len(req.tokens) >= req.max_new_tokens
+                    or req.cache_len >= max_len):
+                sch.complete(slot)
+    assert not sch.has_work()
+    assert sch.page_pool.in_use == 0     # every scale's page was released
+    assert sch.spill_pool.in_use == 0

@@ -1,0 +1,280 @@
+"""Layer-2 host tier (ISSUE 10 satellite): park/resume must be invisible.
+
+DESIGN.md §Tiered KV compression & host parking. At the fp16 codec a
+parked session's blob holds the exact pool bytes it was resident with,
+and a parked-then-resumed stream emits tokens bit-identical to the same
+stream served uninterrupted — through preemption pressure, prefix
+sharing (the shared page stays resident for its other reader and is
+re-matched on resume, never re-prefilled), and disaggregated roles.
+Every serve runs under the device->host transfer guard; only the park
+gather itself reads the device.
+"""
+
+import dataclasses
+
+import jax
+import msgpack
+import numpy as np
+import pytest
+
+from repro.models import build_model, transformer
+from repro.models.config import ModelConfig
+from repro.serve import park as park_mod
+from repro.serve import scheduler as sm
+from repro.serve.engine import Engine, EngineConfig
+
+MAX_LEN = 64
+PT = 8
+
+TINY = ModelConfig(
+    name="tiny-park", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=128,
+)
+
+
+def _requests():
+    """Two prompts share a repetitive 16-token system prefix (so the
+    sharing axis has a page to keep resident across a park), plus two
+    independent prompts for queue pressure."""
+    rng = np.random.RandomState(7)
+    system = np.tile(rng.randint(2, 128, size=4).astype(np.int32), 4)
+    tails = [rng.randint(2, 128, size=n).astype(np.int32) for n in (7, 11)]
+    rand = rng.randint(2, 128, size=13).astype(np.int32)
+    long = rng.randint(2, 128, size=27).astype(np.int32)
+    return [(np.concatenate([system, tails[0]]), 14),
+            (np.concatenate([system, tails[1]]), 12),
+            (rand, 10),
+            (long, 12)]
+
+
+REQS = _requests()
+
+
+@pytest.fixture(scope="module")
+def engine():
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    return Engine(model, params,
+                  EngineConfig(max_len=MAX_LEN, sync_interval=4))
+
+
+def _geometry(n_pages=41):
+    pb = sm.kv_bytes_per_token(TINY) * PT
+    return sm.PageGeometry(page_tokens=PT, n_pages=n_pages,
+                           n_spill_pages=65,
+                           max_pages_per_slot=-(-MAX_LEN // PT),
+                           page_bytes=pb)
+
+
+def _run(eng, reqs, *, park_at=0, geom=None, **sch_kwargs):
+    """Serve ``reqs`` on a fresh scheduler; with ``park_at`` run the
+    run_stream two-phase flow: serve ``park_at`` decode steps, park every
+    decoding resident, requeue mid-prefill ones, resume the blobs into
+    the SAME scheduler, serve to completion."""
+    sch = sm.Scheduler(3, pages=geom or _geometry(), **sch_kwargs)
+    rids = [sch.submit(p, g).rid for p, g in reqs]
+    rid_map = {r: r for r in rids}          # submission rid -> final rid
+    n_parked = 0
+    if park_at:
+        with jax.transfer_guard_device_to_host("disallow"):
+            eng.serve(scheduler=sch, max_steps=park_at)
+        blobs = []
+        for slot in sorted(list(sch.active)):
+            req = sch.active[slot]
+            if req.status == sm.DECODING:
+                blobs.append((req.rid, eng.park_request(sch, req.rid)))
+            elif req.status == sm.PREFILLING:
+                sch.requeue(slot)
+        n_parked = len(blobs)
+        for old_rid, blob in blobs:
+            rid_map[old_rid] = eng.resume_parked(sch, blob).rid
+    with jax.transfer_guard_device_to_host("disallow"):
+        rep = eng.serve(scheduler=sch)
+    outs = [rep.outputs[rid_map[r]] for r in rids]
+    return outs, rep, n_parked
+
+
+def test_park_resume_outputs_bit_exact(engine):
+    """The headline guarantee: fp16 park/resume moves no bits — tokens
+    after the interruption are identical to the uninterrupted stream."""
+    outs_u, rep_u, _ = _run(engine, REQS)
+    outs_p, rep_p, n_parked = _run(engine, REQS, park_at=4)
+    assert n_parked > 0
+    st = rep_p.stats
+    assert st["parks"] == n_parked
+    assert st["park_resumes"] == n_parked
+    assert st["layer0_codec"] == "fp16"
+    assert outs_p == outs_u
+    assert all(len(o) > 0 for o in outs_p)
+    assert rep_u.stats["parks"] == 0
+
+
+def test_park_blob_holds_exact_pool_bytes(engine):
+    """An fp16 park is a byte copy: the blob's page/row leaves round-trip
+    to exactly the bytes that were resident when the session parked."""
+    sch = sm.Scheduler(3, pages=_geometry())
+    rids = [sch.submit(p, g).rid for p, g in REQS]
+    with jax.transfer_guard_device_to_host("disallow"):
+        engine.serve(scheduler=sch, max_steps=4)
+    slot, req = next((s, r) for s, r in sorted(sch.active.items())
+                     if r.status == sm.DECODING)
+    pool, cfg = engine._last_pool, TINY
+    pages = np.asarray(req.pages, np.int32)
+    expect = {}
+    for gname, gkey, is_paged in transformer.paged_cache_kinds(cfg):
+        for name, arr in pool.state["caches"][gname][gkey].items():
+            key = f"{gname}/{gkey}/{name}"
+            if is_paged:
+                expect["pages/" + key] = np.asarray(arr[:, pages])
+            else:
+                expect["rows/" + key] = np.asarray(arr[:, slot:slot + 1])
+    prompt, tokens = list(req.prompt), list(req.tokens)
+    blobs = [(req.rid, engine.park_request(sch, req.rid))]
+    blob = blobs[0][1]
+    for s in sorted(list(sch.active)):
+        other = sch.active[s]
+        if other.status == sm.DECODING:
+            blobs.append((other.rid, engine.park_request(sch, other.rid)))
+        elif other.status == sm.PREFILLING:
+            sch.requeue(s)
+
+    meta, arrays = park_mod.unpack_parked(blob)
+    assert meta["prompt"] == [int(t) for t in prompt]
+    assert meta["tokens"] == [int(t) for t in tokens] and meta["tokens"]
+    assert meta["n_pages"] == len(pages)
+    assert set(arrays) == set(expect)
+    for key, got in arrays.items():
+        want = expect[key]
+        assert got.dtype == want.dtype, key
+        assert got.shape == want.shape, key
+        assert got.tobytes() == want.tobytes(), key
+
+    # serializer round trip is itself lossless
+    blob2 = park_mod.pack_parked(meta, arrays)
+    meta2, arrays2 = park_mod.unpack_parked(blob2)
+    assert meta2 == meta
+    for key in arrays:
+        assert arrays2[key].tobytes() == arrays[key].tobytes()
+
+    # resume everything and drain: the stream still completes
+    rid_map = {r: r for r in rids}
+    for old_rid, b in blobs:
+        rid_map[old_rid] = engine.resume_parked(sch, b).rid
+    with jax.transfer_guard_device_to_host("disallow"):
+        rep = engine.serve(scheduler=sch)
+    assert all(len(rep.outputs[rid_map[r]]) > 0 for r in rids)
+
+
+def test_park_resume_through_preemption(engine):
+    """A pool tight enough to preempt still parks and resumes bit-exact:
+    the layer-1 spill tier and the layer-2 host tier compose."""
+    geom = _geometry(n_pages=8)
+    outs_u, rep_u, _ = _run(engine, REQS, geom=geom,
+                            chunk_prefill_tokens=6)
+    outs_p, rep_p, n_parked = _run(engine, REQS, park_at=14, geom=geom,
+                                   chunk_prefill_tokens=6)
+    assert n_parked > 0
+    assert rep_p.stats["preemptions"] > 0, "tight pool never preempted"
+    assert outs_p == outs_u
+
+
+def test_park_one_sharer_keeps_shared_pages_resident(engine):
+    """Parking one reader of a shared prefix must not yank the shared
+    pages: they drop one reference, stay resident for the other reader,
+    and the resumed session re-matches them through the prefix index."""
+    outs_u, rep_u, _ = _run(engine, REQS, prefix_share=True)
+
+    sch = sm.Scheduler(3, pages=_geometry(), prefix_share=True)
+    rids = [sch.submit(p, g).rid for p, g in REQS]
+    with jax.transfer_guard_device_to_host("disallow"):
+        engine.serve(scheduler=sch, max_steps=4)
+    sharer = next(r for r in sch.active.values()
+                  if r.status == sm.DECODING and r.n_shared > 0)
+    shared = list(sharer.pages[:sharer.n_shared])
+    assert shared
+    refs_before = [sch.page_pool._refs[p] for p in shared]
+    assert all(rc >= 2 for rc in refs_before)
+
+    # park the SHARING reader first: the shared pages drop one reference
+    # but stay resident for the reader that still maps them
+    blobs = [(sharer.rid, engine.park_request(sch, sharer.rid))]
+    for p, before in zip(shared, refs_before):
+        assert p not in sch.page_pool._free_set, "shared page was freed"
+        assert sch.page_pool._refs[p] == before - 1
+
+    # a serve() boundary rebuilds the pool, so the rest of the residents
+    # park too (the run_stream contract); the LAST reader's park finally
+    # frees the shared pages — nothing leaks to the free list early
+    for slot in sorted(list(sch.active)):
+        req = sch.active[slot]
+        if req.status == sm.DECODING:
+            blobs.append((req.rid, engine.park_request(sch, req.rid)))
+        elif req.status == sm.PREFILLING:
+            sch.requeue(slot)
+    assert sch.page_pool.in_use == 0
+    assert all(p in sch.page_pool._free_set for p in shared)
+
+    rid_map = {r: r for r in rids}
+    for old_rid, blob in blobs:
+        rid_map[old_rid] = engine.resume_parked(sch, blob).rid
+    with jax.transfer_guard_device_to_host("disallow"):
+        rep = engine.serve(scheduler=sch)
+    assert rep.stats["parks"] == len(blobs)
+    assert rep.stats["park_resumes"] == len(blobs)
+    assert rep.stats["prefix_hits"] > 0
+    assert [rep.outputs[rid_map[r]] for r in rids] == outs_u
+    # everything drained: every page reference was put back
+    assert sch.page_pool.in_use == 0
+    assert sch.page_pool.mapped == 0
+
+
+def test_park_resume_disaggregated(engine):
+    """Park/resume composes with disaggregated roles: the resumed session
+    re-enters as a decode-side resume and the stream stays bit-identical
+    to the uninterrupted disaggregated run."""
+    outs_u, rep_u, _ = _run(engine, REQS, chunk_prefill_tokens=6,
+                            disaggregate=True)
+    outs_p, rep_p, n_parked = _run(engine, REQS, park_at=14,
+                                   chunk_prefill_tokens=6,
+                                   disaggregate=True)
+    assert n_parked > 0
+    assert rep_p.stats["parks"] == n_parked
+    assert rep_p.stats["handovers"] > 0
+    assert outs_p == outs_u
+
+
+def test_park_rejects_mid_prefill_and_unknown_rid(engine):
+    """A mid-prefill resident has no emitted token to resume from — it
+    must requeue, not park; an inactive rid is a KeyError."""
+    sch = sm.Scheduler(3, pages=_geometry(), chunk_prefill_tokens=6)
+    rids = [sch.submit(p, g).rid for p, g in REQS]
+    with jax.transfer_guard_device_to_host("disallow"):
+        engine.serve(scheduler=sch, max_steps=1)
+    slot, req = next((s, r) for s, r in sorted(sch.active.items())
+                     if r.status == sm.PREFILLING)
+    with pytest.raises(ValueError, match="only decoding sessions park"):
+        engine.park_request(sch, req.rid)
+    with pytest.raises(KeyError, match="not active"):
+        engine.park_request(sch, 10 ** 9)
+    for s in sorted(list(sch.active)):
+        sch.requeue(s)                  # all mid-prefill: restart them
+    with jax.transfer_guard_device_to_host("disallow"):
+        rep = engine.serve(scheduler=sch)
+    assert all(len(rep.outputs[r]) > 0 for r in rids)
+
+
+def test_submit_parked_validates():
+    dense = sm.Scheduler(3)
+    with pytest.raises(ValueError, match="park/resume requires the paged"):
+        dense.submit_parked([1, 2, 3], 4, [5])
+    paged = sm.Scheduler(3, pages=_geometry())
+    with pytest.raises(ValueError, match="empty token list"):
+        paged.submit_parked([1, 2, 3], 4, [])
+
+
+def test_unpack_rejects_foreign_format():
+    bad = msgpack.packb({"format": 99, "meta": {}, "arrays": {}},
+                        use_bin_type=True)
+    with pytest.raises(ValueError, match="blob format 99"):
+        park_mod.unpack_parked(bad)

@@ -3,12 +3,14 @@
 at the repo root.
 
 Each file carries a ``metrics`` dict of plain numbers keyed
-``<run>.<metric>`` (plus top-level ratios). This tool diffs the two most
-recent files by ``bench_id`` — the current PR's against the previous
-PR's — and prints per-key deltas. It is informational by design: CI runs
-it on every push, and the FIRST PR to emit a bench file has nothing to
-diff against, so a missing counterpart exits 0 with a note instead of
-failing the build.
+``<run>.<metric>`` (plus top-level ratios). With no arguments the tool
+first prints the full bench TRAJECTORY — one row per ``bench_id``, its
+``meta.mode`` and the headline metrics (gated ratios first, then
+throughput) — then diffs the two most recent files key by key: the
+current PR's against the previous PR's. It is informational by design:
+CI runs it on every push, and the FIRST PR to emit a bench file has
+nothing to diff against, so a missing counterpart exits 0 with a note
+instead of failing the build.
 
     python tools/diff_bench.py [old.json new.json]
 """
@@ -44,6 +46,47 @@ def load_metrics(path: str) -> Dict[str, float]:
             if isinstance(v, (int, float)) and not isinstance(v, bool)}
 
 
+#: Headline pick order for the trajectory table: each bench's GATED
+#: metric is a ratio/scaling/speedup/agreement top-level key; throughput
+#: and latency keys fill the remaining columns.
+_HEADLINE_PATTERNS = (
+    re.compile(r"^(?!.*\.)(.*ratio.*|.*scaling.*|.*speedup.*|"
+               r".*agreement.*|.*acceptance.*|.*win.*)$"),
+    re.compile(r"\.(decode_)?tok_per_s$"),
+    re.compile(r"\.(ttft_emit_p95|inter_token_p99_ms|e2e_steps_p95)$"),
+)
+
+
+def headline_metrics(metrics: Dict[str, float],
+                     limit: int = 3) -> List[Tuple[str, float]]:
+    """Up to ``limit`` headline (key, value) pairs, gated ratios first."""
+    picked: List[Tuple[str, float]] = []
+    for pat in _HEADLINE_PATTERNS:
+        for key in sorted(metrics):
+            if len(picked) >= limit:
+                return picked
+            if pat.search(key) and all(k != key for k, _ in picked):
+                picked.append((key, metrics[key]))
+    return picked
+
+
+def trajectory(found: List[Tuple[int, str]]) -> List[str]:
+    """One line per bench file: id, meta mode, headline metrics."""
+    lines = [f"bench trajectory ({len(found)} files):"]
+    for bench_id, path in found:
+        try:
+            with open(path, encoding="utf-8") as f:
+                payload = json.load(f)
+        except (OSError, ValueError) as exc:
+            lines.append(f"  BENCH_{bench_id:<3d} <unreadable: {exc}>")
+            continue
+        mode = payload.get("meta", {}).get("mode", "?")
+        picks = headline_metrics(load_metrics(path))
+        shown = "  ".join(f"{k}={v:.4g}" for k, v in picks) or "(no metrics)"
+        lines.append(f"  BENCH_{bench_id:<3d} {mode:<16s} {shown}")
+    return lines
+
+
 def diff(old: Dict[str, float], new: Dict[str, float]) -> List[str]:
     lines = []
     for key in sorted(set(old) | set(new)):
@@ -75,6 +118,8 @@ def main(argv: Optional[List[str]] = None) -> int:
             print("diff_bench: no BENCH_*.json at the repo root — "
                   "nothing to diff")
             return 0
+        for line in trajectory(found):
+            print(line)
         if len(found) == 1:
             bench_id, path = found[0]
             print(f"diff_bench: only BENCH_{bench_id}.json exists — "
